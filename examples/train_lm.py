@@ -1,0 +1,56 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the full production feature set -- QAT (paper mixed precision), posit8
+gradient compression with error feedback, 8-bit Adam, microbatch
+accumulation, and async checkpoint/restart.
+
+~100M params: qwen2-0.5b geometry at 8 layers / d=512 (vocab dominates).
+CPU pace is ~20-30 s/step (the 152k-vocab readout dominates), so 200 steps
+is a multi-hour CPU run; pass --steps 30 --seq 64 for a smoke run.  The
+loop checkpoints every 50 steps and resumes exactly, so long runs survive
+interruption (validated to step 50+ in-session; loss decrease + resume are
+also asserted at smaller scale by tests/test_train.py).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.data import TokenStream
+from repro.train.loop import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("qwen2-0.5b"),
+        name="qwen2-100m", n_layers=8, d_model=512, n_heads=8, n_kv_heads=2,
+        head_dim=64, d_ff=2048, vocab=151936, remat="none", seq_chunk=128)
+    n_params = cfg.param_count()
+    print(f"model: {n_params/1e6:.1f}M params")
+
+    run = RunConfig(
+        arch=cfg.name, steps=args.steps, lr=1e-3, warmup_steps=20,
+        microbatch=2, qat=True, precision_policy="mixed",
+        grad_compression="posit8", opt_state_dtype="posit8",
+        checkpoint_every=50, checkpoint_dir=args.ckpt)
+    data = TokenStream(vocab=cfg.vocab, seq_len=args.seq,
+                       global_batch=args.batch)
+    state, hist = train_loop(cfg, run, data, log_every=10)
+    assert hist["loss"][-1] < hist["loss"][0], "training must reduce loss"
+    print(f"done: loss {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f} "
+          f"at step {int(state.step)}")
+
+
+if __name__ == "__main__":
+    main()

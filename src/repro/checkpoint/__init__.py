@@ -1,0 +1,2 @@
+from .ckpt import save_checkpoint, restore_checkpoint, latest_step, \
+    CheckpointManager  # noqa: F401

@@ -1,0 +1,192 @@
+"""Sharded, atomic, fault-tolerant checkpointing (no orbax: built here).
+
+Layout:
+  <dir>/step_<N>/manifest.json   -- paths, shapes, dtypes, data-iterator
+                                    state, mesh shape at save time
+  <dir>/step_<N>/<leaf-path>.npy -- one file per pytree leaf
+
+Guarantees exercised by tests:
+  * atomic commit: writes go to ``step_N.tmp`` then os.rename -- a crash
+    mid-save never corrupts the latest checkpoint;
+  * exact resume: data iterator state rides in the manifest;
+  * elastic restore: leaves are device_put against the *current* mesh's
+    shardings, which may differ from the mesh at save time (N->M chips);
+  * corruption detection: per-leaf byte size is recorded and verified;
+  * retention: keep the newest K checkpoints.
+
+Async: ``CheckpointManager(async_save=True)`` snapshots to host numpy and
+writes on a background thread -- the train loop never blocks on disk.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..core.policy import flatten_with_paths
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "CheckpointManager"]
+
+
+def _leaf_file(path: str) -> str:
+    return path.replace("/", "__") + ".npy"
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict] = None,
+                    keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}, "extra": extra or {}}
+    for path, leaf in flatten_with_paths(tree):
+        arr = np.asarray(leaf)
+        fname = _leaf_file(path)
+        dtype_str = str(arr.dtype)
+        if dtype_str == "bfloat16":  # numpy can't round-trip ml_dtypes
+            np.save(os.path.join(tmp, fname), arr.view(np.uint16))
+        else:
+            np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][path] = {
+            "file": fname, "shape": list(arr.shape), "dtype": dtype_str,
+            "nbytes": int(arr.nbytes),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)          # atomic commit
+    _apply_retention(directory, keep)
+    return final
+
+
+def _apply_retention(directory: str, keep: int) -> None:
+    steps = sorted(_list_steps(directory))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def _list_steps(directory: str):
+    out = []
+    if not os.path.isdir(directory):
+        return out
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                out.append(int(name[5:]))
+            except ValueError:
+                pass
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = _list_steps(directory)
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template, step: Optional[int] = None,
+                       shardings=None):
+    """Restore into the structure of ``template``.
+
+    ``shardings``: optional matching pytree of NamedShardings -- leaves are
+    device_put against them (elastic restore onto a different mesh)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    base = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(base, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_t = flatten_with_paths(template)
+    shard_map = dict(flatten_with_paths(shardings)) if shardings is not None \
+        else {}
+    restored = {}
+    for path, tleaf in flat_t:
+        meta = manifest["leaves"].get(path)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {path}")
+        fpath = os.path.join(base, meta["file"])
+        arr = np.load(fpath)
+        if meta["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        if int(arr.nbytes) != meta["nbytes"]:
+            raise IOError(f"corrupted checkpoint leaf {path}: "
+                          f"{arr.nbytes} != {meta['nbytes']}")
+        if shard_map.get(path) is not None:
+            restored[path] = jax.device_put(arr, shard_map[path])
+        else:
+            restored[path] = jax.numpy.asarray(arr)
+
+    import dataclasses as _dc
+
+    def rebuild(node, path=""):
+        if isinstance(node, dict):
+            return {k: rebuild(v, f"{path}/{k}" if path else k)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rebuild(v, f"{path}/{i}" if path else str(i))
+                              for i, v in enumerate(node))
+        if node is None:
+            return None
+        if _dc.is_dataclass(node) and not isinstance(node, type):
+            return type(node)(**{
+                f.name: rebuild(getattr(node, f.name),
+                                f"{path}/{f.name}" if path else f.name)
+                for f in _dc.fields(node)})
+        return restored[path]
+
+    return rebuild(template), manifest["extra"], step
+
+
+class CheckpointManager:
+    """Retention + optional async save + resume helper."""
+
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = False):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> None:
+        self.wait()
+        if self._error:
+            raise self._error
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot now
+        if not self.async_save:
+            save_checkpoint(self.directory, step, host_tree, extra, self.keep)
+            return
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra,
+                                self.keep)
+            except BaseException as e:  # surfaced on next save/wait
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, template, shardings=None):
+        return restore_checkpoint(self.directory, template,
+                                  shardings=shardings)
+
+    def latest_step(self):
+        return latest_step(self.directory)

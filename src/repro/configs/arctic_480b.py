@@ -1,0 +1,12 @@
+"""arctic-480b [moe] -- 128 experts top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=4864, vocab=32000, head_dim=128,
+    ffn_kind="swiglu",
+    n_experts=128, experts_per_tok=2, moe_d_ff=4864, dense_residual=True,
+    source="hf:Snowflake/snowflake-arctic-base; hf",
+)

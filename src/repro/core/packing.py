@@ -1,0 +1,68 @@
+"""SIMD word packing -- the XR-NPE lane layout, widened to 32-bit words.
+
+The paper packs 4x4-bit / 2x8-bit / 1x16-bit operands per 16-bit SIMD lane.
+On TPU the natural storage word is uint32, so we pack 8x4b / 4x8b / 2x16b
+codes per word, little-endian within the word.  Packed tensors are what hit
+HBM: this is where the memory-bandwidth reduction (the paper's headline
+energy win -- off-chip movement ~60% of system energy) physically comes
+from in the JAX port.
+
+Packing is along the *last* axis; the axis is padded to a whole number of
+words with zeros (zero is a valid code for every supported format and
+decodes to 0.0, so padding is harmless for GEMM tails).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import jax
+
+from .formats import FormatSpec
+
+__all__ = ["pack", "unpack", "packed_last_dim", "packed_nbytes", "lanes_per_word"]
+
+WORD_BITS = 32
+
+
+def lanes_per_word(bits: int) -> int:
+    if WORD_BITS % bits:
+        raise ValueError(f"{bits}-bit codes do not tile a {WORD_BITS}-bit word")
+    return WORD_BITS // bits
+
+
+def packed_last_dim(k: int, bits: int) -> int:
+    per = lanes_per_word(bits)
+    return (k + per - 1) // per
+
+
+def pack(codes: jax.Array, bits: int) -> jax.Array:
+    """int codes [..., K] -> uint32 words [..., ceil(K/per)]."""
+    per = lanes_per_word(bits)
+    k = codes.shape[-1]
+    kp = packed_last_dim(k, bits) * per
+    if kp != k:
+        pad = [(0, 0)] * (codes.ndim - 1) + [(0, kp - k)]
+        codes = jnp.pad(codes, pad)
+    c = codes.astype(jnp.uint32) & jnp.uint32((1 << bits) - 1)
+    c = c.reshape(codes.shape[:-1] + (kp // per, per))
+    shifts = jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(bits)
+    return jnp.bitwise_or.reduce(c << shifts, axis=-1)
+
+
+def unpack(words: jax.Array, bits: int, k: int) -> jax.Array:
+    """uint32 words [..., W] -> int32 codes [..., k]."""
+    per = lanes_per_word(bits)
+    shifts = jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(bits)
+    c = (words[..., None] >> shifts) & jnp.uint32((1 << bits) - 1)
+    c = c.reshape(words.shape[:-1] + (words.shape[-1] * per,))
+    return c[..., :k].astype(jnp.int32)
+
+
+def packed_nbytes(shape, bits: int) -> int:
+    """Bytes of the packed representation of a tensor of ``shape``."""
+    if not shape:
+        return 4
+    k = shape[-1]
+    rest = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+    return rest * packed_last_dim(k, bits) * 4

@@ -1,0 +1,138 @@
+"""Per-layer precision policy -- the software form of the co-processor's
+configuration registers.
+
+The XR-NPE host writes, per layer, a ``prec_sel`` plus layer geometry into
+the accelerator's configuration/status registers before launching the
+morphable array.  Here the same information is a ``PrecisionPolicy``: an
+ordered list of (glob pattern over parameter paths -> format name) with a
+default, resolved once per parameter tree and consumed by (a) QAT
+fake-quant, (b) the packed serving plane, (c) the dry-run memory model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from . import formats as fmt
+from .formats import FormatSpec
+
+__all__ = ["PrecisionPolicy", "param_paths", "flatten_with_paths"]
+
+
+def flatten_with_paths(tree) -> List[Tuple[str, jax.Array]]:
+    """Flatten a pytree to (slash-path, leaf); dict keys / sequence indices
+    become path segments.  PackedTensors flatten into words/scales/mask
+    sub-leaves (so sharding + checkpoint rules see real arrays)."""
+    leaves = []
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(node[k], f"{path}/{k}" if path else str(k))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(v, f"{path}/{i}" if path else str(i))
+        elif node is None:
+            return
+        elif hasattr(node, "words") and hasattr(node, "scales"):
+            rec({"words": node.words, "scales": node.scales,
+                 "mask": node.mask}, path)
+        elif dataclasses.is_dataclass(node) and not isinstance(node, type):
+            rec({f.name: getattr(node, f.name)
+                 for f in dataclasses.fields(node)}, path)
+        else:
+            leaves.append((path, node))
+
+    rec(tree, "")
+    return leaves
+
+
+def param_paths(tree) -> List[str]:
+    return [p for p, _ in flatten_with_paths(tree)]
+
+
+@dataclasses.dataclass
+class PrecisionPolicy:
+    """Ordered pattern rules; first match wins; ``default`` otherwise.
+
+    ``keep_fp32`` patterns (norms, biases, embeddings by default) always
+    stay in fp32 -- mirroring the paper's "minimal layers in higher
+    precision" for critical layers.
+    """
+
+    rules: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    default: str = "fp32"
+    keep_fp32: Tuple[str, ...] = (
+        "*norm*", "*bias*", "*scale*", "*alpha*", "*embed*", "*rope*",
+        "*state*", "*decay*", "*router*", "*d_skip*", "*conv_w*", "*a_log*",
+        "*lora*", "*mix_*", "*bonus*", "*dt_proj*",
+    )
+
+    def format_for(self, path: str) -> FormatSpec:
+        for pat in self.keep_fp32:
+            if fnmatch.fnmatch(path, pat):
+                return fmt.FP32
+        for pat, name in self.rules:
+            if fnmatch.fnmatch(path, pat):
+                return fmt.format_by_name(name)
+        return fmt.format_by_name(self.default)
+
+    def resolve(self, params) -> Dict[str, FormatSpec]:
+        return {p: self.format_for(p) for p, _ in flatten_with_paths(params)}
+
+    # -- memory model ------------------------------------------------------
+    def model_bytes(self, params) -> int:
+        """Packed model size under this policy (the paper's 13.5->2.42 MB)."""
+        total = 0
+        for path, leaf in flatten_with_paths(params):
+            spec = self.format_for(path)
+            n = int(np.prod(leaf.shape)) if leaf.shape else 1
+            if spec.kind == "native":
+                total += n * jax.dtypes.canonicalize_dtype(spec.dtype).itemsize
+            else:
+                total += (n * spec.bits + 7) // 8 + 4  # +4: per-tensor scale
+        return total
+
+    def average_bits(self, params) -> float:
+        bits = 0
+        n_tot = 0
+        for path, leaf in flatten_with_paths(params):
+            spec = self.format_for(path)
+            n = int(np.prod(leaf.shape)) if leaf.shape else 1
+            b = spec.bits if spec.kind != "native" else \
+                jax.dtypes.canonicalize_dtype(spec.dtype).itemsize * 8
+            bits += n * b
+            n_tot += n
+        return bits / max(n_tot, 1)
+
+    # -- serialization -----------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "rules": self.rules, "default": self.default,
+            "keep_fp32": list(self.keep_fp32),
+        })
+
+    @classmethod
+    def from_json(cls, s: str) -> "PrecisionPolicy":
+        d = json.loads(s)
+        return cls(rules=[tuple(r) for r in d["rules"]], default=d["default"],
+                   keep_fp32=tuple(d["keep_fp32"]))
+
+    # -- convenience constructors ------------------------------------------
+    @classmethod
+    def uniform(cls, name: str) -> "PrecisionPolicy":
+        return cls(rules=[], default=name)
+
+    @classmethod
+    def paper_mixed(cls) -> "PrecisionPolicy":
+        """The paper's headline MxP scheme: Posit-8 for sensitive projection
+        layers, HFP4 elsewhere (first/last layers protected by keep_fp32)."""
+        return cls(rules=[("*attn*", "posit8_0"), ("*out_proj*", "posit8_0"),
+                          ("*head*", "posit16_1")],
+                   default="fp4")

@@ -1,0 +1,43 @@
+"""QAT tree transform: fake-quantize parameter subtrees per policy.
+
+Called per-layer *inside* the scan-over-layers body so only one layer's
+quantized copy is ever live (at trillion-param scale a whole-tree
+quantized copy would blow HBM peak; see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from . import quant
+from .policy import PrecisionPolicy
+
+__all__ = ["quantize_tree"]
+
+
+def quantize_tree(tree, policy: Optional[PrecisionPolicy], prefix: str = ""):
+    """Fake-quantize every matrix leaf (ndim >= 2) per ``policy``.
+
+    ``prefix`` lets per-layer subtrees resolve against full-tree patterns
+    (e.g. prefix='layers' inside the scan body).
+    """
+    if policy is None:
+        return tree
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            return {k: rec(v, f"{path}/{k}" if path else k)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v, f"{path}/{i}" if path else str(i))
+                              for i, v in enumerate(node))
+        if node is None:
+            return None
+        if getattr(node, "ndim", 0) < 2:
+            return node
+        spec = policy.format_for(path)
+        if spec.kind == "native":
+            return node
+        return quant.fake_quant(spec, node)
+
+    return rec(tree, prefix)

@@ -1,0 +1,116 @@
+"""Layer-adaptive precision assignment (paper eq. 1-2).
+
+The paper scores each layer with a first-order-Taylor sensitivity
+
+    s_{l,sc,k} = ( ||Q^MxP(w_l) - w_l|| - ||Q^MxP'_{sc,k}(w_l) - w_l|| )
+                 * ||grad L_{w_l}|| / n_l                      (eq. 1)
+    s_l        = max(s_{l,sc,8}, s_{l,sc,4})                   (eq. 2)
+
+i.e. how much the quantization error *changes* when layer l is dropped from
+the base mixed precision to an sc-bit candidate, weighted by the loss
+gradient magnitude (the Taylor term) and normalized per element.  Layers
+with low s_l tolerate aggressive low-bit formats; the top-sensitive layers
+are kept in higher precision.  The evaluation is done offline, "before
+inference itself", exactly as here: one calibration gradient suffices.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import formats as fmt
+from . import quant
+from .formats import FormatSpec
+from .policy import PrecisionPolicy, flatten_with_paths
+
+__all__ = ["layer_sensitivity", "assign_layer_adaptive", "sensitivity_report"]
+
+
+def _quant_err(spec: FormatSpec, w: jax.Array) -> jax.Array:
+    q = quant.fake_quant(spec, w)
+    return jnp.linalg.norm((q - w).ravel())
+
+
+def layer_sensitivity(
+    params,
+    grads,
+    base: FormatSpec = fmt.POSIT16,
+    candidates: Sequence[FormatSpec] = (fmt.POSIT8, fmt.FP4),
+) -> Dict[str, float]:
+    """s_l per parameter path (eq. 1-2). ``grads`` is one calibration
+    gradient tree (same structure as params)."""
+    p_leaves = flatten_with_paths(params)
+    g_leaves = dict(flatten_with_paths(grads))
+    out: Dict[str, float] = {}
+    for path, w in p_leaves:
+        if w.ndim < 2:  # norms/biases: never candidates, skip scoring
+            continue
+        g = g_leaves.get(path)
+        if g is None:
+            continue
+        n_l = float(np.prod(w.shape))
+        gnorm = jnp.linalg.norm(g.ravel())
+        base_err = _quant_err(base, w)
+        scores = []
+        for cand in candidates:  # eq. 2: max over the sc in {8, 4} arms
+            cand_err = _quant_err(cand, w)
+            scores.append(jnp.abs(base_err - cand_err) * gnorm / n_l)
+        out[path] = float(jnp.max(jnp.stack(scores)))
+    return out
+
+
+def assign_layer_adaptive(
+    params,
+    grads,
+    target_avg_bits: float = 6.0,
+    low: FormatSpec = fmt.FP4,
+    mid: FormatSpec = fmt.POSIT8,
+    high: FormatSpec = fmt.POSIT16,
+    keep_fp32: Optional[Tuple[str, ...]] = None,
+) -> PrecisionPolicy:
+    """Greedy budgeted assignment: rank layers by s_l ascending; the least
+    sensitive get ``low``, then ``mid``, keeping the most sensitive few in
+    ``high``, until the weighted average hits ``target_avg_bits``.
+
+    This reproduces the paper's hybrid layer-adaptive scheme (HFP4 +
+    Posit-8 + Posit-16 mixture, e.g. the 2.42 MB UL-VIO model).
+    """
+    sens = layer_sensitivity(params, grads, base=high, candidates=(mid, low))
+    sizes = {p: int(np.prod(w.shape))
+             for p, w in flatten_with_paths(params) if p in sens}
+    order = sorted(sens, key=lambda p: sens[p])  # least sensitive first
+    total = sum(sizes.values())
+    assign: Dict[str, str] = {p: high.name for p in order}
+
+    def avg_bits() -> float:
+        spec_bits = {low.name: low.bits, mid.name: mid.bits,
+                     high.name: high.bits}
+        return sum(sizes[p] * spec_bits[assign[p]] for p in order) / max(total, 1)
+
+    # two passes: first drop to mid, then the least-sensitive of those to low
+    for p in order:
+        if avg_bits() <= target_avg_bits:
+            break
+        assign[p] = mid.name
+    for p in order:
+        if avg_bits() <= target_avg_bits:
+            break
+        assign[p] = low.name
+
+    rules = [(p, name) for p, name in assign.items()]
+    pol = PrecisionPolicy(rules=rules, default=high.name)
+    if keep_fp32 is not None:
+        pol.keep_fp32 = keep_fp32
+    return pol
+
+
+def sensitivity_report(params, grads, **kw) -> str:
+    sens = layer_sensitivity(params, grads, **kw)
+    lines = ["layer-sensitivity (eq.1-2), ascending:"]
+    for p in sorted(sens, key=lambda p: sens[p]):
+        lines.append(f"  {sens[p]:.3e}  {p}")
+    return "\n".join(lines)

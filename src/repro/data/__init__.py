@@ -1,0 +1,2 @@
+from .tokens import TokenStream  # noqa: F401
+from .vio_data import VIOStream  # noqa: F401

@@ -1,0 +1,83 @@
+"""Deterministic, shardable synthetic LM data pipeline.
+
+Every batch is a pure function of (seed, step, shard), so:
+  * resume after preemption is exact (the iterator state is one integer,
+    saved in the checkpoint manifest);
+  * each host generates only its shard (no cross-host data motion);
+  * straggler mitigation: a lagging host can *re-balance* -- the
+    ``rebalance(num_shards)`` view re-partitions the same global stream
+    without changing the data any step sees.
+
+The stream is a Markov-ish mixture so models actually learn (loss drops):
+token t+1 is a noisy affine function of token t within a banded vocab.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TokenStream"]
+
+
+@dataclasses.dataclass
+class TokenStream:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    step: int = 0
+    shard: int = 0
+    num_shards: int = 1
+    frontend: str = "none"
+    d_model: int = 0
+    n_patches: int = 0
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.num_shards == 0
+        return self.global_batch // self.num_shards
+
+    def rebalance(self, num_shards: int, shard: int) -> "TokenStream":
+        return dataclasses.replace(self, num_shards=num_shards, shard=shard)
+
+    def state_dict(self) -> Dict:
+        return {"seed": self.seed, "step": self.step}
+
+    def load_state_dict(self, d: Dict) -> None:
+        self.seed, self.step = int(d["seed"]), int(d["step"])
+
+    def _batch_np(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard]))
+        b, s, v = self.local_batch, self.seq_len, self.vocab
+        band = max(v // 64, 2)
+        x = np.empty((b, s + 1), np.int32)
+        x[:, 0] = rng.integers(0, v, b)
+        # per-sequence drift rate: the model learns p(next | cur) quickly
+        rate = rng.integers(1, band, (b, 1))
+        noise = rng.integers(0, 3, (b, s)) - 1
+        for t in range(s):
+            x[:, t + 1] = (x[:, t] + rate[:, 0] + noise[:, t]) % v
+        out = {"tokens": x[:, :-1], "labels": x[:, 1:]}
+        if self.frontend == "audio":
+            emb = rng.standard_normal((b, s, self.d_model)).astype(np.float32)
+            out = {"frame_embeds": emb * 0.02, "labels": out["labels"]}
+        elif self.frontend == "vision":
+            pe = rng.standard_normal(
+                (b, self.n_patches, self.d_model)).astype(np.float32)
+            out["patch_embeds"] = pe * 0.02
+        return out
+
+    def next_batch(self) -> Dict[str, jnp.ndarray]:
+        out = {k: jnp.asarray(v) for k, v in self._batch_np(self.step).items()}
+        self.step += 1
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
+        while True:
+            yield self.next_batch()

@@ -1,0 +1,52 @@
+"""Standalone SIMD decode (dequantization) kernel.
+
+Streams packed uint32 words from HBM and writes decoded floats -- the
+input-processing stage of the NPE in isolation.  Used when a consumer
+needs materialized weights (e.g. one-time decode at model load, or
+debugging), and as the unit-bench for decode throughput.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core import formats as fmt
+from ..core.formats import FormatSpec
+from ..core.packing import lanes_per_word
+
+__all__ = ["dequant_kernel", "dequant_pallas"]
+
+
+def dequant_kernel(w_ref, s_ref, o_ref, *, spec: FormatSpec):
+    per = lanes_per_word(spec.bits)
+    words = w_ref[...]
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(spec.bits))
+    codes = (words[:, :, None] >> shifts) & jnp.uint32((1 << spec.bits) - 1)
+    codes = codes.reshape(words.shape[0], words.shape[1] * per)
+    o_ref[...] = fmt.decode_bits(spec, codes, jnp.float32) * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "bk", "bn", "interpret"))
+def dequant_pallas(w_words: jax.Array, scales: jax.Array, *,
+                   spec: FormatSpec, bk: int = 256, bn: int = 512,
+                   interpret: bool = False) -> jax.Array:
+    """(K, N/per) uint32 + (1, N) scales -> (K, N) f32."""
+    per = lanes_per_word(spec.bits)
+    k, nw = w_words.shape
+    n = nw * per
+    assert k % bk == 0 and n % bn == 0
+    return pl.pallas_call(
+        functools.partial(dequant_kernel, spec=spec),
+        grid=(k // bk, n // bn),
+        in_specs=[
+            pl.BlockSpec((bk, bn // per), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.float32),
+        interpret=interpret,
+    )(w_words, scales)

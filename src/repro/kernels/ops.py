@@ -1,0 +1,205 @@
+"""Public ops over the XR-NPE kernels: padding, packing, dispatch.
+
+``prec_sel`` from the paper is the ``spec`` argument here: each format
+compiles its own kernel instance (the datapath is statically morphed), and
+this module is the mode multiplexer.  On CPU (this container) kernels run
+in ``interpret=True``; on TPU they compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import formats as fmt
+from ..core import quant
+from ..core.formats import FormatSpec
+from ..core.packing import lanes_per_word, pack, packed_last_dim, unpack
+from . import ref
+from .codec import dequant_pallas
+from .quire_dot import QUIRE_FRAC_BITS, quire_dot_pallas
+from .rmmec_matmul import default_blocks, rmmec_matmul_pallas
+
+__all__ = [
+    "PackedTensor", "pack_tensor", "unpack_tensor", "packed_matmul",
+    "quire_dot", "dequant", "should_interpret", "to_dense",
+]
+
+
+def should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedTensor:
+    """A weight matrix stored as packed low-bit codes + dequant scales.
+
+    words  : (K, ceil(N/per)) uint32 -- the HBM-resident representation
+    scales : (1, N) f32 per-output-channel scale
+    mask   : (ceil(K/gk), ceil(N/gn)) int32 nonzero-block map (power gating)
+    shape  : logical (K, N)
+    spec   : the format (static / aux data)
+    """
+
+    words: jax.Array
+    scales: jax.Array
+    mask: jax.Array
+    shape: Tuple[int, int]
+    spec: FormatSpec
+
+    def tree_flatten(self):
+        return (self.words, self.scales, self.mask), (self.shape, self.spec)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        words, scales, mask = children
+        return cls(words, scales, mask, aux[0], aux[1])
+
+    @property
+    def nbytes_packed(self) -> int:
+        return self.words.size * 4 + self.scales.size * 4 + self.mask.size * 4
+
+
+def pack_tensor(spec: FormatSpec, w: jax.Array,
+                scale_method: str = "auto",
+                per_channel: bool = True,
+                blocks: Optional[Tuple[int, int, int]] = None) -> PackedTensor:
+    """Quantize + pack a weight matrix for the serving plane.
+
+    2-D (K, N): full treatment -- kernel-ready block padding + gating mask.
+    N-D (L..., K, N) stacked scan/expert weights: packed per 2-D slice
+    along the last axis (words (L..., K, N/per), scales (L..., 1, N));
+    consumed by the portable ref path / dequant, leading dims sliceable by
+    lax.scan.  ``shape`` records the logical (K, N) of one slice.
+    """
+    if w.ndim == 2:
+        k, n = w.shape
+        bm, bk, bn = blocks or default_blocks(spec)
+        axis = 0 if per_channel else None
+        scales = quant.format_scale(spec, w, scale_method, axis=axis)
+        scales = jnp.broadcast_to(jnp.asarray(scales).reshape(1, -1), (1, n))
+        codes = fmt.encode_bits(spec, w / scales)
+        kp, np_ = _round_up(k, bk), _round_up(n, bn)
+        codes = jnp.pad(codes, ((0, kp - k), (0, np_ - n)))
+        words = pack(codes, spec.bits)
+        scales_p = jnp.pad(scales, ((0, 0), (0, np_ - n)),
+                           constant_values=1.0)
+        # nonzero-block map: gate blocks whose codes are all zero
+        # (max, not sum: a sum of 16-bit codes overflows int32 per block)
+        blk = codes.reshape(kp // bk, bk, np_ // bn, bn)
+        mask = (jnp.max(jnp.abs(blk), axis=(1, 3)) > 0).astype(jnp.int32)
+        return PackedTensor(words, scales_p, mask, (k, n), spec)
+    assert w.ndim >= 3
+    k, n = w.shape[-2:]
+    lead = w.shape[:-2]
+    scales = quant.format_scale(spec, w, scale_method, axis=-2) \
+        if per_channel else quant.format_scale(spec, w, scale_method)
+    scales = jnp.broadcast_to(jnp.asarray(scales), lead + (1, n))
+    codes = fmt.encode_bits(spec, w / scales)
+    per = lanes_per_word(spec.bits)
+    npad = _round_up(n, per)
+    if npad != n:
+        padw = [(0, 0)] * (w.ndim - 1) + [(0, npad - n)]
+        codes = jnp.pad(codes, padw)
+    words = pack(codes, spec.bits)
+    mask = jnp.ones(lead + (1, 1), jnp.int32)
+    return PackedTensor(words, scales, mask, (k, n), spec)
+
+
+def to_dense(t: PackedTensor, dtype=jnp.float32) -> jax.Array:
+    """Decode a PackedTensor of any rank back to dense float."""
+    n_padded = t.words.shape[-1] * lanes_per_word(t.spec.bits)
+    codes = unpack(t.words, t.spec.bits, n_padded)
+    w = fmt.decode_bits(t.spec, codes, dtype=dtype)
+    w = w[..., : t.scales.shape[-1]] * t.scales.astype(dtype)
+    return w[..., : t.shape[0], : t.shape[1]]
+
+
+def unpack_tensor(t: PackedTensor) -> jax.Array:
+    kp = t.words.shape[0]
+    npad = t.scales.shape[1]
+    codes = unpack(t.words, t.spec.bits, npad)
+    w = fmt.decode(t.spec, codes) * t.scales
+    return w[: t.shape[0], : t.shape[1]]
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret", "use_ref"))
+def packed_matmul(x: jax.Array, t: PackedTensor,
+                  blocks: Optional[Tuple[int, int, int]] = None,
+                  interpret: Optional[bool] = None,
+                  use_ref: bool = False) -> jax.Array:
+    """x @ W for packed W; x: (..., K) -> (..., N) f32.
+
+    ``use_ref`` selects the pure-jnp oracle path (used by the serving plane
+    when lowering for the XLA-only dry-run, where a Pallas call would not
+    be portable to the CPU compile target).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    k, n = t.shape
+    lead = x.shape[:-1]
+    m = int(np.prod(lead)) if lead else 1
+    x2 = x.reshape(m, x.shape[-1])  # keep caller dtype: bf16 x => bf16 MXU path
+    if use_ref:
+        out = ref.rmmec_matmul_ref(x2, t.words, t.scales, t.spec,
+                                   t.scales.shape[1])[:, :n]
+        return out.reshape(*lead, n)
+    bm, bk, bn = blocks or default_blocks(t.spec)
+    mp = _round_up(m, bm)
+    x2 = jnp.pad(x2, ((0, mp - m), (0, t.words.shape[0] - k)))
+    out = rmmec_matmul_pallas(x2, t.words, t.scales, t.mask, spec=t.spec,
+                              bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def quire_dot(a_codes: jax.Array, b_codes: jax.Array,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """Bit-exact Posit(8,0) row-wise dot: (B, K) codes x2 -> (B,) f32."""
+    if interpret is None:
+        interpret = should_interpret()
+    b, k = a_codes.shape
+    bb, bk = 8, 512
+    bp, kp = _round_up(b, bb), _round_up(k, bk)
+    ap = jnp.pad(a_codes, ((0, bp - b), (0, kp - k)))
+    bpc = jnp.pad(b_codes, ((0, bp - b), (0, kp - k)))
+    hi, lo = quire_dot_pallas(ap.astype(jnp.int32), bpc.astype(jnp.int32),
+                              bb=bb, bk=bk, interpret=interpret)
+    return quire_combine(hi, lo)[:b]
+
+
+def quire_combine(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    """Fold the two int32 quire limbs into f32 (the single final rounding)."""
+    return (hi[:, 0].astype(jnp.float32)
+            + lo[:, 0].astype(jnp.float32) * (2.0 ** -QUIRE_FRAC_BITS))
+
+
+def dequant(t: PackedTensor, interpret: Optional[bool] = None) -> jax.Array:
+    """Materialize a PackedTensor to f32 via the decode kernel."""
+    if interpret is None:
+        interpret = should_interpret()
+    kp = t.words.shape[0]
+    npad = t.scales.shape[1]
+    per = lanes_per_word(t.spec.bits)
+    bk = 256 if kp % 256 == 0 else _first_divisor(kp, (128, 64, 32, 16, 8, 4, 2, 1))
+    bn = 512 if npad % 512 == 0 else _first_divisor(npad, (256, 128, 64, 32, 16, 8))
+    bn = max(bn, per)
+    out = dequant_pallas(t.words, t.scales, spec=t.spec, bk=bk, bn=bn,
+                         interpret=interpret)
+    return out[: t.shape[0], : t.shape[1]]
+
+
+def _first_divisor(n: int, cands) -> int:
+    for c in cands:
+        if n % c == 0:
+            return c
+    return 1

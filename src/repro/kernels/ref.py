@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Each Pallas kernel is validated against these in tests (shape/dtype sweeps,
+``interpret=True`` on CPU).  The oracles are deliberately naive and
+readable; ``core.quire`` provides the even-stronger exact-integer oracle
+for the quire kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import formats as fmt
+from ..core.formats import FormatSpec
+from ..core.packing import unpack
+
+__all__ = ["rmmec_matmul_ref", "quire_dot_ref", "dequant_ref"]
+
+
+def dequant_ref(w_words: jax.Array, scales: jax.Array, spec: FormatSpec,
+                n: int) -> jax.Array:
+    codes = unpack(w_words, spec.bits, n)
+    return fmt.decode(spec, codes).astype(jnp.float32) * scales
+
+
+def rmmec_matmul_ref(x: jax.Array, w_words: jax.Array, scales: jax.Array,
+                     spec: FormatSpec, n: int) -> jax.Array:
+    """Unpack -> decode -> plain f32 matmul.  The block-gating mask is
+    semantically a no-op (gated blocks are all-zero), so the oracle
+    ignores it.  Handles K-padded packed weights (pad rows are zero)."""
+    w = dequant_ref(w_words, scales, spec, n)
+    return jnp.dot(x.astype(jnp.float32), w[: x.shape[-1]])
+
+
+def quire_dot_ref(a_codes, b_codes) -> np.ndarray:
+    """Row-wise posit8 dot in float64 (numpy).  float64 holds every posit8
+    product exactly and sums of < 2^40 of them without rounding, so this
+    matches the integer quire bit-for-bit in that regime."""
+    table = fmt.code_values(fmt.POSIT8).astype(np.float64)
+    table = np.where(np.isnan(table), 0.0, table)
+    a = table[np.asarray(a_codes) & 0xFF]
+    b = table[np.asarray(b_codes) & 0xFF]
+    return np.sum(a * b, axis=-1)

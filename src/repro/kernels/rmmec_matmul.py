@@ -1,0 +1,136 @@
+"""RMMEC packed mixed-precision GEMM -- the XR-NPE MAC array on TPU.
+
+The ASIC datapath: packed low-bit operands stream in, the RMMEC block
+decodes mantissa/exponent per ``prec_sel``, zero operands power-gate their
+multiplier, and a quire accumulates.  The TPU port keeps the same stages,
+re-cut for the HBM->VMEM->MXU hierarchy:
+
+  HBM traffic   : weights live PACKED in HBM (uint32 words holding 8x4b /
+                  4x8b / 2x16b codes) -- this is the bandwidth saving.
+  VMEM decode   : each weight block is unpacked + decoded *in VMEM* by the
+                  branch-free integer datapath of ``formats.decode_bits``
+                  (the RMMEC analogue; one static mode per compiled kernel,
+                  mirroring the hardware ``prec_sel`` register).
+  power gating  : a per-(K-block, N-block) nonzero mask lets ``pl.when``
+                  skip the MXU work of all-zero weight blocks entirely --
+                  the dark-silicon reduction, as compute-cycle gating.
+  quire         : f32 MXU accumulation; products of <=12-bit mantissas
+                  accumulate exactly per step (bit-exact quire semantics for
+                  the Posit(8,0) path is provided by the separate
+                  ``quire_dot`` kernel).
+  morphable tile: block shapes are chosen per precision mode so the packed
+                  working set fills VMEM and MXU dims stay 128-aligned --
+                  the 8x8/16x16 morphable-array analogue.
+
+Grid is (M/bm, N/bn, K/bk) with the K axis innermost ('arbitrary'); the
+output block is revisited across K steps and used as the accumulator.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core import formats as fmt
+from ..core.formats import FormatSpec
+from ..core.packing import lanes_per_word
+
+__all__ = ["rmmec_matmul_kernel", "rmmec_matmul_pallas", "default_blocks"]
+
+
+def default_blocks(spec: FormatSpec) -> Tuple[int, int, int]:
+    """Morphable tiling: (bm, bk, bn) per precision mode.
+
+    Lower-precision modes pack more codes per HBM word, so a larger K block
+    keeps the MXU fed from the same packed VMEM budget.
+    """
+    if spec.bits <= 4:
+        return (128, 1024, 256)
+    if spec.bits <= 8:
+        return (128, 512, 256)
+    return (128, 512, 128)
+
+
+def _compute_dtype(spec: FormatSpec, x_dtype):
+    # Follow the activation dtype: bf16 activations get the 2x-rate MXU
+    # path (<=8-bit formats decode *exactly* into bf16 -- <=6 mantissa
+    # bits); f32 activations keep full precision.  Posit16 always decodes
+    # to f32 (12 fraction bits exceed bf16's 8).
+    if x_dtype == jnp.bfloat16 and spec.bits <= 8:
+        return jnp.bfloat16
+    return jnp.float32
+
+
+def rmmec_matmul_kernel(mask_ref, x_ref, w_ref, s_ref, o_ref, *,
+                        spec: FormatSpec, n_block: int, k_steps: int):
+    """One (bm, bn) output block; K-step accumulation with block gating."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    j = pl.program_id(1)
+    gate = mask_ref[k, j]
+
+    @pl.when(gate != 0)
+    def _mac():
+        per = lanes_per_word(spec.bits)
+        words = w_ref[...]  # (bk, bn // per) uint32
+        shifts = (jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(spec.bits))
+        codes = (words[:, :, None] >> shifts) & jnp.uint32((1 << spec.bits) - 1)
+        codes = codes.reshape(words.shape[0], words.shape[1] * per)
+        cdt = _compute_dtype(spec, x_ref.dtype)
+        w = fmt.decode_bits(spec, codes, dtype=cdt)  # RMMEC decode, in VMEM
+        x = x_ref[...].astype(cdt)
+        o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _scale():
+        # output processing stage: apply the per-column (exponent-shift)
+        # scale once, after quire accumulation.
+        o_ref[...] = o_ref[...] * s_ref[...].astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "bm", "bk", "bn", "interpret"),
+)
+def rmmec_matmul_pallas(x: jax.Array, w_words: jax.Array, scales: jax.Array,
+                        mask: jax.Array, *, spec: FormatSpec,
+                        bm: int, bk: int, bn: int,
+                        interpret: bool = False) -> jax.Array:
+    """x:(M,K) float  @  packed w:(K, N/per) uint32  -> (M, N) f32.
+
+    scales: (1, N) f32 per-output-channel dequant scales.
+    mask:   (K/bk, N/bn) int32 nonzero-block map (0 -> power-gated).
+    All dims must already be padded to block multiples (see ops.py).
+    """
+    m, kdim = x.shape
+    per = lanes_per_word(spec.bits)
+    n = w_words.shape[1] * per
+    assert m % bm == 0 and kdim % bk == 0 and n % bn == 0, (m, kdim, n)
+    grid = (m // bm, n // bn, kdim // bk)
+    kernel = functools.partial(rmmec_matmul_kernel, spec=spec,
+                               n_block=bn, k_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(mask.shape, lambda i, j, k: (0, 0)),       # gate map
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),          # x
+            pl.BlockSpec((bk, bn // per), lambda i, j, k: (k, j)),   # packed w
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),           # scales
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(mask, x, w_words, scales)

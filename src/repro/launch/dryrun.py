@@ -1,0 +1,369 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices.
+(Smoke tests / benches never import this module and see 1 device.)
+
+Per cell this driver:
+  1. builds the step function the shape dictates (train_step for train_4k,
+     prefill_step for prefill_32k, serve_step for decode_*);
+  2. jits it with explicit in/out shardings on the production mesh
+     ((16,16)='data','model' single pod, (2,16,16)='pod','data','model'
+     multi-pod) and ``.lower().compile()``s against ShapeDtypeStructs --
+     no device allocation anywhere;
+  3. prints ``compiled.memory_analysis()`` (proves the cell fits HBM) and
+     ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline);
+  4. parses collective ops out of ``compiled.as_text()`` and writes the
+     full record to artifacts/dryrun/*.json for EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  python -m repro.launch.dryrun --all                  # 40-cell baseline
+  python -m repro.launch.dryrun --all --multi-pod      # 512-chip pass
+  ... [--policy mixed|fp4|posit8_0|bf16|fp32] [--attn-impl triangular]
+      [--quantized-kv] [--opt-dtype posit8] [--tag NAME]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import SHAPES, all_cells, get_config
+from ..configs.base import ModelConfig, RunConfig, ShapeConfig
+from ..core.policy import PrecisionPolicy
+from ..models import zoo
+from ..parallel import sharding as sh
+from ..roofline import analysis as ra
+from ..roofline.hw import TPU_V5E
+from ..serve.engine import build_prefill_step, build_serve_step
+from ..train.loop import build_train_step, init_state
+from . import specs as sp
+from .mesh import make_production_mesh
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def _batch_shardings(mesh, batch_sds):
+    bp = sh.batch_pspec(mesh)
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(s):
+        spec = [None] * len(s.shape)
+        if s.shape and len(bp):
+            want = bp[0] if isinstance(bp[0], tuple) else (bp[0],)
+            got = []
+            prod = 1
+            for a in want:  # drop axes that don't divide (e.g. batch=1)
+                if s.shape[0] % (prod * axes[a]) == 0:
+                    got.append(a)
+                    prod *= axes[a]
+            if got:
+                spec[0] = tuple(got) if len(got) > 1 else got[0]
+        return jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(*spec))
+    return jax.tree.map(one, batch_sds)
+
+
+def _policy(name: str) -> PrecisionPolicy:
+    if name == "mixed":
+        return PrecisionPolicy.paper_mixed()
+    return PrecisionPolicy.uniform(name)
+
+
+def _serve_params_sds(cfg: ModelConfig, policy: PrecisionPolicy,
+                      policy_name: str):
+    def build():
+        params = zoo.init_model(jax.random.PRNGKey(0), cfg)
+        if policy_name == "bf16":
+            return jax.tree.map(
+                lambda x: x.astype(jnp.bfloat16)
+                if x.dtype == jnp.float32 else x, params)
+        if policy_name == "fp32":
+            return params
+        return zoo.pack_params(params, policy)
+    return jax.eval_shape(build)
+
+
+def _lower_one(cfg, shape, mesh, policy, policy_name, run_kw, quantized_kv):
+    """Lower + compile one step program; return (compiled, t_lower, t_compile)."""
+    t0 = time.time()
+    if shape.kind == "train":
+        run = RunConfig(qat=run_kw["qat"], precision_policy=policy_name,
+                        opt_state_dtype=run_kw["opt_dtype"],
+                        microbatch=run_kw["microbatch"],
+                        grad_compression=run_kw["grad_compression"])
+        state_sds = jax.eval_shape(
+            lambda: init_state(jax.random.PRNGKey(0), cfg, run))
+        step_fn, shard_state = build_train_step(cfg, run, policy, mesh=mesh)
+        state_sh = shard_state(state_sds)
+        batch_sds = sp.batch_specs(cfg, shape.global_batch, shape.seq_len)
+        batch_sh = _batch_shardings(mesh, batch_sds)
+        with sh.use_mesh(mesh):
+            lowered = jax.jit(
+                step_fn, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_sds, batch_sds)
+    elif shape.kind == "prefill":
+        params_sds = _serve_params_sds(cfg, policy, policy_name)
+        params_sh = sh.param_sharding_tree(mesh, params_sds)
+        batch_sds = sp.batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                   with_labels=False)
+        batch_sh = _batch_shardings(mesh, batch_sds)
+        fn = build_prefill_step(
+            cfg, last_logit_only=run_kw.get("last_logit_only", False))
+        with sh.use_mesh(mesh):
+            lowered = jax.jit(
+                fn, in_shardings=(params_sh, batch_sh),
+            ).lower(params_sds, batch_sds)
+    else:  # decode
+        params_sds = _serve_params_sds(cfg, policy, policy_name)
+        params_sh = sh.param_sharding_tree(mesh, params_sds)
+        cache_sds = sp.cache_specs(cfg, shape.global_batch, shape.seq_len,
+                                   quantized_kv)
+        cache_sh = sh.cache_sharding_tree(mesh, cache_sds,
+                                          shape.global_batch)
+        tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tok_sh = _batch_shardings(mesh, tok_sds)
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        pos_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        fn = build_serve_step(cfg)
+        with sh.use_mesh(mesh):
+            lowered = jax.jit(
+                fn, in_shardings=(params_sh, tok_sh, cache_sh, pos_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(2,),
+            ).lower(params_sds, tok_sds, cache_sds, pos_sds)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    return compiled, t_lower, time.time() - t0
+
+
+def _cost_of(cfg, shape, mesh, policy, policy_name, run_kw, quantized_kv):
+    compiled, tl, tc = _lower_one(cfg, shape, mesh, policy, policy_name,
+                                  run_kw, quantized_kv)
+    cost = dict(compiled.cost_analysis())
+    colls = ra.collective_stats(compiled.as_text())
+    return cost, colls
+
+
+def _layer_unit(cfg) -> int:
+    """Smallest layer-count increment of the stacked scan."""
+    return cfg.attn_every if cfg.family == "hybrid" else 1
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               policy_name: str = "mixed", quantized_kv: bool = False,
+               opt_dtype: str = "posit8", attn_impl: str = None,
+               remat: str = None, microbatch: int = 0,
+               grad_compression: str = "none", qat: bool = True,
+               seq_chunk: int = None, verbose: bool = True,
+               extrapolate: bool = True, last_logit_only: bool = False,
+               attn_scores_f32: bool = True):
+    """Full-cell dry-run.
+
+    ``extrapolate``: XLA's cost_analysis counts a while-loop (scan) body
+    once regardless of trip count, so per-layer costs vanish from the
+    L-layer scan.  We therefore also compile 1- and 2-unit variants of the
+    same cell (cheap: tiny HLO) and extrapolate
+    ``cost(L) = cost(1) + (L-1) * (cost(2) - cost(1))`` -- exact for a
+    homogeneous stacked scan, still 100%% HLO-derived.  memory_analysis
+    and the collective *schedule* come from the full-L compile.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    over = {"attn_impl": attn_impl or "triangular",
+            "attn_scores_f32": attn_scores_f32}
+    if remat:
+        over["remat"] = remat
+    if seq_chunk:
+        over["seq_chunk"] = seq_chunk
+    elif shape.seq_len > 8192:
+        # compile-time hygiene: cap the triangular unroll at 8 q-chunks
+        # for long-prefill cells (identical FLOPs accounting, 4x smaller
+        # HLO body on 1 CPU compile core)
+        over["seq_chunk"] = shape.seq_len // 8
+    cfg = dataclasses.replace(cfg, **over)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    policy = _policy(policy_name)
+    run_kw = dict(qat=qat, opt_dtype=opt_dtype, microbatch=microbatch,
+                  grad_compression=grad_compression,
+                  last_logit_only=last_logit_only)
+
+    compiled, t_lower, t_compile = _lower_one(
+        cfg, shape, mesh, policy, policy_name, run_kw, quantized_kv)
+    mem = compiled.memory_analysis()
+    cost = dict(compiled.cost_analysis())
+    hlo = compiled.as_text()
+    colls = ra.collective_stats(hlo)
+
+    extrap = None
+    unit = _layer_unit(cfg)
+    if extrapolate and cfg.n_layers > 2 * unit:
+        # probes UNROLL the layer stack (scan_layers=False) so per-layer
+        # FLOPs are visible to cost_analysis; 1 and 2 units suffice.
+        cfg1 = dataclasses.replace(cfg, n_layers=unit, scan_layers=False)
+        cfg2 = dataclasses.replace(cfg, n_layers=2 * unit,
+                                   scan_layers=False)
+        c1, k1 = _cost_of(cfg1, shape, mesh, policy, policy_name,
+                          run_kw, quantized_kv)
+        c2, k2 = _cost_of(cfg2, shape, mesh, policy, policy_name,
+                          run_kw, quantized_kv)
+        steps = cfg.n_layers // unit
+        def ext(a, b):
+            return a + (steps - 1) * max(b - a, 0.0)
+        cost = dict(cost)
+        cost["flops"] = ext(c1.get("flops", 0.0), c2.get("flops", 0.0))
+        cost["bytes accessed"] = ext(c1.get("bytes accessed", 0.0),
+                                     c2.get("bytes accessed", 0.0))
+        colls = dict(colls)
+        for key in ("wire_bytes", "operand_bytes"):
+            colls[key] = ext(k1.get(key, 0.0), k2.get(key, 0.0))
+        extrap = {"unit_layers": unit,
+                  "flops_1": c1.get("flops", 0.0),
+                  "flops_2": c2.get("flops", 0.0)}
+
+    terms = ra.roofline_terms(cost, colls, chips)
+    wbits = {"fp4": 4.0, "posit8_0": 8.0, "posit16_1": 16.0,
+             "bf16": 16.0, "fp32": 32.0}.get(policy_name, 4.5)
+    summary = ra.summarize_cell(cfg, shape, terms, chips,
+                                weight_bits=wbits,
+                                quantized_kv=quantized_kv)
+
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": list(mesh.devices.shape), "chips": chips,
+        "multi_pod": multi_pod, "policy": policy_name,
+        "quantized_kv": quantized_kv, "opt_dtype": opt_dtype,
+        "attn_impl": cfg.attn_impl, "remat": cfg.remat,
+        "grad_compression": grad_compression, "qat": qat,
+        "microbatch": microbatch, "extrapolation": extrap,
+        "lower_s": t_lower, "compile_s": t_compile,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_nonaliased_bytes": (mem.argument_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      + mem.temp_size_in_bytes
+                                      - mem.alias_size_in_bytes),
+        },
+        "cost": {k: v for k, v in cost.items()
+                 if k in ("flops", "bytes accessed", "transcendentals")},
+        "collectives": colls,
+        "roofline": summary,
+        "params_total": ra.total_param_count(cfg),
+        "params_active": ra.active_param_count(cfg),
+    }
+    if verbose:
+        print(f"--- {arch} x {shape_name} on {tuple(mesh.devices.shape)} "
+              f"(policy={policy_name}) ---")
+        print("memory_analysis:", mem)
+        print("cost_analysis (layer-extrapolated): flops=%.3e bytes=%.3e" %
+              (cost.get("flops", 0), cost.get("bytes accessed", 0)))
+        print("collectives: count=%d wire_bytes/dev=%.3e" %
+              (colls["count"], colls["wire_bytes"]))
+        print("roofline: compute=%.4fs memory=%.4fs collective=%.4fs "
+              "dominant=%s fraction=%.3f" %
+              (summary["t_compute_s"], summary["t_memory_s"],
+               summary["t_collective_s"], summary["dominant"],
+               summary["roofline_fraction"]))
+        print("lower=%.1fs compile=%.1fs" % (t_lower, t_compile))
+    return record
+
+
+def save_record(record, tag: str = ""):
+    os.makedirs(ART_DIR, exist_ok=True)
+    mesh_tag = "x".join(map(str, record["mesh"]))
+    name = f"{record['arch']}__{record['shape']}__{mesh_tag}"
+    if tag:
+        name += f"__{tag}"
+    path = os.path.join(ART_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--policy", default="mixed")
+    ap.add_argument("--quantized-kv", action="store_true")
+    ap.add_argument("--opt-dtype", default="posit8")
+    ap.add_argument("--attn-impl", default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--seq-chunk", type=int, default=None)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--no-qat", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-extrapolate", action="store_true",
+                    help="skip the 1/2-layer probe compiles (multi-pod "
+                         "pass: sharding proof only; roofline is single-pod)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch, sname, cfg, shp, runnable in all_cells():
+            if runnable:
+                cells.append((arch, sname))
+            else:
+                print(f"SKIP {arch} x {sname}: long_500k needs "
+                      f"sub-quadratic attention (see DESIGN.md)")
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, sname in cells:
+        if args.skip_existing:
+            mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+            name = f"{arch}__{sname}__{mesh_tag}"
+            if args.tag:
+                name += f"__{args.tag}"
+            if os.path.exists(os.path.join(ART_DIR, name + ".json")):
+                print("skip (exists):", name)
+                continue
+        try:
+            rec = lower_cell(
+                arch, sname, multi_pod=args.multi_pod,
+                policy_name=args.policy, quantized_kv=args.quantized_kv,
+                opt_dtype=args.opt_dtype, attn_impl=args.attn_impl,
+                remat=args.remat, microbatch=args.microbatch,
+                grad_compression=args.grad_compression,
+                qat=not args.no_qat, seq_chunk=args.seq_chunk,
+                extrapolate=not args.no_extrapolate)
+            path = save_record(rec, args.tag)
+            print("saved", path)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, sname, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"dry-run OK: {len(cells)} cells")
+
+
+if __name__ == "__main__":
+    main()

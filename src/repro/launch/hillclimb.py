@@ -1,0 +1,107 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: hypothesis -> change -> measure -> record.
+
+Runs the three selected cells through their iteration ladders and writes
+tagged artifacts (artifacts/dryrun/*__<tag>.json) plus a markdown log to
+artifacts/perf_log.md.  Iterations it1/it2 are code fixes measured by
+re-lowering (the code change is in the tree; the baseline artifacts were
+compiled before it).
+
+  PYTHONPATH=src python -m repro.launch.hillclimb [--cell A|B|C]
+"""
+
+import argparse
+import json
+
+from .dryrun import lower_cell, save_record
+
+LOG = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "perf_log.md")
+
+
+def run_variant(arch, shape, tag, hypothesis, **kw):
+    rec = lower_cell(arch, shape, verbose=False, **kw)
+    path = save_record(rec, tag)
+    rf = rec["roofline"]
+    row = {
+        "arch": arch, "shape": shape, "tag": tag, "hypothesis": hypothesis,
+        "t_compute": rf["t_compute_s"], "t_memory": rf["t_memory_s"],
+        "t_coll": rf["t_collective_s"], "dominant": rf["dominant"],
+        "frac": rf["roofline_fraction"],
+        "useful": rf["useful_flops_ratio"],
+        "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+    }
+    print(f"[{arch} x {shape}] {tag}: dom={row['dominant']} "
+          f"tm={row['t_memory']:.4f} tc={row['t_compute']:.4f} "
+          f"tk={row['t_coll']:.4f} frac={row['frac']:.4f} "
+          f"temp={row['temp_gib']:.1f}GiB  -- {hypothesis}")
+    with open(LOG, "a") as f:
+        f.write(json.dumps(row) + "\n")
+    return row
+
+
+def cell_A():
+    """command-r-plus-104b x decode_32k -- packed serving, memory-bound:
+    the cell most representative of the paper's technique."""
+    a, s = "command-r-plus-104b", "decode_32k"
+    run_variant(a, s, "hc0", "re-measure baseline after KV-reshard fix "
+                "(it1) + lm_head rule fix (it2): expect big t_memory drop "
+                "(all-gather of f32 KV per layer eliminated)")
+    run_variant(a, s, "hc_kvq", "it3: posit8 KV cache halves KV bytes; "
+                "KV dominates decode traffic -> t_memory ~ -30-50%",
+                quantized_kv=True)
+    run_variant(a, s, "hc_bf16", "control: bf16 dense weights (pre-paper "
+                "serving baseline) -- shows the paper's packed-weight gain",
+                policy_name="bf16")
+    run_variant(a, s, "hc_fp4", "beyond-paper: uniform fp4 weights (vs "
+                "mixed) -- max packing; measures accuracy-free upper bound",
+                policy_name="fp4", quantized_kv=True)
+
+
+def cell_B():
+    """qwen2-0.5b x prefill_32k -- worst baseline roofline fraction
+    (0.002): a tiny TP-unfriendly model on 256 chips."""
+    a, s = "qwen2-0.5b", "prefill_32k"
+    run_variant(a, s, "hc0", "re-measure after it2 lm_head fix")
+    run_variant(a, s, "hc_lastlogit", "it3: return only last-position "
+                "logits; XLA DCEs (S-1)/S of the lm_head matmul and the "
+                "(B,S,V) buffer -> t_compute & t_memory drop "
+                "(head is ~40% of this tiny model's FLOPs at 32k)",
+                last_logit_only=True)
+    run_variant(a, s, "hc_chunk", "bigger attention chunks (4096): fewer, "
+                "larger dots -> less per-chunk overhead in bytes-accessed",
+                last_logit_only=True, seq_chunk=4096)
+
+
+def cell_C():
+    """kimi-k2-1t-a32b x train_4k -- the paper's technique at 1T-param
+    scale (packed/QAT MoE), worst absolute memory pressure."""
+    a, s = "kimi-k2-1t-a32b", "train_4k"
+    run_variant(a, s, "hc0", "re-measure baseline (mb=4)", microbatch=4)
+    run_variant(a, s, "hc_mb8", "microbatch 8: halves per-microbatch "
+                "activation transients; HLO flops unchanged",
+                microbatch=8)
+    run_variant(a, s, "hc_noqat", "ablate QAT fake-quant: isolates its "
+                "bytes-accessed contribution (encode+decode of every "
+                "expert weight per microbatch)", microbatch=4, qat=False)
+    run_variant(a, s, "hc_comp", "posit8 gradient compression w/ error "
+                "feedback: DP all-reduce wire bytes / 4",
+                microbatch=4, grad_compression="posit8")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all", choices=["A", "B", "C", "all"])
+    args = ap.parse_args()
+    if args.cell in ("A", "all"):
+        cell_A()
+    if args.cell in ("B", "all"):
+        cell_B()
+    if args.cell in ("C", "all"):
+        cell_C()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns exactly what ``train_step`` /
+``prefill_step`` / ``serve_step`` take, as abstract values, so
+``jax.jit(...).lower(**specs)`` never touches device memory.  Audio/vision
+frontends are stubs per the assignment: the specs carry precomputed
+frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import transformer as T
+
+__all__ = ["batch_specs", "cache_specs", "input_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, b: int, s: int,
+                with_labels: bool = True) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        out["frame_embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.frontend == "vision":
+            out["patch_embeds"] = _sds((b, cfg.n_patches, cfg.d_model),
+                                       jnp.bfloat16)
+    if with_labels:
+        out["labels"] = _sds((b, s), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, b: int, max_len: int,
+                quantized_kv: bool = False):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, b, max_len, quantized_kv))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                quantized_kv: bool = False) -> Dict[str, Any]:
+    """Abstract inputs for the step function that ``shape.kind`` lowers."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, b, s)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, b, s, with_labels=False)}
+    # decode: one new token against a seq_len cache
+    specs: Dict[str, Any] = {
+        "tokens": _sds((b, 1), jnp.int32),
+        "cache": cache_specs(cfg, b, s, quantized_kv),
+        "pos": _sds((), jnp.int32),
+    }
+    return specs

@@ -1,0 +1,1 @@
+from . import layers, attention, moe, ssm, transformer, zoo  # noqa: F401

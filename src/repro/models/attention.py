@@ -1,0 +1,257 @@
+"""GQA attention: chunked (flash-style) training path, KV-cached decode.
+
+Two training implementations, selected by ``cfg`` (a hillclimb lever --
+see EXPERIMENTS.md §Perf):
+
+  * ``scan``       -- online-softmax scan over KV chunks (compact HLO, but
+                      causally-masked chunks still execute: ~2x FLOP waste
+                      on the strictly-upper triangle);
+  * ``triangular`` -- python-unrolled q-chunks, each attending only to its
+                      causal KV prefix: the HLO contains exactly the useful
+                      FLOPs (the XLA analogue of a flash kernel's block
+                      skipping).
+
+The KV cache supports optional Posit(8,0) quantization (beyond-paper
+optimization aligned with its thesis: the decode memory roofline is KV +
+weight bytes, and posit8 halves KV traffic vs bf16 at near-zero error).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import formats as fmt
+from ..parallel.sharding import shard
+from . import layers as L
+
+__all__ = ["attn_init", "attn_apply", "attn_decode", "init_kv_cache",
+           "quantize_kv", "dequantize_kv"]
+
+
+def attn_init(key, cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias),
+        "wk": L.dense_init(ks[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": L.dense_init(ks[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": L.dense_init(ks[3], cfg.n_heads * hd, d),
+    }
+
+
+def _qkv(p, x, cfg, positions):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.dense(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = L.dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    v = L.dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.rope_kind == "mrope":
+        q = L.mrope(q, positions, cfg.rope_theta)
+        k = L.mrope(k, positions, cfg.rope_theta)
+    else:
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _scores(q, k, softcap: float, f32: bool = True):
+    """q: (B,Sq,Kh,G,Dh), k: (B,Skv,Kh,Dh) -> (B,Kh,G,Sq,Skv).
+
+    ``f32=False`` keeps scores + softmax in bf16 (max-subtraction bounds
+    the exp argument, so bf16 is numerically fine): halves the dominant
+    HBM traffic of long-context attention (§Perf cell B, beyond-paper).
+    """
+    s = jnp.einsum(
+        "bqkgd,btkd->bkgqt", q, k,
+        preferred_element_type=jnp.float32 if f32 else jnp.bfloat16)
+    s *= 1.0 / math.sqrt(q.shape[-1])
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def _attend_block(q5, k, v, bias, f32: bool = True):
+    """Full softmax attention on one block. q5: (B,Sq,Kh,G,Dh)."""
+    s = _scores(q5, k, 0.0, f32) + bias.astype(
+        jnp.float32 if f32 else jnp.bfloat16)      # (B,Kh,G,Sq,Skv)
+    p = jax.nn.softmax(s, axis=-1).astype(q5.dtype)
+    return jnp.einsum("bkgqt,btkd->bqkgd", p, v)
+
+
+def attn_apply(p, x, cfg, positions=None, mode: str = "train"):
+    """Causal self-attention over a full sequence (train / prefill).
+
+    Returns (out, (k, v)) -- the kv tensors feed cache initialization in
+    prefill mode.
+    """
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if cfg.rope_kind == "mrope":
+            positions = jnp.broadcast_to(positions, (3, b, s))
+    q, k, v = _qkv(p, x, cfg, positions)
+    g = cfg.n_heads // cfg.n_kv_heads
+    q5 = q.reshape(b, s, cfg.n_kv_heads, g, q.shape[-1])
+
+    impl = getattr(cfg, "attn_impl", "triangular")
+    f32 = getattr(cfg, "attn_scores_f32", True)
+    c = min(cfg.seq_chunk, s)
+    n_chunks = s // c if s % c == 0 else 1
+    if n_chunks <= 1:
+        bias = _causal_bias(s, s, 0)
+        out = _attend_block(q5, k, v, bias, f32)
+    elif impl == "triangular":
+        outs = []
+        for i in range(n_chunks):
+            qi = q5[:, i * c:(i + 1) * c]
+            kv_len = (i + 1) * c
+            bias = _causal_bias(c, kv_len, i * c)
+            outs.append(_attend_block(qi, k[:, :kv_len], v[:, :kv_len],
+                                      bias, f32))
+        out = jnp.concatenate(outs, axis=1)
+    else:  # online-softmax scan over kv chunks
+        out = _flash_scan(q5, k, v, c)
+    out = out.reshape(b, s, cfg.n_heads * q.shape[-1])
+    out = shard(out, "batch", "seq", "heads")
+    return L.dense(p["wo"], out), (k, v)
+
+
+def _causal_bias(sq: int, skv: int, q_offset: int) -> jax.Array:
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    return jnp.where(kpos <= qpos, 0.0, -1e30)[None, None, None]
+
+
+def _flash_scan(q5, k, v, c: int):
+    """Online-softmax over KV chunks (lax.scan; numerically standard)."""
+    b, s, kh, g, hd = q5.shape
+    n = s // c
+    k_c = k.reshape(b, n, c, kh, hd).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(b, n, c, kh, hd).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / math.sqrt(hd)
+    qpos = jnp.arange(s)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kc, vc, idx = xs
+        sc = jnp.einsum("bqkgd,btkd->bkgqt", q5, kc,
+                        preferred_element_type=jnp.float32) * scale
+        kpos = idx * c + jnp.arange(c)
+        mask = kpos[None, :] <= qpos[:, None]            # (Sq, c)
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(q5.dtype), vc)
+        acc = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, kh, g, s, hd), q5.dtype)
+    m0 = jnp.full((b, kh, g, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, s), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (k_c, v_c, jnp.arange(n)))
+    out = acc / l[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4)                  # (B,S,Kh,G,Dh)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_len: int, quantized: bool = False,
+                  dtype=jnp.bfloat16, n_attn_layers: Optional[int] = None):
+    """Stacked-over-layers KV cache pytree (scan-compatible)."""
+    nl = n_attn_layers if n_attn_layers is not None else cfg.n_layers
+    hd = cfg.resolved_head_dim
+    shape = (nl, batch, max_len, cfg.n_kv_heads, hd)
+    if quantized:
+        return {
+            "k_codes": jnp.zeros(shape, jnp.uint8),
+            "v_codes": jnp.zeros(shape, jnp.uint8),
+            "k_scale": jnp.ones(shape[:-1], jnp.bfloat16),
+            "v_scale": jnp.ones(shape[:-1], jnp.bfloat16),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def quantize_kv(k: jax.Array):
+    """Per-(token, head) posit8 quantization of a KV tensor (..., Dh)."""
+    s = jnp.max(jnp.abs(k), axis=-1) / 64.0 + 1e-8   # posit8 maxpos = 64
+    s = jnp.exp2(jnp.ceil(jnp.log2(s)))
+    codes = fmt.encode_bits(fmt.POSIT8,
+                            (k / s[..., None]).astype(jnp.float32))
+    return codes.astype(jnp.uint8), s.astype(jnp.bfloat16)
+
+
+def dequantize_kv(codes: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    return (fmt.decode_bits(fmt.POSIT8, codes.astype(jnp.int32))
+            * scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
+def _cache_read(layer_cache, dtype):
+    if "k" in layer_cache:
+        return layer_cache["k"], layer_cache["v"]
+    k = dequantize_kv(layer_cache["k_codes"], layer_cache["k_scale"], dtype)
+    v = dequantize_kv(layer_cache["v_codes"], layer_cache["v_scale"], dtype)
+    return k, v
+
+
+def _cache_write(layer_cache, k_new, v_new, pos):
+    """Insert one token's k/v at position ``pos`` (B,1,Kh,Dh)."""
+    if "k" in layer_cache:
+        k = jax.lax.dynamic_update_slice(
+            layer_cache["k"], k_new.astype(layer_cache["k"].dtype),
+            (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            layer_cache["v"], v_new.astype(layer_cache["v"].dtype),
+            (0, pos, 0, 0))
+        return {"k": k, "v": v}
+    kc, ks = quantize_kv(k_new)
+    vc, vs = quantize_kv(v_new)
+    out = dict(layer_cache)
+    out["k_codes"] = jax.lax.dynamic_update_slice(
+        layer_cache["k_codes"], kc, (0, pos, 0, 0))
+    out["v_codes"] = jax.lax.dynamic_update_slice(
+        layer_cache["v_codes"], vc, (0, pos, 0, 0))
+    out["k_scale"] = jax.lax.dynamic_update_slice(
+        layer_cache["k_scale"], ks, (0, pos, 0))
+    out["v_scale"] = jax.lax.dynamic_update_slice(
+        layer_cache["v_scale"], vs, (0, pos, 0))
+    return out
+
+
+def attn_decode(p, x, cfg, layer_cache, pos):
+    """One-token decode step. x: (B, 1, D); pos: scalar current position.
+
+    Returns (out, updated_layer_cache).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.rope_kind == "mrope":
+        positions = jnp.broadcast_to(positions, (3, b, 1))
+    q, k_new, v_new = _qkv(p, x, cfg, positions)
+    layer_cache = _cache_write(layer_cache, k_new, v_new, pos)
+    k, v = _cache_read(layer_cache, x.dtype)
+    # NOTE: no sharding constraint here -- the cache arrives with its
+    # input sharding (batch on data, head_dim on model) and forcing the
+    # activation-rule layout all-gathered the full KV in f32 every layer
+    # (measured: +6.5 GiB/layer/device on command-r decode; §Perf it1).
+    g = cfg.n_heads // cfg.n_kv_heads
+    hd = q.shape[-1]
+    q5 = q.reshape(b, 1, cfg.n_kv_heads, g, hd)
+    s = _scores(q5, k, cfg.attn_logit_softcap)       # (B,Kh,G,1,T)
+    tpos = jnp.arange(k.shape[1])
+    s = jnp.where(tpos[None, None, None, None, :] <= pos, s, -1e30)
+    pw = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", pw, v)
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    return L.dense(p["wo"], out), layer_cache

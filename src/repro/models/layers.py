@@ -1,0 +1,154 @@
+"""Common layers, quantization-aware.
+
+A Dense weight can be either a plain array (training / QAT plane: fake
+quantization happens on the param tree before the forward) or a
+``PackedTensor`` (serving plane: weights physically packed in HBM as
+low-bit codes; the matmul streams packed words and decodes at compute,
+which is what the dry-run memory roofline sees).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.ops import PackedTensor, packed_matmul, should_interpret
+from ..parallel.sharding import shard
+
+__all__ = [
+    "dense_init", "dense", "rmsnorm_init", "rmsnorm", "embed_init", "embed",
+    "ffn_init", "ffn", "rope", "mrope", "rope_freqs", "PACKED_USE_KERNEL",
+]
+
+# serving plane: False -> pure-jnp unpack+decode+dot (portable: used by the
+# dry-run, where the XLA graph must lower for the host compile target);
+# True -> the Pallas rmmec_matmul kernel (real TPU execution).
+PACKED_USE_KERNEL = False
+
+
+def _uniform(key, shape, scale, dtype=jnp.float32):
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False,
+               dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in)
+    p = {"w": _uniform(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x: jax.Array, compute_dtype=None) -> jax.Array:
+    w = p["w"]
+    if isinstance(w, PackedTensor):
+        y = packed_matmul(x, w, use_ref=not PACKED_USE_KERNEL,
+                          interpret=should_interpret())
+        y = y.astype(x.dtype)
+    else:
+        cd = compute_dtype or x.dtype
+        y = jnp.dot(x.astype(cd), w.astype(cd))
+    if "bias" in p:
+        y = y + p["bias"].astype(y.dtype)
+    return y
+
+
+def rmsnorm_init(d: int):
+    return {"norm_scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(jnp.square(x32), -1, keepdims=True) + eps)
+    return (y * p["norm_scale"]).astype(dt)
+
+
+def embed_init(key, vocab: int, d: int):
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(p, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def embed_logits(p, x: jax.Array) -> jax.Array:
+    """Tied read-out: x @ table^T."""
+    return jnp.dot(x, p["table"].astype(x.dtype).T)
+
+
+# ---------------------------------------------------------------------------
+# FFN (swiglu / geglu / gelu)
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, d: int, d_ff: int, kind: str = "swiglu", out_bias=False):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "gate": dense_init(ks[0], d, d_ff),
+            "up": dense_init(ks[1], d, d_ff),
+            "down": dense_init(ks[2], d_ff, d, bias=out_bias),
+        }
+    return {
+        "up": dense_init(ks[0], d, d_ff),
+        "down": dense_init(ks[1], d_ff, d, bias=out_bias),
+    }
+
+
+def ffn(p, x: jax.Array, kind: str = "swiglu") -> jax.Array:
+    if kind in ("swiglu", "geglu"):
+        g = dense(p["gate"], x)
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        h = act * dense(p["up"], x)
+    else:
+        h = jax.nn.gelu(dense(p["up"], x))
+    h = shard(h, "batch", "seq", "ff")
+    return dense(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE for qwen2-vl)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def _apply_rot(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                    # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (B,S,Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    return _apply_rot(x, cos, sin)
+
+
+def mrope(x: jax.Array, positions3: jax.Array, theta: float,
+          sections: Optional[Sequence[int]] = None) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): the Dh/2 frequency dims are split into
+    (t, h, w) sections, each rotated by its own position stream.
+
+    x: (B, S, H, Dh); positions3: (3, B, S) int32.
+    """
+    half = x.shape[-1] // 2
+    if sections is None:
+        hw = 3 * half // 8
+        sections = (half - 2 * hw, hw, hw)   # qwen2-vl: (16,24,24) @ Dh=128
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                       # (half,)
+    sec_id = np.repeat(np.arange(3), np.asarray(sections))       # (half,)
+    pos_per_dim = positions3[sec_id]                             # (half,B,S)
+    ang = jnp.moveaxis(pos_per_dim, 0, -1).astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    return _apply_rot(x, cos, sin)

@@ -1,0 +1,173 @@
+"""Top-k MoE with sort-based dispatch (static shapes, EP-shardable).
+
+Dispatch is the TPU-friendly sort/scatter formulation (no (tokens, experts,
+capacity) one-hot -- that mask is quadratically infeasible at Kimi-K2 scale):
+
+  route -> top-k -> flatten (token, expert) pairs -> sort by expert ->
+  positions within expert via counts/cumsum -> scatter into the static
+  (E, C, D) expert buffer (capacity-drop beyond C) -> vmapped expert FFN
+  (expert dim sharded on 'model' = EP) -> weighted combine scatter-add.
+
+Supports Kimi-style shared experts (always-on dense FFN added to the MoE
+output) and Arctic-style dense residual (full FFN in parallel with MoE).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ops import PackedTensor, to_dense
+from ..parallel.sharding import shard
+from . import layers as L
+
+
+def _mat(w, dtype):
+    """Expert weight leaf -> dense compute array (decodes PackedTensor:
+    HBM holds the packed codes; decode happens at use, per layer)."""
+    if isinstance(w, PackedTensor):
+        return to_dense(w, dtype)
+    return w.astype(dtype)
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def _expert_ffn_init(key, d: int, d_ff: int, n: int, kind: str):
+    """Stacked expert weights: leading dim = experts."""
+    ks = jax.random.split(key, 3)
+    scale1, scale2 = 1.0 / math.sqrt(d), 1.0 / math.sqrt(d_ff)
+    p = {
+        "gate": jax.random.uniform(ks[0], (n, d, d_ff), jnp.float32,
+                                   -scale1, scale1),
+        "up": jax.random.uniform(ks[1], (n, d, d_ff), jnp.float32,
+                                 -scale1, scale1),
+        "down": jax.random.uniform(ks[2], (n, d_ff, d), jnp.float32,
+                                   -scale2, scale2),
+    }
+    if kind == "gelu":
+        del p["gate"]
+    return p
+
+
+def moe_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    d_ff = cfg.moe_d_ff or cfg.d_ff
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (cfg.d_model, cfg.n_experts),
+                                          jnp.float32) * 0.02},
+        "experts": _expert_ffn_init(ks[1], cfg.d_model, d_ff,
+                                    cfg.n_experts, cfg.ffn_kind),
+    }
+    if cfg.shared_experts:
+        p["shared"] = L.ffn_init(ks[2], cfg.d_model,
+                                 d_ff * cfg.shared_experts, cfg.ffn_kind)
+    if cfg.dense_residual:
+        p["residual"] = L.ffn_init(ks[3], cfg.d_model, cfg.d_ff, cfg.ffn_kind)
+    return p
+
+
+def _expert_ffn(p, x: jax.Array, kind: str) -> jax.Array:
+    """x: (E, C, D) -> (E, C, D), batched matmuls over the expert dim."""
+    up = jnp.einsum("ecd,edf->ecf", x, p["up"].astype(x.dtype))
+    if kind in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", x, p["gate"].astype(x.dtype))
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up)
+    h = shard(h, "experts", None, None)
+    return jnp.einsum("ecf,efd->ecd", h, p["down"].astype(x.dtype))
+
+
+def _n_groups(n: int, target: int = 4096, cap: int = 512) -> int:
+    """Largest power-of-2 group count with >= ``target`` tokens/group."""
+    g = 1
+    while g * 2 <= cap and n % (g * 2) == 0 and n // (g * 2) >= target:
+        g *= 2
+    return g
+
+
+def _expert_ffn_grouped(p, x: jax.Array, kind: str) -> jax.Array:
+    """x: (G, E, C, D) -> same, expert dim EP-sharded on 'model'."""
+    up = jnp.einsum("gecd,edf->gecf", x, _mat(p["up"], x.dtype))
+    if kind in ("swiglu", "geglu"):
+        g = jnp.einsum("gecd,edf->gecf", x, _mat(p["gate"], x.dtype))
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up)
+    h = shard(h, "batch", "experts", None, None)
+    return jnp.einsum("gecf,efd->gecd", h, _mat(p["down"], x.dtype))
+
+
+def moe_apply(p, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    GROUPED sort-based dispatch: tokens split into G groups sharded on the
+    data axes; scatter/gather run *inside* ``jax.vmap`` over groups, so
+    GSPMD partitions them group-parallel with no replicated expert buffer
+    (a flat global scatter forces exactly that -- observed 12 TB/device on
+    kimi-k2 before this formulation).  The (G, E, C, D) buffer is the
+    all-to-all'd EP layout: groups on 'data', experts on 'model'.
+    """
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.n_experts, cfg.experts_per_tok
+    g = _n_groups(n)
+    ng = n // g
+    xt = x.reshape(g, ng, d)
+    xt = shard(xt, "batch", None, None)
+
+    logits = jnp.einsum("gnd,de->gne", xt.astype(jnp.float32),
+                        p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # (G,Ng,E)
+    top_p, top_i = jax.lax.top_k(probs, k)                       # (G,Ng,K)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)            # renorm
+
+    # load-balance aux (switch-style): E * sum_e f_e * P_e
+    f_e = jnp.mean(jnp.sum(jax.nn.one_hot(top_i, e), axis=2), axis=(0, 1))
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(f_e * p_e)
+
+    nk = ng * k
+    cap = int(math.ceil(nk / e * cfg.capacity_factor))
+    cap = max(cap, 4)
+
+    def dispatch(xg, eg, wg):
+        """xg (Ng,D), eg/wg (Ng,K) -> buf (E,C,D), dst, toks, ws."""
+        flat_e = eg.reshape(nk)
+        toks0 = jnp.repeat(jnp.arange(ng, dtype=jnp.int32), k)
+        ws0 = wg.reshape(nk)
+        order = jnp.argsort(flat_e)
+        es, toks, ws = flat_e[order], toks0[order], ws0[order]
+        counts = jnp.bincount(es, length=e)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(nk, dtype=jnp.int32) - starts[es].astype(jnp.int32)
+        keep = pos < cap
+        dst = jnp.where(keep, es * cap + pos, e * cap)           # drop slot
+        buf = jnp.zeros((e * cap + 1, d), xg.dtype).at[dst].set(xg[toks])
+        return buf[: e * cap].reshape(e, cap, d), dst, toks, ws
+
+    buf, dst, toks, ws = jax.vmap(dispatch)(
+        xt, top_i, top_p.astype(x.dtype))                        # (G,E,C,D)
+    buf = shard(buf, "batch", "experts", None, None)
+    eout = _expert_ffn_grouped(p["experts"], buf, cfg.ffn_kind)  # (G,E,C,D)
+
+    def combine(yg, dstg, toksg, wsg):
+        yflat = jnp.concatenate(
+            [yg.reshape(e * cap, d), jnp.zeros((1, d), yg.dtype)], 0)
+        contrib = yflat[dstg] * wsg[:, None]
+        return jnp.zeros((ng, d), yg.dtype).at[toksg].add(contrib)
+
+    out = jax.vmap(combine)(eout, dst, toks, ws)                 # (G,Ng,D)
+    out = out.reshape(b, s, d)
+    out = shard(out, "batch", "seq", "embed")
+
+    if cfg.shared_experts:
+        out = out + L.ffn(p["shared"], x, cfg.ffn_kind)
+    if cfg.dense_residual:
+        out = out + L.ffn(p["residual"], x, cfg.ffn_kind)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,130 @@
+"""The paper's XR perception workloads: UL-VIO, eye-gaze, classification.
+
+These are the models the paper's accuracy figures (Fig. 5-8) evaluate
+under precision sweeps.  Implemented small enough to *train* on CPU in
+the benchmarks, structurally faithful:
+
+  * VIO (UL-VIO-like): visual-feature branch (the conv encoder is
+    stubbed by the data pipeline's feature projection, matching how the
+    assignment stubs modality frontends) + IMU branch + fusion MLP ->
+    6-DoF relative pose.  Metrics: translation/rotation RMSE, the paper's
+    Fig. 6 axes.
+  * Eye-gaze: MLP regressor -> 2-D gaze, MSE (Fig. 7).
+  * Classifier (EfficientNet stand-in): small convnet -> 10 classes
+    (Fig. 5/8 accuracy axis).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+__all__ = [
+    "vio_init", "vio_apply", "vio_loss", "gaze_init", "gaze_apply",
+    "classifier_init", "classifier_apply", "classifier_loss",
+]
+
+
+def _mlp_init(key, dims, bias=True):
+    ks = jax.random.split(key, len(dims) - 1)
+    return {f"fc{i}": L.dense_init(ks[i], dims[i], dims[i + 1], bias=bias)
+            for i in range(len(dims) - 1)}
+
+
+def _mlp(p, x, act=jax.nn.gelu):
+    n = len(p)
+    for i in range(n):
+        x = L.dense(p[f"fc{i}"], x)
+        if i < n - 1:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# UL-VIO
+# ---------------------------------------------------------------------------
+
+def vio_init(key, feat_dim: int = 256, imu_rate: int = 10, width: int = 128):
+    ks = jax.random.split(key, 3)
+    return {
+        "visual_enc": _mlp_init(ks[0], (feat_dim, width, width)),
+        "imu_enc": _mlp_init(ks[1], (imu_rate * 6, width, width)),
+        "fusion": _mlp_init(ks[2], (2 * width, width, 6)),
+    }
+
+
+def vio_apply(p, batch: Dict) -> jax.Array:
+    v = _mlp(p["visual_enc"], batch["visual"])
+    i = _mlp(p["imu_enc"], batch["imu"].reshape(batch["imu"].shape[0], -1))
+    return _mlp(p["fusion"], jnp.concatenate([v, i], -1))
+
+
+def vio_loss(p, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    pred = vio_apply(p, batch)
+    err = pred - batch["pose"]
+    t_rmse = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(err[:, :3]), -1)))
+    r_rmse = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(err[:, 3:]), -1)))
+    loss = jnp.mean(jnp.square(err))
+    return loss, {"t_rmse": t_rmse, "r_rmse": r_rmse}
+
+
+# ---------------------------------------------------------------------------
+# Eye gaze
+# ---------------------------------------------------------------------------
+
+def gaze_init(key, feat_dim: int = 128, width: int = 128):
+    return {"mlp": _mlp_init(key, (feat_dim, width, width, 2))}
+
+
+def gaze_apply(p, feats: jax.Array) -> jax.Array:
+    return _mlp(p["mlp"], feats)
+
+
+# ---------------------------------------------------------------------------
+# Object classification (EfficientNet-lite stand-in convnet)
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, k, cin, cout):
+    scale = 1.0 / (k * k * cin) ** 0.5
+    return {"w": jax.random.uniform(key, (k, k, cin, cout), jnp.float32,
+                                    -scale, scale),
+            "bias": jnp.zeros((cout,), jnp.float32)}
+
+
+def _conv(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["bias"]
+
+
+def classifier_init(key, n_classes: int = 10, width: int = 32):
+    ks = jax.random.split(key, 5)
+    return {
+        "conv0": _conv_init(ks[0], 3, 3, width),
+        "conv1": _conv_init(ks[1], 3, width, width * 2),
+        "conv2": _conv_init(ks[2], 3, width * 2, width * 4),
+        "head": L.dense_init(ks[3], width * 4, n_classes, bias=True),
+    }
+
+
+def classifier_apply(p, images: jax.Array) -> jax.Array:
+    """images: (B, H, W, 3) -> logits (B, n_classes)."""
+    x = jax.nn.relu(_conv(p["conv0"], images, 2))
+    x = jax.nn.relu(_conv(p["conv1"], x, 2))
+    x = jax.nn.relu(_conv(p["conv2"], x, 2))
+    x = jnp.mean(x, axis=(1, 2))
+    return L.dense(p["head"], x)
+
+
+def classifier_loss(p, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits = classifier_apply(p, batch["images"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], -1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return ce, {"acc": acc}

@@ -1,0 +1,303 @@
+"""Attention-free sequence mixers: Mamba (for Jamba) and RWKV-6 "Finch".
+
+Both use chunked sequential scans: an outer ``lax.scan`` over sequence
+chunks (optionally remat'ed -- the checkpoint boundary is the recurrent
+state, so backward recomputes one chunk at a time) and an inner step scan.
+Training state never materializes (B, S, inner, state); only (S/chunk)
+boundary states persist, which is what makes the 500k-token cells
+tractable -- these are the sub-quadratic architectures the long_500k
+shape is assigned to.
+
+Decode is a single O(1) state update -- no KV cache at all (the paper's
+memory-bandwidth argument is strongest here: state + packed weights are
+the whole working set).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from . import layers as L
+
+__all__ = [
+    "mamba_init", "mamba_apply", "mamba_decode", "mamba_state_init",
+    "rwkv_init", "rwkv_time_mix", "rwkv_channel_mix", "rwkv_state_init",
+    "rwkv_decode",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6 selective SSM)
+# ---------------------------------------------------------------------------
+
+def _dt_rank(d_model: int) -> int:
+    return max(1, math.ceil(d_model / 16))
+
+
+def mamba_init(key, cfg):
+    d, ds = cfg.d_model, cfg.mamba_d_state
+    din = cfg.mamba_expand * d
+    rank = _dt_rank(d)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": L.dense_init(ks[0], d, 2 * din),
+        "conv_w": jax.random.normal(ks[1], (cfg.mamba_d_conv, din),
+                                    jnp.float32) * 0.1,
+        "conv_bias": jnp.zeros((din,), jnp.float32),
+        "x_proj": L.dense_init(ks[2], din, rank + 2 * ds),
+        "dt_proj": L.dense_init(ks[3], rank, din, bias=True),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (din, ds))),
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "out_proj": L.dense_init(ks[4], din, d),
+    }
+
+
+def _causal_conv(x, w, b, init_state=None):
+    """Depthwise causal conv along seq. x: (B,S,din); w: (K,din)."""
+    k = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(k))
+    return out + b.astype(x.dtype), xp[:, -(k - 1):]
+
+
+def _mamba_scan(dt, bmat, cmat, xin, a, h0, chunk: int, remat: bool):
+    """Selective scan. dt/xin: (B,S,din); bmat/cmat: (B,S,ds); a: (din,ds).
+
+    Returns (y (B,S,din), h_final (B,din,ds))."""
+    bsz, s, din = xin.shape
+    ds = bmat.shape[-1]
+    nchunks = max(s // chunk, 1)
+    chunk = s // nchunks
+
+    def step(h, xs):
+        dt_t, b_t, c_t, x_t = xs  # (B,din),(B,ds),(B,ds),(B,din)
+        hbar = jnp.exp(dt_t[..., None] * a)                   # (B,din,ds)
+        h = hbar * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    def chunk_body(h, xs):
+        dt_c, b_c, c_c, x_c = xs  # (chunk, B, ...)
+        h, y = jax.lax.scan(step, h, (dt_c, b_c, c_c, x_c))
+        return h, y
+
+    if remat:
+        chunk_body = jax.checkpoint(chunk_body)
+
+    def to_chunks(t):
+        return t.swapaxes(0, 1).reshape(nchunks, chunk, *t.shape[:1],
+                                        *t.shape[2:])
+
+    xs = tuple(map(to_chunks, (dt, bmat, cmat, xin)))
+    h, y = jax.lax.scan(chunk_body, h0, xs)
+    y = y.reshape(s, bsz, din).swapaxes(0, 1)
+    return y, h
+
+
+def mamba_state_init(cfg, batch: int):
+    din = cfg.mamba_expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, din, cfg.mamba_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, din), jnp.float32),
+    }
+
+
+def _mamba_core(p, x, cfg, conv_state=None):
+    din = cfg.mamba_expand * cfg.d_model
+    rank = _dt_rank(cfg.d_model)
+    xz = L.dense(p["in_proj"], x)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, "batch", "seq", "ff")
+    xin, new_conv = _causal_conv(xin, p["conv_w"], p["conv_bias"], conv_state)
+    xin = jax.nn.silu(xin)
+    dbl = L.dense(p["x_proj"], xin)
+    dt, bmat, cmat = jnp.split(dbl, [rank, rank + cfg.mamba_d_state], -1)
+    dt = jax.nn.softplus(L.dense(p["dt_proj"], dt)).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])
+    return xin, z, dt, bmat.astype(jnp.float32), cmat.astype(jnp.float32), \
+        a, new_conv
+
+
+def mamba_apply(p, x, cfg, state=None):
+    """x: (B,S,D) -> (out, new_state). Training / prefill path."""
+    bsz = x.shape[0]
+    if state is None:
+        state = mamba_state_init(cfg, bsz)
+    xin, z, dt, bmat, cmat, a, new_conv = _mamba_core(
+        p, x, cfg, state["conv"])
+    y, h = _mamba_scan(dt, bmat, cmat, xin.astype(jnp.float32), a,
+                       state["h"], cfg.ssm_chunk, cfg.remat != "none")
+    y = (y.astype(x.dtype) + p["d_skip"].astype(x.dtype) * xin)
+    y = y * jax.nn.silu(z)
+    return L.dense(p["out_proj"], y), {"h": h, "conv": new_conv}
+
+
+def mamba_decode(p, x, cfg, state):
+    """Single-token step: x (B,1,D)."""
+    xin, z, dt, bmat, cmat, a, new_conv = _mamba_core(
+        p, x, cfg, state["conv"])
+    dt0 = dt[:, 0]
+    hbar = jnp.exp(dt0[..., None] * a)
+    h = hbar * state["h"] + (dt0 * xin[:, 0].astype(jnp.float32))[..., None] \
+        * bmat[:, 0][:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0])[:, None]
+    y = (y.astype(x.dtype) + p["d_skip"].astype(x.dtype) * xin)
+    y = y * jax.nn.silu(z)
+    return L.dense(p["out_proj"], y), {"h": h, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch): data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+
+def rwkv_init(key, cfg):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    lora = 64
+    ks = jax.random.split(key, 12)
+    u = jax.random.normal(ks[0], (nh, hd), jnp.float32) * 0.1
+    p = {
+        # token-shift lerp coefficients
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d,), 0.5, jnp.float32),
+        "mix_g": jnp.full((d,), 0.5, jnp.float32),
+        "mix_w": jnp.full((d,), 0.5, jnp.float32),
+        "wr": L.dense_init(ks[1], d, d),
+        "wk": L.dense_init(ks[2], d, d),
+        "wv": L.dense_init(ks[3], d, d),
+        "wg": L.dense_init(ks[4], d, d),
+        "wo": L.dense_init(ks[5], d, d),
+        # data-dependent decay (the Finch contribution): w = exp(-exp(..))
+        "decay_base": jnp.full((d,), -5.0, jnp.float32),
+        "decay_lora_a": {"w": jax.random.normal(ks[6], (d, lora)) * 0.01},
+        "decay_lora_b": {"w": jax.random.normal(ks[7], (lora, d)) * 0.01},
+        "bonus_u": u,
+        "ln_x": {"norm_scale": jnp.ones((d,), jnp.float32)},
+        # channel mix
+        "cm_mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "cm_mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "cm_key": L.dense_init(ks[8], d, cfg.d_ff),
+        "cm_value": L.dense_init(ks[9], cfg.d_ff, d),
+        "cm_receptance": L.dense_init(ks[10], d, d),
+    }
+    return p
+
+
+def rwkv_state_init(cfg, batch: int):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    return {
+        "tm_state": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "tm_xprev": jnp.zeros((batch, d), jnp.float32),
+        "cm_xprev": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _shift(x, xprev):
+    """x: (B,S,D); xprev: (B,D) boundary token. Returns x_{t-1} stream."""
+    return jnp.concatenate([xprev[:, None].astype(x.dtype), x[:, :-1]], 1)
+
+
+def _wkv_scan(r, k, v, w, u, s0, chunk: int, remat: bool):
+    """RWKV6 recurrence.  r/k/v/w: (B,S,H,hd); u: (H,hd); s0: (B,H,hd,hd).
+
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1}
+          + k_t v_t^T          (per head; hd_k x hd_v state)."""
+    bsz, s, nh, hd = r.shape
+    nchunks = max(s // chunk, 1)
+    chunk = s // nchunks
+
+    def step(state, xs):
+        r_t, k_t, v_t, w_t = xs  # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       state + u[..., None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    def chunk_body(state, xs):
+        state, y = jax.lax.scan(step, state, xs)
+        return state, y
+
+    if remat:
+        chunk_body = jax.checkpoint(chunk_body)
+
+    def to_chunks(t):  # (B,S,H,hd) -> (nchunks, chunk, B, H, hd)
+        return t.swapaxes(0, 1).reshape(nchunks, chunk, bsz, nh, hd)
+
+    xs = tuple(map(to_chunks, (r, k, v, w)))
+    state, y = jax.lax.scan(chunk_body, s0, xs)
+    y = y.reshape(s, bsz, nh, hd).swapaxes(0, 1)            # (B,S,H,hd)
+    return y, state
+
+
+def _tm_project(p, x, xprev, cfg):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    xp = _shift(x, xprev) if x.shape[1] > 1 else xprev[:, None].astype(x.dtype)
+
+    def lerp(mix):
+        return x + (xp - x) * mix.astype(x.dtype)
+
+    b, s, _ = x.shape
+    r = L.dense(p["wr"], lerp(p["mix_r"])).reshape(b, s, nh, hd)
+    k = L.dense(p["wk"], lerp(p["mix_k"])).reshape(b, s, nh, hd)
+    v = L.dense(p["wv"], lerp(p["mix_v"])).reshape(b, s, nh, hd)
+    g = jax.nn.silu(L.dense(p["wg"], lerp(p["mix_g"])))
+    # data-dependent decay (Finch): w_t = exp(-exp(base + lora(x_w)))
+    xw = lerp(p["mix_w"])
+    dd = L.dense(p["decay_lora_b"],
+                 jnp.tanh(L.dense(p["decay_lora_a"], xw)))
+    logw = p["decay_base"].astype(jnp.float32) + dd.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw)).reshape(b, s, nh, hd)
+    return (r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w, g)
+
+
+def rwkv_time_mix(p, x, cfg, state):
+    """x: (B,S,D) -> (out, new_state)."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    r, k, v, w, g = _tm_project(p, x, state["tm_xprev"], cfg)
+    y, s_new = _wkv_scan(r, k, v, w, p["bonus_u"], state["tm_state"],
+                         cfg.ssm_chunk, cfg.remat != "none")
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = L.rmsnorm(p["ln_x"], y)  # per-channel group norm stand-in
+    out = L.dense(p["wo"], y * g)
+    new_state = dict(state)
+    new_state["tm_state"] = s_new
+    new_state["tm_xprev"] = x[:, -1].astype(jnp.float32)
+    return out, new_state
+
+
+def rwkv_channel_mix(p, x, cfg, state):
+    xp = _shift(x, state["cm_xprev"]) if x.shape[1] > 1 else \
+        state["cm_xprev"][:, None].astype(x.dtype)
+    xk = x + (xp - x) * p["cm_mix_k"].astype(x.dtype)
+    xr = x + (xp - x) * p["cm_mix_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(L.dense(p["cm_key"], xk)))
+    kk = shard(kk, "batch", "seq", "ff")
+    out = jax.nn.sigmoid(L.dense(p["cm_receptance"], xr)) * \
+        L.dense(p["cm_value"], kk)
+    new_state = dict(state)
+    new_state["cm_xprev"] = x[:, -1].astype(jnp.float32)
+    return out, new_state
+
+
+def rwkv_decode(p, x, cfg, state):
+    """Single-token step for both mixes chained by the block in zoo."""
+    return rwkv_time_mix(p, x, cfg, state)

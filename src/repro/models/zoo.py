@@ -1,0 +1,96 @@
+"""Model zoo facade: build/init/apply by ModelConfig + precision planes.
+
+Two precision planes (DESIGN.md §8):
+  * QAT plane    -- ``quantize_params_fake`` fake-quantizes the fp32
+    master tree per the PrecisionPolicy (forward sees low-bit values,
+    grads flow via STE);
+  * serving plane -- ``pack_params`` physically packs weight matrices to
+    low-bit codes (PackedTensor leaves); matmuls then stream packed words,
+    which is what the dry-run memory roofline measures.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import quant
+from ..core import formats as fmt
+from ..core.policy import PrecisionPolicy, flatten_with_paths
+from ..kernels.ops import PackedTensor, pack_tensor
+from . import transformer as T
+
+__all__ = ["init_model", "apply_model", "decode_model", "init_cache",
+           "loss_fn", "quantize_params_fake", "pack_params", "packed_bytes"]
+
+init_model = T.lm_init
+apply_model = T.lm_apply
+decode_model = T.lm_decode
+init_cache = T.init_cache
+loss_fn = T.lm_loss
+
+
+def quantize_params_fake(params, policy: PrecisionPolicy):
+    """QAT plane: fake-quantize each matrix leaf per policy (STE-backed)."""
+    flat = flatten_with_paths(params)
+    specs = {p: policy.format_for(p) for p, _ in flat}
+
+    def rec(node, path=""):
+        if isinstance(node, dict):
+            return {k: rec(v, f"{path}/{k}" if path else k)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v, f"{path}/{i}" if path else str(i))
+                              for i, v in enumerate(node))
+        if node is None:
+            return None
+        spec = specs[path]
+        if spec.kind == "native" or node.ndim < 2:
+            return node
+        return quant.fake_quant(spec, node)
+
+    return rec(params)
+
+
+_PACKABLE_SUFFIXES = ("/w", "experts/gate", "experts/up", "experts/down")
+
+
+def pack_params(params, policy: PrecisionPolicy):
+    """Serving plane: replace weight-matrix leaves with PackedTensors.
+
+    Only true weight matrices are packed (``.../w`` dense weights and the
+    stacked expert tensors); biases / norms / states stay dense even when
+    their stacked form happens to be 2-D.  Stacked (layer/expert) weights
+    pack per 2-D slice along the last axis, so ``lax.scan`` slices the
+    packed leaves exactly like the dense ones.
+    """
+
+    def rec(node, path=""):
+        if isinstance(node, dict):
+            return {k: rec(v, f"{path}/{k}" if path else k)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v, f"{path}/{i}" if path else str(i))
+                              for i, v in enumerate(node))
+        if node is None:
+            return None
+        if not any(path.endswith(sfx) for sfx in _PACKABLE_SUFFIXES) \
+                or node.ndim < 2:
+            return node
+        spec = policy.format_for(path)
+        if spec.kind == "native":
+            return node
+        return pack_tensor(spec, node)
+
+    return rec(params)
+
+
+def packed_bytes(params, policy: PrecisionPolicy) -> int:
+    return policy.model_bytes(params)
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(l.shape)) for _, l in flatten_with_paths(params))

@@ -1,0 +1,2 @@
+from .adamw import adamw_init, adamw_update, OptConfig  # noqa: F401
+from .schedules import warmup_cosine  # noqa: F401

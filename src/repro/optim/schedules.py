@@ -1,0 +1,20 @@
+"""LR schedules (pure functions of the step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant"]
+
+
+def warmup_cosine(step, base_lr: float, warmup: int, total: int,
+                  min_ratio: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, base_lr * cos)
+
+
+def constant(step, base_lr: float):
+    return base_lr

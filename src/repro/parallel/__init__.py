@@ -1,0 +1,1 @@
+from . import sharding, collectives, pipeline  # noqa: F401

@@ -1,0 +1,299 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Models annotate activations with *logical* axis names via ``shard(x, ...)``
+and parameters get PartitionSpecs from path-based rules.  The mapping
+logical->mesh is held in a context; outside a mesh context every
+annotation is a no-op, so the same model code runs single-device (smoke
+tests) and on the production mesh (dry-run) unchanged.
+
+Axis conventions (single pod mesh ('data','model'), multi-pod
+('pod','data','model')):
+
+  batch   -> ('pod','data')   data parallel across pods + within pod
+  seq     -> None normally; ('pod','data') for SP long-context decode
+  heads/ff/vocab/experts -> 'model'   tensor/expert parallel
+  params: in-dim 'data' (FSDP, within-pod only: DCN-friendly), out-dim
+  'model'; Megatron pairing exceptions shard the *contraction* dim of the
+  second matmul by 'model'.
+
+Any rule whose axis does not evenly divide the tensor dim is dropped for
+that tensor (e.g. kv_heads=8 on a 16-way 'model' axis replicates instead
+of erroring) -- production meshes must never hard-fail on a model shape.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import fnmatch
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "activation_rules", "use_mesh", "current_mesh", "shard", "param_pspec",
+    "param_sharding_tree", "logical_pspec", "batch_pspec", "DATA_AXES",
+]
+
+_ctx = threading.local()
+
+# logical activation axis -> mesh axes (tried in order, dropped if indivisible)
+ACT_RULES = {
+    "batch": ("pod", "data"),
+    "batch_nopod": ("data",),
+    "seq_sp": ("pod", "data"),     # sequence parallelism for long context
+    "seq": (),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "capacity": (),
+    "state": (),
+    None: (),
+}
+
+DATA_AXES = ("pod", "data")
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Make ``mesh`` the ambient mesh for ``shard`` annotations.
+
+    We deliberately do NOT enter jax.sharding.use_mesh (sharding-in-types
+    mode): all jit entry points pass explicit NamedShardings, and
+    ``with_sharding_constraint`` accepts them without an ambient mesh.
+    """
+    prev = getattr(_ctx, "mesh", None)
+    _ctx.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _ctx.mesh = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_ctx, "mesh", None)
+
+
+def _mesh_axes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _resolve(mesh: Mesh, dim: int, logical: Optional[str], used: set):
+    """Logical name -> tuple of mesh axes that evenly divide ``dim``.
+    Axes already claimed by another dim of the same tensor are skipped
+    (a mesh axis may shard at most one dim)."""
+    axes = _mesh_axes(mesh)
+    want = ACT_RULES.get(logical, ())
+    out = []
+    prod = 1
+    for a in want:
+        if a in axes and a not in used and dim % (prod * axes[a]) == 0:
+            out.append(a)
+            prod *= axes[a]
+    used.update(out)
+    if not out:
+        return None
+    return tuple(out) if len(out) > 1 else out[0]
+
+
+def logical_pspec(mesh: Mesh, shape: Sequence[int],
+                  logical: Sequence[Optional[str]]) -> P:
+    assert len(shape) == len(logical), (shape, logical)
+    used: set = set()
+    return P(*[_resolve(mesh, d, l, used) for d, l in zip(shape, logical)])
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain activation sharding by logical names (no-op without mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_pspec(mesh, x.shape, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    axes = [a for a in DATA_AXES if a in mesh.axis_names]
+    return P(tuple(axes) if len(axes) > 1 else axes[0])
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path + shape based)
+# ---------------------------------------------------------------------------
+
+# paths whose *contraction* dim is model-sharded (Megatron row-parallel:
+# the second matmul of each pair)
+_ROW_PARALLEL = ("*wo*", "*down*", "*out_proj*", "*o_proj*", "*w2*")
+# paths that are expert-stacked: leading (post-layer-stack) dim is experts
+_EXPERT = ("*experts*",)
+# paths stacked over layers by scan (leading dim = n_layers)
+_LAYER_STACKED = ("layers/*", "*/layers/*", "groups/*", "*/groups/*")
+# embedding tables: (vocab, embed).  lm_head is (embed, vocab) -- the
+# DEFAULT column-parallel rule (in->data, out->model) is the correct one
+# (listing it here sharded d_model as if it were vocab and forced a
+# data->model reshard of the logits; §Perf it2).
+_EMBED = ("*embedding*", "*embed/table*")
+# 1-D / small params: replicate ('*scales*'/'*mask*': PackedTensor aux)
+_REPLICATED_SUFFIX = ("*norm*", "*bias*", "*alpha*", "*scale*", "*dt*",
+                      "*decay*", "*a_log*", "*conv*", "*mask*", "*mix_*",
+                      "*bonus*", "*count*")
+
+
+def _match(path: str, pats) -> bool:
+    return any(fnmatch.fnmatch(path, p) for p in pats)
+
+
+def param_pspec(mesh: Mesh, path: str, shape: Sequence[int]) -> P:
+    """PartitionSpec for one parameter from its path + shape."""
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    specs: list = [None] * nd
+    dims = list(range(nd))
+    if _match(path, _LAYER_STACKED) and nd >= 2:
+        dims = dims[1:]  # leading layer-stack dim: never sharded
+    if _match(path, _REPLICATED_SUFFIX) or len(dims) <= 1:
+        return P(*specs)
+    axes = _mesh_axes(mesh)
+
+    def fit(dim_idx: int, axis: str) -> bool:
+        return axis in axes and shape[dim_idx] % axes[axis] == 0 and \
+            specs[dim_idx] is None and axis not in specs
+
+    if _match(path, _EXPERT):
+        # (E, in, out): EP on experts, FSDP on in-dim
+        if fit(dims[0], "model"):
+            specs[dims[0]] = "model"
+        if len(dims) >= 2 and fit(dims[1], "data"):
+            specs[dims[1]] = "data"
+        return P(*specs)
+    if _match(path, _EMBED):
+        # (vocab, embed): TP on vocab, FSDP on embed
+        if fit(dims[0], "model"):
+            specs[dims[0]] = "model"
+        if len(dims) >= 2 and fit(dims[-1], "data"):
+            specs[dims[-1]] = "data"
+        return P(*specs)
+    if _match(path, _ROW_PARALLEL):
+        # (in, out): contraction dim on 'model', out on 'data'
+        if fit(dims[0], "model"):
+            specs[dims[0]] = "model"
+        if fit(dims[-1], "data"):
+            specs[dims[-1]] = "data"
+        return P(*specs)
+    # default column-parallel: in-dim FSDP('data'), out-dim TP('model')
+    if fit(dims[-1], "model"):
+        specs[dims[-1]] = "model"
+    if fit(dims[0], "data"):
+        specs[dims[0]] = "data"
+    return P(*specs)
+
+
+def param_sharding_tree(mesh: Mesh, params):
+    """Pytree of NamedShardings matching ``params`` (works on
+    ShapeDtypeStructs too, for .lower()).  PackedTensor nodes become
+    PackedTensors holding shardings (same pytree structure)."""
+    from ..core.policy import flatten_with_paths
+
+    flat = flatten_with_paths(params)
+    specs = {p: NamedSharding(mesh, param_pspec(mesh, p, v.shape))
+             for p, v in flat}
+
+    def rebuild(node, path=""):
+        if isinstance(node, dict):
+            return {k: rebuild(v, f"{path}/{k}" if path else k)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [rebuild(v, f"{path}/{i}" if path else str(i))
+                 for i, v in enumerate(node)]
+            return type(node)(t)
+        if node is None:
+            return None
+        if hasattr(node, "words") and hasattr(node, "scales"):
+            return type(node)(
+                words=specs[f"{path}/words"],
+                scales=specs[f"{path}/scales"],
+                mask=specs[f"{path}/mask"],
+                shape=node.shape, spec=node.spec)
+        return specs[path]
+
+    return rebuild(params)
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache sharding rules
+# ---------------------------------------------------------------------------
+
+def cache_pspec(mesh: Mesh, path: str, shape: Sequence[int],
+                batch: int) -> P:
+    """Sharding for KV-cache / SSM-state leaves (stacked over layers on
+    dim 0).  Batch dim shards on ('pod','data') when divisible; for
+    global_batch too small (long_500k: B=1) the *sequence* dim takes the
+    data axes instead -- sequence parallelism for long-context decode."""
+    nd = len(shape)
+    specs: list = [None] * nd
+    axes = _mesh_axes(mesh)
+
+    def fit_axes(dim_idx, names):
+        got = []
+        prod = 1
+        for a in names:
+            if a in axes and shape[dim_idx] % (prod * axes[a]) == 0:
+                got.append(a)
+                prod *= axes[a]
+        return got
+
+    # find batch dim: first dim equal to batch (after the layer-stack dim)
+    bdim = None
+    for i in range(1, nd):
+        if shape[i] == batch:
+            bdim = i
+            break
+    data_axes = [a for a in DATA_AXES if a in axes]
+    placed_data = False
+    if bdim is not None:
+        got = fit_axes(bdim, data_axes)
+        if got:
+            specs[bdim] = tuple(got) if len(got) > 1 else got[0]
+            placed_data = True
+    if not placed_data and nd >= 3:
+        # SP fallback: shard the longest remaining dim (the seq axis)
+        cand = max(range(1, nd), key=lambda i: shape[i])
+        got = fit_axes(cand, data_axes)
+        if got and specs[cand] is None:
+            specs[cand] = tuple(got) if len(got) > 1 else got[0]
+    # model axis on the innermost (head/feature) dim that divides --
+    # iterate from the last dim so seq dims are the last resort
+    if "model" in axes:
+        for i in reversed(range(1, nd)):
+            if specs[i] is None and shape[i] % axes["model"] == 0:
+                specs[i] = "model"
+                break
+    return P(*specs)
+
+
+def cache_sharding_tree(mesh: Mesh, cache, batch: int):
+    from ..core.policy import flatten_with_paths
+
+    flat = flatten_with_paths(cache)
+    specs = {p: NamedSharding(mesh, cache_pspec(mesh, p, v.shape, batch))
+             for p, v in flat}
+
+    def rebuild(node, path=""):
+        if isinstance(node, dict):
+            return {k: rebuild(v, f"{path}/{k}" if path else k)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rebuild(v, f"{path}/{i}" if path else str(i))
+                              for i, v in enumerate(node))
+        if node is None:
+            return None
+        return specs[path]
+
+    return rebuild(cache)

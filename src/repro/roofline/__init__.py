@@ -1,0 +1,3 @@
+from .hw import TPU_V5E  # noqa: F401
+from .analysis import (collective_stats, roofline_terms, model_flops,
+                       summarize_cell)  # noqa: F401

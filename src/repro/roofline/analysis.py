@@ -1,0 +1,223 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / (chips * peak)        [cost_analysis]
+  memory term     = HLO_bytes / (chips * hbm_bw)      [cost_analysis]
+  collective term = wire_bytes / (chips * ici_bw)     [parsed from HLO]
+
+Empirics on this JAX/XLA (verified in-session): ``compiled.cost_analysis()``
+reports *per-device* flops/bytes for SPMD programs, so the division by
+``chips`` is already done -- terms use the per-device numbers directly.
+Collectives appear only in ``compiled.as_text()`` (post-partitioner), with
+per-device shard shapes; we record both the spec's operand-sum and a
+wire-model estimate (all-gather receives result-operand bytes; all-reduce
+moves ~2x operand in a ring; reduce-scatter operand-result).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .hw import HW, TPU_V5E
+
+__all__ = ["collective_stats", "roofline_terms", "model_flops",
+           "summarize_cell", "active_param_count", "total_param_count"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<rshape>\S+)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+\d+(?:\d+)?)\[(?P<dims>[\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective byte counts by op type, from compiled HLO."""
+    out: Dict[str, float] = {k: 0.0 for k in (
+        "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute")}
+    count = 0
+    operand_sum = 0.0
+    wire_sum = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        count += 1
+        op = m.group("op")
+        rbytes = _shape_bytes(m.group("rshape"))
+        # operand shapes: inside the parens
+        paren = line[m.end():]
+        obytes = _shape_bytes(paren.split(")")[0])
+        if obytes == 0:  # operand referenced by name only; fall back
+            obytes = rbytes
+        out[op] += obytes
+        if op == "all-gather":
+            wire_sum += max(rbytes - obytes, 0)
+        elif op == "all-reduce":
+            wire_sum += 2 * obytes
+        elif op == "reduce-scatter":
+            wire_sum += max(obytes - rbytes, 0)
+        else:
+            wire_sum += obytes
+        operand_sum += obytes
+    out["count"] = float(count)
+    out["operand_bytes"] = operand_sum
+    out["wire_bytes"] = wire_sum
+    return out
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top-k + shared experts only)."""
+    if not cfg.n_experts:
+        return cfg.param_count()
+    active = dataclasses.replace(
+        cfg,
+        n_experts=cfg.experts_per_tok,
+        # shared experts / dense residual stay (they are always-on)
+    )
+    return active.param_count()
+
+
+def total_param_count(cfg: ModelConfig) -> int:
+    return cfg.param_count()
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful model FLOPs for the whole step (global, not per-device).
+
+    train  : 6 * N_active * tokens   (fwd 2x + bwd 4x)
+    prefill: 2 * N_active * tokens
+    decode : 2 * N_active * batch    (one token per sequence)
+             + attention KV reads are memory, not matmul flops
+    """
+    n_act = active_param_count(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.seq_len * shape.global_batch
+    return 2.0 * n_act * shape.global_batch
+
+
+def roofline_terms(cost: Dict[str, float], colls: Dict[str, float],
+                   chips: int, hw: HW = TPU_V5E,
+                   per_device_cost: bool = True) -> Dict[str, float]:
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes accessed", 0.0)
+    if not per_device_cost:
+        flops_dev /= chips
+        bytes_dev /= chips
+    t_compute = flops_dev / hw.peak_flops_bf16
+    t_memory = bytes_dev / hw.hbm_bw
+    t_coll = colls.get("wire_bytes", 0.0) / hw.ici_bw
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "coll_wire_bytes_per_device": colls.get("wire_bytes", 0.0),
+        "coll_operand_bytes_per_device": colls.get("operand_bytes", 0.0),
+        "coll_count": colls.get("count", 0.0),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": max(t_compute, t_memory, t_coll),
+    }
+
+
+def min_traffic_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                      weight_bits: float = 4.5,
+                      quantized_kv: bool = False) -> float:
+    """Analytic minimum HBM traffic for the step (global bytes): the
+    memory-side 'useful work' that no implementation can avoid.
+
+    train  : params f32 read (fwd) + read (bwd) + grad write + opt m/v
+             read+write (8-bit) + one activation-boundary pass per layer.
+    prefill: packed weights once + activation stream per layer.
+    decode : packed weights once + KV cache read (+write 1 token).
+    """
+    n = cfg.param_count()
+    n_act = active_param_count(cfg)
+    toks = shape.seq_len * shape.global_batch
+    d = cfg.d_model
+    if shape.kind == "train":
+        w = n * 4 * 3 + n * 1 * 4            # fp32 fwd+bwd+gradw, 8bit m/v rw
+        acts = cfg.n_layers * toks * d * 2 * 4   # bf16, ~4 boundary tensors
+        return float(w + acts)
+    wbytes = n_act * weight_bits / 8 if shape.kind == "decode" else \
+        n_act * weight_bits / 8
+    if shape.kind == "prefill":
+        acts = cfg.n_layers * toks * d * 2 * 2
+        return float(wbytes + acts)
+    # decode: one token; KV read dominates
+    kv_bits = 8 if quantized_kv else 16
+    n_attn = cfg.n_layers if cfg.attn_every == 0 else \
+        cfg.n_layers // cfg.attn_every
+    if cfg.family == "ssm":
+        kv = shape.global_batch * cfg.n_layers * \
+            (cfg.d_model // max(cfg.rwkv_head_dim, 1)) * \
+            cfg.rwkv_head_dim ** 2 * 4 * 2
+    else:
+        kv = (2 * n_attn * shape.seq_len * cfg.n_kv_heads *
+              cfg.resolved_head_dim * shape.global_batch * kv_bits / 8)
+    return float(wbytes + kv)
+
+
+def summarize_cell(cfg: ModelConfig, shape: ShapeConfig, terms: Dict,
+                   chips: int, hw: HW = TPU_V5E,
+                   weight_bits: float = 4.5,
+                   quantized_kv: bool = False) -> Dict[str, float]:
+    """Attach MODEL_FLOPS ratios + roofline fractions to the raw terms.
+
+    Two fractions are reported:
+      roofline_fraction_compute -- useful-FLOPs time at peak over the
+        dominant term (the classic MFU-style number; apt for train).
+      roofline_fraction -- ideal step time (max of useful-FLOPs time and
+        analytic minimum-traffic time) over the dominant term: meaningful
+        for memory-bound shapes (decode), where the floor is traffic, not
+        FLOPs.  This is the score we hillclimb in §Perf.
+    """
+    mf = model_flops(cfg, shape)
+    hlo_flops_global = terms["flops_per_device"] * chips
+    useful_ratio = mf / hlo_flops_global if hlo_flops_global else 0.0
+    t_useful_c = mf / (chips * hw.peak_flops_bf16)
+    mt = min_traffic_bytes(cfg, shape, weight_bits, quantized_kv)
+    t_useful_m = mt / (chips * hw.hbm_bw)
+    t_ideal = max(t_useful_c, t_useful_m)
+    bound = terms["bound_s"]
+    out = dict(terms)
+    out.update({
+        "model_flops": mf,
+        "useful_flops_ratio": useful_ratio,
+        "min_traffic_bytes": mt,
+        "t_ideal_s": t_ideal,
+        "roofline_fraction_compute": t_useful_c / bound if bound else 0.0,
+        "roofline_fraction": t_ideal / bound if bound else 0.0,
+    })
+    return out

@@ -1,0 +1,25 @@
+"""Target-hardware constants (TPU v5e; per system-prompt numbers)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["HW", "TPU_V5E"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops_bf16: float     # FLOP/s per chip
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per chip (link injection bandwidth)
+    hbm_bytes: float           # capacity per chip
+
+
+TPU_V5E = HW(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    hbm_bytes=16e9,
+)

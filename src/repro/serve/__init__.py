@@ -1,0 +1,1 @@
+from .engine import ServeEngine, build_prefill_step, build_serve_step  # noqa: F401

@@ -1,0 +1,2 @@
+from .loop import TrainState, build_train_step, train_loop, make_policy, \
+    init_state  # noqa: F401

@@ -1,0 +1,113 @@
+"""Quantization stack tests: eq. 3-7, STE, sensitivity, policy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats as F
+from repro.core import quant, sensitivity
+from repro.core.policy import PrecisionPolicy
+
+
+def test_entropy_scale_eq3():
+    w = jnp.asarray([1.0, -1.0, 2.0, -2.0])
+    n = 4
+    expect = 1.5 * (2 ** n - 1) / 2 ** (n - 1)
+    assert np.isclose(float(quant.entropy_scale(w, n)), expect)
+
+
+def test_pact_eq6_is_clip():
+    x = jnp.linspace(-2, 4, 101)
+    alpha = jnp.float32(1.5)
+    y = quant.pact(x, alpha)
+    assert np.allclose(np.asarray(y), np.clip(np.asarray(x), 0, 1.5),
+                       atol=1e-6)
+
+
+def test_pact_quantize_grads():
+    """STE: grad flows inside [0, alpha); alpha collects saturated grads."""
+    alpha = jnp.float32(1.0)
+    x = jnp.asarray([0.3, 0.9, 2.0, -1.0])
+
+    def f(x, a):
+        return jnp.sum(quant.pact_quantize(x, a, 4))
+
+    gx, ga = jax.grad(f, argnums=(0, 1))(x, alpha)
+    assert np.allclose(np.asarray(gx), [1.0, 1.0, 0.0, 0.0])
+    assert float(ga) == 1.0  # one saturated element
+
+
+def test_fake_quant_ste():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(32, 32)),
+                    jnp.float32)
+
+    def f(w):
+        return jnp.sum(jnp.square(quant.fake_quant(F.FP4, w)))
+
+    g = jax.grad(f)(w)
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.sum(jnp.abs(g))) > 0  # gradient passes through
+
+
+def test_fake_quant_error_bounded():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    for spec, tol in [(F.POSIT16, 2e-3), (F.POSIT8, 8e-2), (F.FP4, 0.5)]:
+        q = quant.fake_quant(spec, w)
+        rel = float(jnp.linalg.norm(q - w) / jnp.linalg.norm(w))
+        assert rel < tol, (spec.name, rel)
+
+
+def test_stochastic_rounding_unbiased():
+    key = jax.random.PRNGKey(0)
+    x = jnp.full((20000,), 0.3)  # between posit8 grid points
+    scale = jnp.float32(1.0)
+    out = quant.fake_quant_stochastic(F.POSIT8, x, key, scale)
+    assert abs(float(jnp.mean(out)) - 0.3) < 5e-3
+
+
+def test_sensitivity_ranks_low_rank_layers_low():
+    """A layer whose weights are exactly representable in low-bit formats
+    must score lower than an irregular one (eq. 1-2)."""
+    rng = np.random.default_rng(0)
+    easy = jnp.asarray(
+        np.random.default_rng(1).choice([0.5, 1.0, 2.0], (64, 64)),
+        jnp.float32)  # representable in fp4 exactly
+    hard = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32) * 3)
+    params = {"easy": {"w": easy}, "hard": {"w": hard}}
+    grads = jax.tree.map(jnp.ones_like, params)
+    s = sensitivity.layer_sensitivity(params, grads)
+    assert s["easy/w"] < s["hard/w"]
+
+
+def test_assign_layer_adaptive_hits_budget():
+    rng = np.random.default_rng(0)
+    params = {f"l{i}": {"w": jnp.asarray(
+        rng.normal(size=(64, 64)).astype(np.float32) * (i + 1))}
+        for i in range(6)}
+    grads = jax.tree.map(jnp.ones_like, params)
+    pol = sensitivity.assign_layer_adaptive(params, grads,
+                                            target_avg_bits=6.0)
+    bits = pol.average_bits(params)
+    assert bits <= 6.05, bits
+    # and the policy mixes formats
+    names = {pol.format_for(f"l{i}/w").name for i in range(6)}
+    assert len(names) >= 2
+
+
+def test_policy_model_bytes_paper_ratio():
+    """FP32 -> mixed HFP4/posit8 model-size reduction is ~5-6x, matching
+    the paper's 13.5 MB -> 2.42 MB UL-VIO story."""
+    rng = np.random.default_rng(0)
+    params = {f"blk{i}": {"w": jnp.asarray(
+        rng.normal(size=(256, 256)).astype(np.float32))} for i in range(8)}
+    fp32 = PrecisionPolicy.uniform("fp32").model_bytes(params)
+    mixed = PrecisionPolicy.paper_mixed().model_bytes(params)
+    assert fp32 / mixed > 4.5, (fp32, mixed)
+
+
+def test_policy_json_roundtrip():
+    pol = PrecisionPolicy.paper_mixed()
+    pol2 = PrecisionPolicy.from_json(pol.to_json())
+    assert pol2.rules == pol.rules and pol2.default == pol.default

@@ -1,0 +1,122 @@
+"""End-to-end behaviour tests for the paper's system: the full
+XR-perception pipeline (sensitivity -> layer-adaptive policy -> QAT ->
+packed serving) on the paper's own workloads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import formats as F
+from repro.core.policy import PrecisionPolicy
+from repro.core.sensitivity import assign_layer_adaptive
+from repro.data.vio_data import VIOStream
+from repro.models import perception as P
+from repro.models import zoo
+
+
+def test_vio_trains_and_quantizes():
+    """UL-VIO analogue: train fp32, derive a layer-adaptive policy from
+    eq.1-2, check the quantized model's RMSE degradation stays small
+    (paper: FP4 costs ~0.7pp translation RMSE; mixed is better)."""
+    stream = VIOStream(batch=64)
+    params = P.vio_init(jax.random.PRNGKey(0))
+
+    @jax.jit
+    def step(p, batch, lr):
+        (l, metrics), g = jax.value_and_grad(P.vio_loss, has_aux=True)(
+            p, batch)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g), l, metrics
+
+    for i in range(300):
+        b = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+        params, loss, metrics = step(params, b, 1e-3)
+    t0 = float(metrics["t_rmse"])
+    assert t0 < 0.5, t0  # learned something real
+
+    # calibration gradient -> eq.1-2 policy
+    b = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+    grads = jax.grad(lambda p: P.vio_loss(p, b)[0])(params)
+    policy = assign_layer_adaptive(params, grads, target_avg_bits=6.0)
+
+    from repro.core.qat import quantize_tree
+    qparams = quantize_tree(params, policy)
+    _, m_q = P.vio_loss(qparams, b)
+    _, m_f = P.vio_loss(params, b)
+    # mixed-precision degradation stays small in absolute terms
+    assert float(m_q["t_rmse"]) - float(m_f["t_rmse"]) < 0.1
+
+
+def test_model_size_reduction_paper_claim():
+    """Paper: 13.5 MB (FP32) -> 2.42 MB mixed (~5.6x).  Our policy
+    machinery must reproduce that ratio on a VIO-sized model."""
+    params = P.vio_init(jax.random.PRNGKey(0))
+    fp32 = PrecisionPolicy.uniform("fp32").model_bytes(params)
+    mixed = PrecisionPolicy.paper_mixed().model_bytes(params)
+    assert 4.0 < fp32 / mixed < 9.0, (fp32, mixed)
+
+
+def test_classifier_precision_sweep_monotone():
+    """Fig.5 analogue: accuracy at posit16 >= posit8 >= posit4 (fp4 ~
+    posit4 band), after short training."""
+    rng = np.random.default_rng(0)
+    templates = rng.normal(size=(10, 16, 16, 3)).astype(np.float32)
+
+    def make_batch(n=64):
+        y = rng.integers(0, 10, n)
+        x = templates[y] + rng.normal(size=(n, 16, 16, 3)).astype(
+            np.float32) * 0.5
+        return {"images": jnp.asarray(x), "labels": jnp.asarray(y)}
+
+    from repro.optim import OptConfig, adamw_init, adamw_update
+    params = P.classifier_init(jax.random.PRNGKey(1), width=16)
+    ocfg = OptConfig(weight_decay=0.0)
+    ost = adamw_init(params, ocfg)
+
+    @jax.jit
+    def step(p, ost, batch):
+        (l, m), g = jax.value_and_grad(P.classifier_loss, has_aux=True)(
+            p, batch)
+        p, ost = adamw_update(p, g, ost, 3e-3, ocfg)
+        return p, ost, m
+
+    for _ in range(150):
+        params, ost, m = step(params, ost, make_batch())
+    test_b = make_batch(256)
+    accs = {}
+    from repro.core.qat import quantize_tree
+    for name in ("posit16_1", "posit8_0", "fp4"):
+        q = quantize_tree(params, PrecisionPolicy.uniform(name))
+        _, m = P.classifier_loss(q, test_b)
+        accs[name] = float(m["acc"])
+    _, m = P.classifier_loss(params, test_b)
+    acc_fp32 = float(m["acc"])
+    assert acc_fp32 > 0.8
+    assert accs["posit16_1"] > acc_fp32 - 0.05
+    assert accs["posit8_0"] > acc_fp32 - 0.10
+    # fp4 degrades but stays usable (paper's "near-BF16" claim is after
+    # QAT; post-training here, so the bar is lower)
+    assert accs["fp4"] > 0.4
+
+
+def test_serving_plane_bytes_vs_dense():
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = zoo.init_model(jax.random.PRNGKey(0), cfg)
+    from repro.core.policy import flatten_with_paths
+    dense_bytes = sum(np.prod(l.shape) * 4
+                      for _, l in flatten_with_paths(params))
+    packed = zoo.pack_params(params, PrecisionPolicy.uniform("fp4"))
+    from repro.kernels.ops import PackedTensor
+    packed_bytes = 0
+    def walk(n):
+        global packed_bytes
+        if isinstance(n, dict):
+            for v in n.values():
+                walk(v)
+        elif isinstance(n, PackedTensor):
+            pass
+    # count via flatten (PackedTensor flattens to words/scales/mask)
+    pb = sum(np.prod(l.shape) * l.dtype.itemsize
+             for _, l in flatten_with_paths(packed))
+    assert pb < dense_bytes * 0.45  # embed stays fp32; matrices 8x smaller
