@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.formats import format_by_name as fmt_by_name
 from repro.core.policy import PrecisionPolicy
 from repro.core.qat import quantize_tree
 from repro.core.sensitivity import assign_layer_adaptive
@@ -94,6 +95,29 @@ def run() -> None:
              f"t_rmse={t:.4f};r_rmse={r:.4f};"
              f"dt_pp={100*(t-base[0]):.2f};dr_pp={100*(r-base[1]):.2f};"
              f"bytes={pol.model_bytes(vparams)}")
+
+    # ---- group-size axis: weight-grid error of the packed plane ---------
+    # The per-group (block-wise) scale is the accuracy lever for the
+    # 4-bit formats: finer K-groups track local dynamic range one
+    # per-channel scale cannot.  Measured on the *trained* VIO weights
+    # (heterogeneous rows -- the regime where grouping pays).
+    from repro.core.policy import flatten_with_paths
+    from repro.kernels import ops as kops
+    mats = [leaf for path, leaf in flatten_with_paths(vparams)
+            if getattr(leaf, "ndim", 0) == 2 and leaf.shape[0] >= 64]
+    for prec in ("fp4", "posit4_1"):
+        spec = fmt_by_name(prec)
+        for group in (None, 128, 64, 32):
+            num = den = 0.0
+            for wmat in mats:
+                d = kops.to_dense(kops.pack_tensor(spec, wmat,
+                                                   group_size=group))
+                num += float(jnp.sum(jnp.square(d - wmat)))
+                den += float(jnp.sum(jnp.square(wmat)))
+            rel = float(np.sqrt(num / max(den, 1e-30)))
+            gtag = "chan" if group is None else f"g{group}"
+            emit(f"accuracy/group_scale_{prec}_{gtag}", 0.0,
+                 f"w_rel_rmse={rel:.5f};n_mats={len(mats)}")
 
     # ---- Fig. 7: eye gaze -----------------------------------------------
     wtrue = rng.normal(size=(128, 2)).astype(np.float32) * 0.3

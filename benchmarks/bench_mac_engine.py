@@ -33,16 +33,21 @@ def run() -> None:
     emit("mac_engine/fp32_dense", us,
          f"bytes_w={dense_bytes};AI={flops/ (dense_bytes + M*K*4):.2f}")
 
-    for spec in (F.POSIT16, F.POSIT8, F.POSIT4, F.FP4):
-        t = ops.pack_tensor(spec, w)
-        pm = jax.jit(lambda x, t: ops.packed_matmul(x, t, use_ref=True))
-        us = time_call(pm, x, t)
-        pbytes = t.words.size * 4
-        ai_gain = dense_bytes / pbytes
-        lanes = F.simd_lanes(spec)
-        emit(f"mac_engine/packed_{spec.name}", us,
-             f"bytes_w={pbytes};AI_gain_vs_fp32={ai_gain:.2f};"
-             f"simd_lanes_16b={lanes}")
+    # group-size axis: None = per-channel (the seed configuration whose
+    # throughput must not regress), 64/32 = finer dequant-scale groups
+    # along K (more scale traffic, better accuracy -- see bench_accuracy)
+    for group in (None, 64, 32):
+        for spec in (F.POSIT16, F.POSIT8, F.POSIT4, F.FP4):
+            t = ops.pack_tensor(spec, w, group_size=group)
+            pm = jax.jit(lambda x, t: ops.packed_matmul(x, t, use_ref=True))
+            us = time_call(pm, x, t)
+            pbytes = t.words.size * 4 + t.scales.size * 4
+            ai_gain = dense_bytes / pbytes
+            lanes = F.simd_lanes(spec)
+            gtag = "" if group is None else f"_g{group}"
+            emit(f"mac_engine/packed_{spec.name}{gtag}", us,
+                 f"bytes_w={pbytes};AI_gain_vs_fp32={ai_gain:.2f};"
+                 f"simd_lanes_16b={lanes}")
 
     # quire-exact posit8 accumulation vs naive f32 ordering
     a = jnp.asarray(rng.integers(0, 256, size=(64, 1024)), jnp.int32)

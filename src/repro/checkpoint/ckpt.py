@@ -2,7 +2,10 @@
 
 Layout:
   <dir>/step_<N>/manifest.json   -- paths, shapes, dtypes, data-iterator
-                                    state, mesh shape at save time
+                                    state, mesh shape at save time, and
+                                    versioned PackedTensor aux (format /
+                                    logical shape / scale group) so packed
+                                    serving trees round-trip
   <dir>/step_<N>/<leaf-path>.npy -- one file per pytree leaf
 
 Guarantees exercised by tests:
@@ -20,6 +23,7 @@ writes on a background thread -- the train loop never blocks on disk.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import shutil
@@ -30,6 +34,28 @@ import jax
 import numpy as np
 
 from ..core.policy import flatten_with_paths
+
+
+def _is_packed(node) -> bool:
+    return hasattr(node, "words") and hasattr(node, "scales")
+
+
+def _packed_aux(tree) -> Dict[str, Dict[str, Any]]:
+    """Versioned aux metadata of every PackedTensor node: the layout
+    info (format, logical shape, scale group, version) that the array
+    leaves alone cannot reconstruct.  Keyed by tree path -- the SAME
+    traversal as the leaf files (flatten_with_paths), so keys always
+    line up with restore's rebuild."""
+    return {
+        path: {
+            "spec": node.spec.name,
+            "shape": list(node.shape),
+            "group": node.group,
+            "version": getattr(node, "version", 1),
+        }
+        for path, node in flatten_with_paths(tree, keep_packed=True)
+        if _is_packed(node)
+    }
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
            "CheckpointManager"]
@@ -47,7 +73,8 @@ def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict] = Non
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    manifest: Dict[str, Any] = {"step": step, "leaves": {}, "extra": extra or {}}
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}, "extra": extra or {},
+                                "packed": _packed_aux(tree)}
     for path, leaf in flatten_with_paths(tree):
         arr = np.asarray(leaf)
         fname = _leaf_file(path)
@@ -128,7 +155,7 @@ def restore_checkpoint(directory: str, template, step: Optional[int] = None,
         else:
             restored[path] = jax.numpy.asarray(arr)
 
-    import dataclasses as _dc
+    packed_meta = manifest.get("packed", {})
 
     def rebuild(node, path=""):
         if isinstance(node, dict):
@@ -139,11 +166,27 @@ def restore_checkpoint(directory: str, template, step: Optional[int] = None,
                               for i, v in enumerate(node))
         if node is None:
             return None
-        if _dc.is_dataclass(node) and not isinstance(node, type):
+        if _is_packed(node):
+            # array leaves from disk + aux (spec/shape/group/version) from
+            # the manifest -- the saved layout wins over the template's,
+            # so checkpoints round-trip across layout evolution
+            new = dataclasses.replace(node,
+                                      words=restored[f"{path}/words"],
+                                      scales=restored[f"{path}/scales"],
+                                      mask=restored[f"{path}/mask"])
+            meta = packed_meta.get(path)
+            if meta is not None:
+                from ..core.formats import format_by_name
+                new = dataclasses.replace(
+                    new, spec=format_by_name(meta["spec"]),
+                    shape=tuple(meta["shape"]), group=meta.get("group"),
+                    version=meta.get("version", 1))
+            return new
+        if dataclasses.is_dataclass(node) and not isinstance(node, type):
             return type(node)(**{
                 f.name: rebuild(getattr(node, f.name),
                                 f"{path}/{f.name}" if path else f.name)
-                for f in _dc.fields(node)})
+                for f in dataclasses.fields(node)})
         return restored[path]
 
     return rebuild(template), manifest["extra"], step

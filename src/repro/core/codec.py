@@ -1,0 +1,191 @@
+"""Codec registry -- the single dispatch point of the packed-weight data
+plane.
+
+Every consumer of a ``FormatSpec`` (QAT fake-quant, the packed serving
+plane, Pallas kernels, gradient/optimizer compression) goes through a
+``Codec`` obtained from :func:`get_codec`.  A codec owns the three
+operations of the RMMEC datapath:
+
+  encode   : float -> raw int32 codes (the format's bit patterns)
+  decode   : raw codes -> float (NaR/NaN codes -> 0.0, the hardware
+             exception path: the paper's input-processing stage feeds
+             zero to the accumulator on exceptional operands)
+  quantize : decode . encode -- round-trip onto the format's value grid
+
+Two implementations back each codec and the *codec* picks between them;
+callers never do:
+
+  * table path      -- exact ``searchsorted`` over the enumerated code
+    values (``formats.encode`` / ``formats.code_values``).  Used for
+    small concrete tensors where exactness and debuggability win.
+  * algorithmic path -- branch-free integer bit manipulation
+    (``formats.encode_bits`` / ``formats.decode_bits``).  Used under
+    tracing (jit / Pallas kernel bodies, where a 64K-entry gather would
+    thrash VMEM) and for large tensors (where a table broadcast would
+    blow memory).  Validated code-for-code identical to the table path
+    by tests/test_formats.py.
+
+New format kinds register with :func:`register_codec`; ``FormatSpec.kind``
+is the registry key, so adding a kind touches this module only -- no
+consumer grows another ``if spec.kind == ...`` fork.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import formats as fmt
+from .formats import FormatSpec
+
+__all__ = ["Codec", "get_codec", "register_codec", "encode", "decode",
+           "quantize"]
+
+_REGISTRY: Dict[str, Type["Codec"]] = {}
+
+# Above this many elements the table path's gather/broadcast costs more
+# than the branch-free integer pipeline; below it, exactness is free.
+_TABLE_MAX_ELEMS = 1 << 16
+
+
+def register_codec(kind: str) -> Callable[[Type["Codec"]], Type["Codec"]]:
+    """Class decorator: route ``FormatSpec.kind == kind`` to this codec."""
+    def deco(cls: Type["Codec"]) -> Type["Codec"]:
+        _REGISTRY[kind] = cls
+        return cls
+    return deco
+
+
+@functools.lru_cache(maxsize=None)
+def get_codec(spec: FormatSpec) -> "Codec":
+    """The codec for ``spec`` (cached; codecs are stateless)."""
+    try:
+        cls = _REGISTRY[spec.kind]
+    except KeyError:
+        raise ValueError(f"no codec registered for format kind {spec.kind!r}"
+                         ) from None
+    return cls(spec)
+
+
+class Codec:
+    """encode/decode/quantize for one ``FormatSpec``.
+
+    Subclasses provide the algorithmic primitives; the base class owns
+    the table path and the internal table-vs-algorithmic dispatch.
+    """
+
+    def __init__(self, spec: FormatSpec):
+        self.spec = spec
+
+    # -- internal dispatch --------------------------------------------------
+    def _prefer_table(self, x) -> bool:
+        """Table path only for small *concrete* arrays: anything traced
+        (jit, vmap, Pallas kernel bodies) takes the branch-free path."""
+        if isinstance(x, jax.core.Tracer):
+            return False
+        size = getattr(x, "size", None)
+        return size is not None and size <= _TABLE_MAX_ELEMS
+
+    # -- algorithmic primitives (overridden per kind) -----------------------
+    def _encode_alg(self, x: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def _decode_alg(self, codes: jax.Array, dtype) -> jax.Array:
+        raise NotImplementedError
+
+    # -- table primitives ---------------------------------------------------
+    @functools.cached_property
+    def _decode_table(self) -> np.ndarray:
+        """Value of every code with the hardware exception semantics
+        (NaR/NaN codes decode to 0.0)."""
+        vals = fmt.code_values(self.spec)
+        return np.where(np.isfinite(vals), vals, 0.0).astype(np.float32)
+
+    # -- public API ---------------------------------------------------------
+    def encode(self, x: jax.Array) -> jax.Array:
+        """float -> nearest raw code (int32); NaN -> NaR; saturating."""
+        if self._prefer_table(x):
+            return fmt.encode(self.spec, x)
+        return self._encode_alg(x)
+
+    def decode(self, codes: jax.Array, dtype=jnp.float32) -> jax.Array:
+        """Raw codes -> float.  NaR/NaN codes -> 0 on both paths (codes
+        produced by ``encode`` never contain them)."""
+        if self._prefer_table(codes):
+            table = jnp.asarray(self._decode_table)
+            idx = codes.astype(jnp.int32) & (self.spec.ncodes - 1)
+            return table[idx].astype(dtype)
+        return self._decode_alg(codes, dtype)
+
+    def quantize(self, x: jax.Array) -> jax.Array:
+        """Round-trip onto the format's value grid (same dtype out)."""
+        return self.decode(self.encode(x), dtype=jnp.float32).astype(x.dtype)
+
+
+@register_codec("posit")
+class PositCodec(Codec):
+    def _encode_alg(self, x):
+        return fmt.encode_posit_bits(x, self.spec.bits, self.spec.es)
+
+    def _decode_alg(self, codes, dtype):
+        return fmt.decode_posit_bits(codes, self.spec.bits, self.spec.es,
+                                     dtype)
+
+
+@register_codec("minifloat")
+class MinifloatCodec(Codec):
+    def _encode_alg(self, x):
+        return fmt.encode_minifloat_bits(x, self.spec.ebits, self.spec.mbits,
+                                         self.spec.has_nan)
+
+    def _decode_alg(self, codes, dtype):
+        return fmt.decode_minifloat_bits(codes, self.spec.ebits,
+                                         self.spec.mbits, dtype,
+                                         self.spec.has_nan)
+
+
+@register_codec("fixed")
+class FixedCodec(Codec):
+    def _encode_alg(self, x):
+        spec = self.spec
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) * (1 << spec.frac_bits)),
+                     -(spec.ncodes // 2), spec.ncodes // 2 - 1)
+        return q.astype(jnp.int32) & (spec.ncodes - 1)
+
+    def _decode_alg(self, codes, dtype):
+        spec = self.spec
+        c = codes.astype(jnp.int32) & (spec.ncodes - 1)
+        c = jnp.where(c >= spec.ncodes // 2, c - spec.ncodes, c)
+        return c.astype(dtype) / (1 << spec.frac_bits)
+
+
+@register_codec("native")
+class NativeCodec(Codec):
+    """Native JAX dtypes: encode/decode are dtype casts, no code table."""
+
+    def encode(self, x):
+        return x.astype(self.spec.dtype)
+
+    def decode(self, codes, dtype=jnp.float32):
+        return codes.astype(dtype)
+
+    def quantize(self, x):
+        return x.astype(self.spec.dtype).astype(x.dtype)
+
+
+# -- module-level conveniences (mirror the formats.py free functions) -------
+
+def encode(spec: FormatSpec, x: jax.Array) -> jax.Array:
+    return get_codec(spec).encode(x)
+
+
+def decode(spec: FormatSpec, codes: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return get_codec(spec).decode(codes, dtype)
+
+
+def quantize(spec: FormatSpec, x: jax.Array) -> jax.Array:
+    return get_codec(spec).quantize(x)

@@ -15,16 +15,25 @@ codes to float32 values, ``encode`` maps float32 to the nearest code
 (round-to-nearest, ties-to-even-code -- the posit-standard rounding, which
 coincides with IEEE RNE for minifloats), and ``quantize = decode . encode``.
 
-Two implementations exist and are cross-validated in tests:
+This module is the *primitive* layer: two cross-validated implementations
+of every codec operation, with no opinion about which to use --
 
-  * table-based (this module): enumerate all ``2^bits`` code values with an
-    exact numpy scalar decoder, sort, and use ``searchsorted`` -- exact and
-    simple, used everywhere outside kernels;
-  * algorithmic (``decode_posit_bits`` below): branch-free integer bit
-    manipulation, usable inside Pallas kernels where a 64K-entry gather
-    would thrash VMEM.  This mirrors the paper's RMMEC decode circuitry:
-    the regime/exponent extraction is the "exponent processing" half and
-    the mantissa assembly the reconfigurable-multiplier half.
+  * table-based (``encode`` / ``decode``): enumerate all ``2^bits`` code
+    values with an exact numpy scalar decoder, sort, and use
+    ``searchsorted`` -- exact and simple;
+  * algorithmic (``encode_bits`` / ``decode_bits``): branch-free integer
+    bit manipulation, usable inside Pallas kernels where a 64K-entry
+    gather would thrash VMEM, and on giant tensors where a table
+    broadcast would blow memory.  This mirrors the paper's RMMEC decode
+    circuitry: the regime/exponent extraction is the "exponent
+    processing" half and the mantissa assembly the
+    reconfigurable-multiplier half.
+
+The choice between them lives in ONE place: the codec registry
+(``core.codec``).  Consumers -- QAT, the packed serving plane, kernels,
+gradient/optimizer compression -- call ``codec.encode/decode/quantize``
+and never pick a path; only this module's tests and the codec registry
+itself touch the per-path functions directly.
 """
 
 from __future__ import annotations

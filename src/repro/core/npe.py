@@ -20,6 +20,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import codec
 from . import formats as fmt
 from .formats import FormatSpec
 from .packing import lanes_per_word, unpack
@@ -60,8 +61,8 @@ def simd_mac(acc: jax.Array, a_codes: jax.Array, b_codes: jax.Array,
     gating (zeros feed the accumulator unchanged, as in the paper).
 
     Returns (acc, gated_mask)."""
-    a = fmt.decode_bits(spec, a_codes)
-    b = fmt.decode_bits(spec, b_codes)
+    a = codec.decode(spec, a_codes)
+    b = codec.decode(spec, b_codes)
     gated = (a_codes == 0) | (b_codes == 0)
     prod = jnp.where(gated, 0.0, a * b)
     return acc + prod, gated

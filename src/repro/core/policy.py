@@ -25,10 +25,14 @@ from .formats import FormatSpec
 __all__ = ["PrecisionPolicy", "param_paths", "flatten_with_paths"]
 
 
-def flatten_with_paths(tree) -> List[Tuple[str, jax.Array]]:
+def flatten_with_paths(tree, keep_packed: bool = False) \
+        -> List[Tuple[str, jax.Array]]:
     """Flatten a pytree to (slash-path, leaf); dict keys / sequence indices
     become path segments.  PackedTensors flatten into words/scales/mask
-    sub-leaves (so sharding + checkpoint rules see real arrays)."""
+    sub-leaves (so sharding + checkpoint rules see real arrays) -- unless
+    ``keep_packed``, in which case the PackedTensor node itself is the
+    leaf (used by consumers of the packed aux metadata; ONE traversal
+    definition, so paths always agree)."""
     leaves = []
 
     def rec(node, path):
@@ -41,8 +45,11 @@ def flatten_with_paths(tree) -> List[Tuple[str, jax.Array]]:
         elif node is None:
             return
         elif hasattr(node, "words") and hasattr(node, "scales"):
-            rec({"words": node.words, "scales": node.scales,
-                 "mask": node.mask}, path)
+            if keep_packed:
+                leaves.append((path, node))
+            else:
+                rec({"words": node.words, "scales": node.scales,
+                     "mask": node.mask}, path)
         elif dataclasses.is_dataclass(node) and not isinstance(node, type):
             rec({f.name: getattr(node, f.name)
                  for f in dataclasses.fields(node)}, path)
@@ -64,6 +71,11 @@ class PrecisionPolicy:
     ``keep_fp32`` patterns (norms, biases, embeddings by default) always
     stay in fp32 -- mirroring the paper's "minimal layers in higher
     precision" for critical layers.
+
+    ``group_size``: K-group (block-wise) scale granularity of the packed
+    serving plane AND of QAT fake-quant (both planes must share one
+    grid: QAT trains against the grouping it serves with).  ``None`` is
+    per-output-channel (the ``group=K`` special case).
     """
 
     rules: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
@@ -73,6 +85,7 @@ class PrecisionPolicy:
         "*state*", "*decay*", "*router*", "*d_skip*", "*conv_w*", "*a_log*",
         "*lora*", "*mix_*", "*bonus*", "*dt_proj*",
     )
+    group_size: Optional[int] = None
 
     def format_for(self, path: str) -> FormatSpec:
         for pat in self.keep_fp32:
@@ -82,6 +95,14 @@ class PrecisionPolicy:
             if fnmatch.fnmatch(path, pat):
                 return fmt.format_by_name(name)
         return fmt.format_by_name(self.default)
+
+    def group_for(self, path: str) -> Optional[int]:
+        """Scale-group size for one parameter (None = per-channel).
+        Native-format (incl. keep_fp32) leaves never group."""
+        if self.group_size is None:
+            return None
+        return None if self.format_for(path).kind == "native" \
+            else self.group_size
 
     def resolve(self, params) -> Dict[str, FormatSpec]:
         return {p: self.format_for(p) for p, _ in flatten_with_paths(params)}
@@ -96,7 +117,17 @@ class PrecisionPolicy:
             if spec.kind == "native":
                 total += n * jax.dtypes.canonicalize_dtype(spec.dtype).itemsize
             else:
-                total += (n * spec.bits + 7) // 8 + 4  # +4: per-tensor scale
+                total += (n * spec.bits + 7) // 8
+                if len(leaf.shape) >= 2:
+                    # f32 scale per (K-group, out-channel) per slice;
+                    # per-channel is the groups=1 case (same accounting,
+                    # so group-vs-channel byte comparisons are fair)
+                    g = self.group_for(path)
+                    groups = -(-leaf.shape[-2] // g) if g else 1
+                    total += (n // (leaf.shape[-2] * leaf.shape[-1])) \
+                        * groups * leaf.shape[-1] * 4
+                else:
+                    total += 4  # per-tensor scale
         return total
 
     def average_bits(self, params) -> float:
@@ -116,13 +147,15 @@ class PrecisionPolicy:
         return json.dumps({
             "rules": self.rules, "default": self.default,
             "keep_fp32": list(self.keep_fp32),
+            "group_size": self.group_size,
         })
 
     @classmethod
     def from_json(cls, s: str) -> "PrecisionPolicy":
         d = json.loads(s)
         return cls(rules=[tuple(r) for r in d["rules"]], default=d["default"],
-                   keep_fp32=tuple(d["keep_fp32"]))
+                   keep_fp32=tuple(d["keep_fp32"]),
+                   group_size=d.get("group_size"))
 
     # -- convenience constructors ------------------------------------------
     @classmethod

@@ -38,6 +38,6 @@ def quantize_tree(tree, policy: Optional[PrecisionPolicy], prefix: str = ""):
         spec = policy.format_for(path)
         if spec.kind == "native":
             return node
-        return quant.fake_quant(spec, node)
+        return quant.fake_quant(spec, node, group_size=policy.group_for(path))
 
     return rec(tree, prefix)

@@ -26,12 +26,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import codec as codec_mod
 from . import formats as fmt
 from .formats import FormatSpec
 
 __all__ = [
     "entropy_scale", "uniform_quantize", "pact", "pact_quantize",
-    "format_scale", "fake_quant", "fake_quant_stochastic", "max_finite",
+    "format_scale", "group_scales", "expand_group_scales", "fake_quant",
+    "fake_quant_stochastic", "max_finite",
 ]
 
 
@@ -139,11 +141,73 @@ def format_scale(spec: FormatSpec, w: jax.Array, method: str = "auto",
     raise ValueError(method)
 
 
+def _resolve_method(spec: FormatSpec, method: str) -> str:
+    if method == "auto":
+        return "posit_rms" if spec.kind == "posit" else "absmax_po2"
+    return method
+
+
+def group_scales(spec: FormatSpec, w: jax.Array, group_size: Optional[int],
+                 method: str = "auto") -> jax.Array:
+    """Per-(K-group, out-channel) scales for ``w`` (..., K, N): block-wise
+    scaling along the contraction dim, the accuracy lever that makes
+    4-bit formats usable (fine groups track local dynamic range).
+
+    Returns (..., G, N) with G = ceil(K / group_size); ``group_size``
+    None/0 or >= K degenerates to per-channel (G = 1, the ``group=K``
+    special case -- bitwise identical to ``format_scale(axis=-2)``).
+
+    Rows past K (when K is not a multiple of the group) never influence
+    a group's statistic: absmax ignores zero padding; rms/entropy divide
+    by each group's real row count.
+    """
+    *lead, k, n = w.shape
+    if not group_size or group_size >= k:
+        s = format_scale(spec, w, method, axis=-2)
+        # entropy (and any scalar-returning method) broadcasts to the
+        # per-channel (..., 1, N) layout the packed plane stores
+        return jnp.broadcast_to(jnp.asarray(s), tuple(lead) + (1, n))
+    method = _resolve_method(spec, method)
+    g = int(group_size)
+    ngroups = -(-k // g)
+    kp = ngroups * g
+    if kp != k:
+        w = jnp.pad(w, [(0, 0)] * len(lead) + [(0, kp - k), (0, 0)])
+    wg = w.reshape(tuple(lead) + (ngroups, g, n))
+    counts = jnp.clip(k - jnp.arange(ngroups) * g, 1, g).astype(jnp.float32)
+    counts = counts.reshape((1,) * len(lead) + (ngroups, 1))
+    if method == "entropy":
+        mean_abs = jnp.sum(jnp.abs(wg), axis=-2) / counts
+        s = mean_abs * ((2.0 ** spec.bits - 1.0) / (2.0 ** (spec.bits - 1)))
+        return jnp.maximum(s, 1e-30)
+    if method in ("absmax", "absmax_po2"):
+        s = jnp.max(jnp.abs(wg), axis=-2) / max_finite(spec)
+        if method == "absmax_po2":
+            s = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(s, 1e-30))))
+        return jnp.maximum(s, 1e-30)
+    if method == "posit_rms":
+        r = jnp.sqrt(jnp.sum(jnp.square(wg), axis=-2) / counts)
+        s = jnp.exp2(jnp.round(jnp.log2(jnp.maximum(r, 1e-30))))
+        return jnp.maximum(s, 1e-30)
+    raise ValueError(method)
+
+
+def expand_group_scales(scales: jax.Array, group_size: Optional[int],
+                        k: int) -> jax.Array:
+    """(..., G, N) group scales -> per-row multiplier covering ``k`` rows.
+    G == 1 (per-channel) returns as-is (it broadcasts); otherwise each
+    group row is repeated ``group_size`` times and cropped to ``k``."""
+    if scales.shape[-2] == 1:
+        return scales
+    return jnp.repeat(scales, int(group_size), axis=-2)[..., :k, :]
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _fake_quant_core(spec: FormatSpec, x, scale):
-    # algorithmic (branch-free) round-trip: no table gathers, no wide
-    # broadcasts -- safe on billion-element weight tensors
-    return fmt.quantize_bits(spec, x / scale) * scale
+    # the codec picks the algorithmic (branch-free) round-trip under jit:
+    # no table gathers, no wide broadcasts -- safe on billion-element
+    # weight tensors
+    return codec_mod.quantize(spec, x / scale) * scale
 
 
 def _fq_fwd(spec, x, scale):
@@ -164,16 +228,25 @@ _fake_quant_core.defvjp(_fq_fwd, _fq_bwd)
 
 def fake_quant(spec: FormatSpec, x: jax.Array,
                scale: Optional[jax.Array] = None,
-               method: str = "auto") -> jax.Array:
+               method: str = "auto",
+               group_size: Optional[int] = None) -> jax.Array:
     """Quantize-dequantize ``x`` onto ``spec``'s grid with an STE backward.
 
     This is the QAT forward pass: the value distribution the low-bit
-    datapath will see, with master weights staying fp32.
+    datapath will see, with master weights staying fp32.  With
+    ``group_size`` set (and ``x.ndim >= 2``), scales are per K-group per
+    out-channel -- the same grouping the packed serving plane uses, so
+    QAT trains against exactly the grid it serves with.
     """
     if spec.kind == "native":
         return x.astype(spec.dtype).astype(x.dtype)
     if scale is None:
-        scale = jax.lax.stop_gradient(format_scale(spec, x, method))
+        if group_size and x.ndim >= 2:
+            gs = group_scales(spec, x, group_size, method)
+            scale = expand_group_scales(gs, group_size, x.shape[-2])
+        else:
+            scale = format_scale(spec, x, method)
+        scale = jax.lax.stop_gradient(scale)
     return _fake_quant_core(spec, x, scale)
 
 

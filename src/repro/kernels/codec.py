@@ -3,48 +3,70 @@
 Streams packed uint32 words from HBM and writes decoded floats -- the
 input-processing stage of the NPE in isolation.  Used when a consumer
 needs materialized weights (e.g. one-time decode at model load, or
-debugging), and as the unit-bench for decode throughput.
+debugging), and as the unit-bench for decode throughput.  Format decode
+goes through the codec registry (``core.codec``), which under tracing
+always picks the kernel-safe branch-free path.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..core import formats as fmt
+from ..core import codec as codec_mod
 from ..core.formats import FormatSpec
 from ..core.packing import lanes_per_word
 
 __all__ = ["dequant_kernel", "dequant_pallas"]
 
 
-def dequant_kernel(w_ref, s_ref, o_ref, *, spec: FormatSpec):
+def dequant_kernel(w_ref, s_ref, o_ref, *, spec: FormatSpec,
+                   group: Optional[int]):
     per = lanes_per_word(spec.bits)
     words = w_ref[...]
     shifts = (jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(spec.bits))
     codes = (words[:, :, None] >> shifts) & jnp.uint32((1 << spec.bits) - 1)
     codes = codes.reshape(words.shape[0], words.shape[1] * per)
-    o_ref[...] = fmt.decode_bits(spec, codes, jnp.float32) * s_ref[...]
+    w = codec_mod.decode(spec, codes, jnp.float32)
+    s = s_ref[...]
+    if group is not None:
+        bk, bn = w.shape
+        s = jnp.broadcast_to(s[:, None, :], (bk // group, group, bn)) \
+            .reshape(bk, bn)
+    o_ref[...] = w * s
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "bk", "bn", "interpret"))
+@functools.partial(jax.jit, static_argnames=("spec", "bk", "bn", "group",
+                                             "interpret"))
 def dequant_pallas(w_words: jax.Array, scales: jax.Array, *,
                    spec: FormatSpec, bk: int = 256, bn: int = 512,
+                   group: Optional[int] = None,
                    interpret: bool = False) -> jax.Array:
-    """(K, N/per) uint32 + (1, N) scales -> (K, N) f32."""
+    """(K, N/per) uint32 + (G, N) scales -> (K, N) f32.
+
+    G = 1 is per-channel; G = K/group gives each K-group its own scale
+    row (``bk`` must be a multiple of ``group``).
+    """
     per = lanes_per_word(spec.bits)
     k, nw = w_words.shape
     n = nw * per
     assert k % bk == 0 and n % bn == 0
+    if group is None:
+        s_spec = pl.BlockSpec((1, bn), lambda i, j: (0, j))
+    else:
+        assert bk % group == 0 and scales.shape[0] == k // group, \
+            (bk, group, scales.shape)
+        s_spec = pl.BlockSpec((bk // group, bn), lambda i, j: (i, j))
     return pl.pallas_call(
-        functools.partial(dequant_kernel, spec=spec),
+        functools.partial(dequant_kernel, spec=spec, group=group),
         grid=(k // bk, n // bn),
         in_specs=[
             pl.BlockSpec((bk, bn // per), lambda i, j: (i, j)),
-            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            s_spec,
         ],
         out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((k, n), jnp.float32),

@@ -27,7 +27,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core import codec as codec_mod
 from ..core import formats as fmt
+
+# renamed across JAX versions (TPUCompilerParams -> CompilerParams)
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
 
 __all__ = ["quire_dot_kernel", "quire_dot_pallas", "QUIRE_FRAC_BITS"]
 
@@ -42,8 +47,8 @@ def quire_dot_kernel(a_ref, b_ref, hi_ref, lo_ref, *, k_steps: int):
         hi_ref[...] = jnp.zeros_like(hi_ref)
         lo_ref[...] = jnp.zeros_like(lo_ref)
 
-    a = fmt.decode_posit_bits(a_ref[...], 8, 0, dtype=jnp.float32)
-    b = fmt.decode_posit_bits(b_ref[...], 8, 0, dtype=jnp.float32)
+    a = codec_mod.decode(fmt.POSIT8, a_ref[...], dtype=jnp.float32)
+    b = codec_mod.decode(fmt.POSIT8, b_ref[...], dtype=jnp.float32)
     p = a * b                                     # exact: <=22 sig bits
     hi = jnp.round(p)                             # integer part, exact
     lo = jnp.round((p - hi) * (2.0 ** QUIRE_FRAC_BITS))  # fractional limb
@@ -85,7 +90,7 @@ def quire_dot_pallas(a_codes: jax.Array, b_codes: jax.Array, *,
             jax.ShapeDtypeStruct((bsz, 1), jnp.int32),
             jax.ShapeDtypeStruct((bsz, 1), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -3,7 +3,8 @@
 Each Pallas kernel is validated against these in tests (shape/dtype sweeps,
 ``interpret=True`` on CPU).  The oracles are deliberately naive and
 readable; ``core.quire`` provides the even-stronger exact-integer oracle
-for the quire kernel.
+for the quire kernel.  Scales may be per-channel (G=1 rows) or per-K-group
+(G rows): the oracles expand them generically.
 """
 
 from __future__ import annotations
@@ -12,17 +13,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import codec as codec_mod
 from ..core import formats as fmt
+from ..core import quant
 from ..core.formats import FormatSpec
 from ..core.packing import unpack
 
 __all__ = ["rmmec_matmul_ref", "quire_dot_ref", "dequant_ref"]
 
 
+def _expand_scales(scales: jax.Array, k_rows: int) -> jax.Array:
+    """(..., G, N) scales -> per-row multiplier over ``k_rows`` decoded
+    rows (G=1 broadcasts; single implementation in core.quant)."""
+    return quant.expand_group_scales(scales, k_rows // scales.shape[-2],
+                                     k_rows)
+
+
 def dequant_ref(w_words: jax.Array, scales: jax.Array, spec: FormatSpec,
                 n: int) -> jax.Array:
     codes = unpack(w_words, spec.bits, n)
-    return fmt.decode(spec, codes).astype(jnp.float32) * scales
+    w = codec_mod.decode(spec, codes).astype(jnp.float32)
+    return w * _expand_scales(scales, codes.shape[-2])
 
 
 def rmmec_matmul_ref(x: jax.Array, w_words: jax.Array, scales: jax.Array,

@@ -8,9 +8,10 @@ re-cut for the HBM->VMEM->MXU hierarchy:
   HBM traffic   : weights live PACKED in HBM (uint32 words holding 8x4b /
                   4x8b / 2x16b codes) -- this is the bandwidth saving.
   VMEM decode   : each weight block is unpacked + decoded *in VMEM* by the
-                  branch-free integer datapath of ``formats.decode_bits``
-                  (the RMMEC analogue; one static mode per compiled kernel,
-                  mirroring the hardware ``prec_sel`` register).
+                  codec registry (``core.codec``), which under tracing
+                  always picks the branch-free integer datapath (the RMMEC
+                  analogue; one static mode per compiled kernel, mirroring
+                  the hardware ``prec_sel`` register).
   power gating  : a per-(K-block, N-block) nonzero mask lets ``pl.when``
                   skip the MXU work of all-zero weight blocks entirely --
                   the dark-silicon reduction, as compute-cycle gating.
@@ -29,18 +30,22 @@ output block is revisited across K steps and used as the accumulator.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core import formats as fmt
+from ..core import codec as codec_mod
 from ..core.formats import FormatSpec
 from ..core.packing import lanes_per_word
 
 __all__ = ["rmmec_matmul_kernel", "rmmec_matmul_pallas", "default_blocks"]
+
+# renamed across JAX versions (TPUCompilerParams -> CompilerParams)
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
 
 
 def default_blocks(spec: FormatSpec) -> Tuple[int, int, int]:
@@ -67,8 +72,17 @@ def _compute_dtype(spec: FormatSpec, x_dtype):
 
 
 def rmmec_matmul_kernel(mask_ref, x_ref, w_ref, s_ref, o_ref, *,
-                        spec: FormatSpec, n_block: int, k_steps: int):
-    """One (bm, bn) output block; K-step accumulation with block gating."""
+                        spec: FormatSpec, n_block: int, k_steps: int,
+                        group: Optional[int]):
+    """One (bm, bn) output block; K-step accumulation with block gating.
+
+    ``group`` None: per-channel scales, applied once at output (the seed
+    path).  ``group`` set: the scale block holds bk/group rows and is
+    applied to the decoded weights *inside* the quire accumulation --
+    each K-block's contribution enters the accumulator already on its
+    own group grid (the scale-accumulate stage of the paper's datapath,
+    at K-group granularity).
+    """
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -86,28 +100,40 @@ def rmmec_matmul_kernel(mask_ref, x_ref, w_ref, s_ref, o_ref, *,
         codes = (words[:, :, None] >> shifts) & jnp.uint32((1 << spec.bits) - 1)
         codes = codes.reshape(words.shape[0], words.shape[1] * per)
         cdt = _compute_dtype(spec, x_ref.dtype)
-        w = fmt.decode_bits(spec, codes, dtype=cdt)  # RMMEC decode, in VMEM
+        # RMMEC decode, in VMEM -- codec picks the branch-free path
+        w = codec_mod.decode(spec, codes, dtype=cdt)
+        if group is not None:
+            # per-group scale inside the accumulation (po2 scales are
+            # exact in bf16, so the fast path keeps its 2x MXU rate)
+            s = s_ref[...].astype(cdt)               # (bk // group, bn)
+            bk, bn = w.shape
+            w = (w.reshape(bk // group, group, bn)
+                 * s[:, None, :]).reshape(bk, bn)
         x = x_ref[...].astype(cdt)
         o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
-    @pl.when(k == k_steps - 1)
-    def _scale():
-        # output processing stage: apply the per-column (exponent-shift)
-        # scale once, after quire accumulation.
-        o_ref[...] = o_ref[...] * s_ref[...].astype(jnp.float32)
+    if group is None:
+        @pl.when(k == k_steps - 1)
+        def _scale():
+            # output processing stage: apply the per-column
+            # (exponent-shift) scale once, after quire accumulation.
+            o_ref[...] = o_ref[...] * s_ref[...].astype(jnp.float32)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("spec", "bm", "bk", "bn", "interpret"),
+    static_argnames=("spec", "bm", "bk", "bn", "group", "interpret"),
 )
 def rmmec_matmul_pallas(x: jax.Array, w_words: jax.Array, scales: jax.Array,
                         mask: jax.Array, *, spec: FormatSpec,
                         bm: int, bk: int, bn: int,
+                        group: Optional[int] = None,
                         interpret: bool = False) -> jax.Array:
     """x:(M,K) float  @  packed w:(K, N/per) uint32  -> (M, N) f32.
 
-    scales: (1, N) f32 per-output-channel dequant scales.
+    scales: (G, N) f32 dequant scales -- G=1 per-output-channel (applied
+            once at output), G=K/group per-(K-group, channel) (applied
+            per K-block inside the accumulation).
     mask:   (K/bk, N/bn) int32 nonzero-block map (0 -> power-gated).
     All dims must already be padded to block multiples (see ops.py).
     """
@@ -115,9 +141,16 @@ def rmmec_matmul_pallas(x: jax.Array, w_words: jax.Array, scales: jax.Array,
     per = lanes_per_word(spec.bits)
     n = w_words.shape[1] * per
     assert m % bm == 0 and kdim % bk == 0 and n % bn == 0, (m, kdim, n)
+    if group is not None:
+        assert bk % group == 0 and scales.shape[0] == kdim // group, \
+            (bk, group, scales.shape)
     grid = (m // bm, n // bn, kdim // bk)
     kernel = functools.partial(rmmec_matmul_kernel, spec=spec,
-                               n_block=bn, k_steps=grid[2])
+                               n_block=bn, k_steps=grid[2], group=group)
+    if group is None:
+        s_spec = pl.BlockSpec((1, bn), lambda i, j, k: (0, j))
+    else:
+        s_spec = pl.BlockSpec((bk // group, bn), lambda i, j, k: (k, j))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -125,11 +158,11 @@ def rmmec_matmul_pallas(x: jax.Array, w_words: jax.Array, scales: jax.Array,
             pl.BlockSpec(mask.shape, lambda i, j, k: (0, 0)),       # gate map
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),          # x
             pl.BlockSpec((bk, bn // per), lambda i, j, k: (k, j)),   # packed w
-            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),           # scales
+            s_spec,                                                  # scales
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

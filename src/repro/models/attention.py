@@ -24,6 +24,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core import codec as codec_mod
 from ..core import formats as fmt
 from ..parallel.sharding import shard
 from . import layers as L
@@ -187,13 +188,13 @@ def quantize_kv(k: jax.Array):
     """Per-(token, head) posit8 quantization of a KV tensor (..., Dh)."""
     s = jnp.max(jnp.abs(k), axis=-1) / 64.0 + 1e-8   # posit8 maxpos = 64
     s = jnp.exp2(jnp.ceil(jnp.log2(s)))
-    codes = fmt.encode_bits(fmt.POSIT8,
-                            (k / s[..., None]).astype(jnp.float32))
+    codes = codec_mod.encode(fmt.POSIT8,
+                             (k / s[..., None]).astype(jnp.float32))
     return codes.astype(jnp.uint8), s.astype(jnp.bfloat16)
 
 
 def dequantize_kv(codes: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
-    return (fmt.decode_bits(fmt.POSIT8, codes.astype(jnp.int32))
+    return (codec_mod.decode(fmt.POSIT8, codes.astype(jnp.int32))
             * scale[..., None].astype(jnp.float32)).astype(dtype)
 
 

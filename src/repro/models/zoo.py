@@ -50,7 +50,7 @@ def quantize_params_fake(params, policy: PrecisionPolicy):
         spec = specs[path]
         if spec.kind == "native" or node.ndim < 2:
             return node
-        return quant.fake_quant(spec, node)
+        return quant.fake_quant(spec, node, group_size=policy.group_for(path))
 
     return rec(params)
 
@@ -83,7 +83,7 @@ def pack_params(params, policy: PrecisionPolicy):
         spec = policy.format_for(path)
         if spec.kind == "native":
             return node
-        return pack_tensor(spec, node)
+        return pack_tensor(spec, node, group_size=policy.group_for(path))
 
     return rec(params)
 

@@ -17,6 +17,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core import codec as codec_mod
 from ..core import formats as fmt
 
 __all__ = ["OptConfig", "adamw_init", "adamw_update"]
@@ -58,14 +59,14 @@ def _q_state(x: jax.Array, moment_dtype: str, sqrt_domain: bool = False):
         blocks = x.reshape(x.shape[:-1] + (last // _BLOCK, _BLOCK))
         s = jnp.max(jnp.abs(blocks), axis=-1) / 64.0 + 1e-30
         s = jnp.exp2(jnp.ceil(jnp.log2(s)))
-        codes = fmt.encode_bits(
+        codes = codec_mod.encode(
             fmt.POSIT8, (blocks / s[..., None]).astype(jnp.float32))
         return {"codes": codes.reshape(x.shape).astype(jnp.int8),
                 "blk_scale": s.astype(jnp.float32)}
     # small / odd-shaped tensors: per-tensor scale
     s = jnp.max(jnp.abs(x)) / 64.0 + 1e-30
     s = jnp.exp2(jnp.ceil(jnp.log2(s)))
-    codes = fmt.encode_bits(fmt.POSIT8, (x / s).astype(jnp.float32))
+    codes = codec_mod.encode(fmt.POSIT8, (x / s).astype(jnp.float32))
     return {"codes": codes.astype(jnp.int8),
             "blk_scale": s.astype(jnp.float32)}
 
@@ -78,7 +79,7 @@ def _dq_state(x, moment_dtype: str, shape=None,
         return x.astype(jnp.float32)
     codes = x["codes"].astype(jnp.int32)
     s = x["blk_scale"]
-    vals = fmt.decode_bits(fmt.POSIT8, codes)
+    vals = codec_mod.decode(fmt.POSIT8, codes)
     if s.ndim:
         blocks = vals.reshape(vals.shape[:-1] + (s.shape[-1], _BLOCK))
         out = (blocks * s[..., None]).reshape(vals.shape)

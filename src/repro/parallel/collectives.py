@@ -22,6 +22,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core import codec as codec_mod
 from ..core import formats as fmt
 
 __all__ = ["compress_tree", "decompress_tree", "error_feedback_update",
@@ -48,8 +49,8 @@ def compress_tree(grads, residuals=None):
     for g, r in zip(leaves, res_leaves):
         g_fb = g + r.astype(g.dtype)
         s = _po2_scale(g_fb)
-        c = fmt.encode_bits(fmt.POSIT8, (g_fb / s).astype(jnp.float32))
-        deq = fmt.decode_bits(fmt.POSIT8, c) * s
+        c = codec_mod.encode(fmt.POSIT8, (g_fb / s).astype(jnp.float32))
+        deq = codec_mod.decode(fmt.POSIT8, c) * s
         codes.append(c.astype(jnp.int8))
         scales.append(s)
         new_res.append((g_fb.astype(jnp.float32) - deq).astype(g.dtype))
@@ -60,7 +61,7 @@ def compress_tree(grads, residuals=None):
 
 def decompress_tree(codes, scales):
     return jax.tree.map(
-        lambda c, s: fmt.decode_bits(fmt.POSIT8, c.astype(jnp.int32)) * s,
+        lambda c, s: codec_mod.decode(fmt.POSIT8, c.astype(jnp.int32)) * s,
         codes, scales)
 
 
@@ -83,7 +84,7 @@ def psum_compressed(grads, axis_name: str, residuals=None):
     # entropy; TPU ICI all-reduces int8 natively -- documented proxy).
     def reduce_one(c, s):
         s_max = jax.lax.pmax(s, axis_name)
-        v = fmt.decode(fmt.POSIT8, c.astype(jnp.int32)) * s
+        v = codec_mod.decode(fmt.POSIT8, c.astype(jnp.int32)) * s
         v = jax.lax.psum(v, axis_name)
         return v, s_max
     flat_c, treedef = jax.tree.flatten(codes)

@@ -24,6 +24,7 @@ of erroring) -- production meshes must never hard-fail on a model shape.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import fnmatch
 import threading
 from typing import Optional, Sequence, Tuple
@@ -139,7 +140,11 @@ _LAYER_STACKED = ("layers/*", "*/layers/*", "groups/*", "*/groups/*")
 # (listing it here sharded d_model as if it were vocab and forced a
 # data->model reshard of the logits; §Perf it2).
 _EMBED = ("*embedding*", "*embed/table*")
-# 1-D / small params: replicate ('*scales*'/'*mask*': PackedTensor aux)
+# 1-D / small params: replicate.  PackedTensor v2 sub-leaves land here:
+# '*scales*' matches the (G, N) group-scale plane and '*mask*' the gating
+# map -- both are tiny next to 'words' and every shard's kernel needs the
+# full N stripe of scales, so replication is the correct layout; 'words'
+# (the packed codes) follow the normal matrix rules via the default path.
 _REPLICATED_SUFFIX = ("*norm*", "*bias*", "*alpha*", "*scale*", "*dt*",
                       "*decay*", "*a_log*", "*conv*", "*mask*", "*mix_*",
                       "*bonus*", "*count*")
@@ -216,11 +221,13 @@ def param_sharding_tree(mesh: Mesh, params):
         if node is None:
             return None
         if hasattr(node, "words") and hasattr(node, "scales"):
-            return type(node)(
+            # keep ALL aux (shape/spec/group/version): the sharding tree
+            # must stay pytree-compatible with the parameter tree
+            return dataclasses.replace(
+                node,
                 words=specs[f"{path}/words"],
                 scales=specs[f"{path}/scales"],
-                mask=specs[f"{path}/mask"],
-                shape=node.shape, spec=node.spec)
+                mask=specs[f"{path}/mask"])
         return specs[path]
 
     return rebuild(params)

@@ -62,6 +62,8 @@ class ServeEngine:
     cfg: ModelConfig
     params: Any
     max_len: int = 2048
+    # accepted for launcher symmetry (the roofline memory model uses it);
+    # decode continues from whatever cache prefill materializes.
     quantized_kv: bool = False
     policy: Optional[PrecisionPolicy] = None
 
@@ -75,11 +77,10 @@ class ServeEngine:
                  temperature: float = 0.0, key=None) -> np.ndarray:
         """tokens: (B, S0) prompt -> (B, S0+steps) completed."""
         b, s0 = tokens.shape
-        cache = zoo.init_cache(self.cfg, b, self.max_len, self.quantized_kv)
         batch = {"tokens": tokens}
-        if self.cfg.family in ("ssm", "hybrid") or True:
-            logits, cache_pf = self._prefill(self.params, batch)
-        cache = cache_pf if cache_pf is not None else cache
+        # prefill is unconditional for every model family: it returns the
+        # populated KV cache / SSM state that decode continues from.
+        logits, cache = self._prefill(self.params, batch)
         cache = self._pad_cache(cache, b)
         out = [np.asarray(tokens)]
         last = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)

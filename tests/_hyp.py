@@ -1,0 +1,24 @@
+"""Optional-hypothesis shim: property tests run when hypothesis is
+installed and are individually skipped (never a collection error) when it
+is not.  Usage: ``from _hyp import given, settings, st``."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ModuleNotFoundError:  # pragma: no cover - exercised without the dep
+    class _Strategies:
+        """Stands in for ``hypothesis.strategies`` at decoration time;
+        the decorated tests are skipped, so strategy values never run."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # skips property tests w/o hypothesis
 
 from repro.core import formats as F
 from repro.core import packing as P

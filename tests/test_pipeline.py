@@ -14,8 +14,12 @@ def test_pipeline_matches_sequential():
     code = textwrap.dedent("""
         import json, jax, numpy as np
         import jax.numpy as jnp
-        mesh = jax.make_mesh((4, 2), ("stage", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        def _mk(shape, axes):
+            try:
+                return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+            except (AttributeError, TypeError):
+                return jax.make_mesh(shape, axes)
+        mesh = _mk((4, 2), ("stage", "data"))
         from repro.parallel.pipeline import pipeline_apply
 
         def stage_fn(p, x):

@@ -27,8 +27,12 @@ def test_param_rules_on_mesh():
     code = textwrap.dedent("""
         import json, jax
         from jax.sharding import PartitionSpec as P
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        def _mk(shape, axes):
+            try:
+                return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+            except (AttributeError, TypeError):
+                return jax.make_mesh(shape, axes)
+        mesh = _mk((2, 4), ("data", "model"))
         from repro.parallel.sharding import param_pspec
         out = {}
         # column-parallel default: in->data, out->model
@@ -80,8 +84,12 @@ def test_train_step_compiles_sharded_and_math_matches():
         s1, m1 = build_train_step(cfg, run)(state, batch)
 
         # sharded: 2-way data, 4-way model
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        def _mk(shape, axes):
+            try:
+                return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+            except (AttributeError, TypeError):
+                return jax.make_mesh(shape, axes)
+        mesh = _mk((2, 4), ("data", "model"))
         step_fn, shard_state = build_train_step(cfg, run, mesh=mesh)
         state2 = init_state(jax.random.PRNGKey(0), cfg, run)
         st_sh = shard_state(state2)
@@ -102,8 +110,12 @@ def test_train_step_compiles_sharded_and_math_matches():
 def test_cache_sharding_rules():
     code = textwrap.dedent("""
         import json, jax
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        def _mk(shape, axes):
+            try:
+                return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+            except (AttributeError, TypeError):
+                return jax.make_mesh(shape, axes)
+        mesh = _mk((2, 4), ("data", "model"))
         from repro.parallel.sharding import cache_pspec
         out = {}
         # kv cache: batch on data, head_dim on model
