@@ -1,0 +1,155 @@
+"""Decode-plane benchmark: quantized-KV flash decode vs the bf16 cache.
+
+The decode roofline is KV + weight bytes per step.  This harness
+measures, on the same model and prompt:
+
+  * tokens/s of ``ServeEngine.generate`` with a bf16 KV cache (baseline)
+    vs the posit8 quantized cache (per-(token,head) and Dh-grouped
+    scales) -- the end-to-end serving numbers;
+  * per-call time of the fused Pallas flash-decode kernel vs the
+    pure-XLA blocked fallback on one attention layer's worth of cache;
+  * MODELED KV bytes/step (``roofline.analysis.decode_kv_bytes``): the
+    quantized cache must move >= 2x fewer bytes than bf16, and the
+    length-aware path must not scale with ``max_len`` when
+    ``pos << max_len`` (the two acceptance claims of the KV plane).
+
+Results go to stdout as the usual ``name,us_per_call,derived`` CSV and
+to BENCH_decode.json at the repo root (the perf-trajectory artifact CI
+refreshes via ``--smoke``).
+
+  PYTHONPATH=src python -m benchmarks.bench_decode [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.policy import PrecisionPolicy
+from repro.kernels.flash_decode import default_kv_block, flash_decode_pallas
+from repro.models import attention as A
+from repro.models import zoo
+from repro.roofline.analysis import decode_kv_bytes
+from repro.serve.engine import ServeEngine
+from .common import emit, time_call
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_decode.json")
+
+
+def _engine_tokens_per_s(cfg, params, toks, steps, max_len, quantized_kv,
+                         policy=None):
+    eng = ServeEngine(cfg, params, max_len=max_len,
+                      quantized_kv=quantized_kv, policy=policy)
+    eng.generate(toks, steps=2)                      # warm the jit caches
+    t0 = time.perf_counter()
+    out = eng.generate(toks, steps=steps)
+    dt = time.perf_counter() - t0
+    assert np.isfinite(out).all()
+    return toks.shape[0] * steps / dt
+
+
+def _kernel_vs_blocked(cfg, max_len, pos):
+    """Per-call time of the fused kernel vs the XLA fallback on one
+    layer's cache (both jitted; CPU runs the kernel in interpret)."""
+    rng = np.random.default_rng(0)
+    b, kh, dh = 2, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = cfg.n_heads // cfg.n_kv_heads
+    q = jnp.asarray(rng.normal(size=(b, kh, g, dh)).astype(np.float32))
+    kv = rng.normal(size=(2, b, max_len, kh, dh)).astype(np.float32)
+    kc, ks = A.quantize_kv(jnp.asarray(kv[0]))
+    vc, vs = A.quantize_kv(jnp.asarray(kv[1]))
+    cache = {"k_codes": kc, "k_scale": ks, "v_codes": vc, "v_scale": vs}
+    interpret = jax.default_backend() != "tpu"
+
+    f_flash = jax.jit(lambda *a: flash_decode_pallas(
+        *a, interpret=interpret))
+    f_block = jax.jit(lambda q_, c_, p_: A.decode_quantized_blocks(q_, c_, p_))
+    pos_j = jnp.int32(pos)
+    us_f = time_call(f_flash, q, kc, ks, vc, vs, pos_j)
+    us_b = time_call(f_block, q, cache, pos_j)
+    np.testing.assert_allclose(
+        np.asarray(f_flash(q, kc, ks, vc, vs, pos_j)),
+        np.asarray(f_block(q, cache, pos_j)), rtol=1e-4, atol=1e-4)
+    return us_f, us_b
+
+
+def run(smoke: bool = False) -> None:
+    cfg = get_config("qwen2-0.5b").reduced()
+    max_len = 256 if smoke else 1024
+    steps = 8 if smoke else 32
+    prompt = 8
+    params = zoo.init_model(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, (2, prompt)), jnp.int32)
+    results = {"config": {"arch": cfg.name, "max_len": max_len,
+                          "steps": steps, "backend": jax.default_backend()}}
+
+    # --- end-to-end serving: bf16 KV vs posit8 KV (per-head + grouped)
+    tps = {}
+    tps["bf16_kv"] = _engine_tokens_per_s(cfg, params, toks, steps, max_len,
+                                          quantized_kv=False)
+    tps["posit8_kv"] = _engine_tokens_per_s(cfg, params, toks, steps, max_len,
+                                            quantized_kv=True)
+    grp = PrecisionPolicy(rules=[], default="fp32",
+                          group_size=cfg.resolved_head_dim // 2)
+    tps["posit8_kv_grouped"] = _engine_tokens_per_s(
+        cfg, params, toks, steps, max_len, quantized_kv=True, policy=grp)
+    for name, v in tps.items():
+        emit(f"decode/generate_{name}", 1e6 / max(v, 1e-9),
+             f"tokens_per_s={v:.1f}")
+    results["tokens_per_s"] = tps
+
+    # --- fused kernel vs XLA blocked fallback, one layer
+    pos = prompt + steps
+    us_f, us_b = _kernel_vs_blocked(cfg, max_len, pos)
+    emit("decode/flash_kernel_layer", us_f, f"pos={pos};max_len={max_len}")
+    emit("decode/blocked_xla_layer", us_b, f"pos={pos};max_len={max_len}")
+    results["kernel_us"] = {"flash": us_f, "blocked": us_b}
+
+    # --- modeled KV bytes/step: the two roofline claims
+    b = int(toks.shape[0])
+    blk = default_kv_block(max_len)
+    bytes_bf16 = decode_kv_bytes(cfg, b, max_len, pos, quantized=False)
+    bytes_q_full = decode_kv_bytes(cfg, b, max_len, pos, quantized=True,
+                                   length_aware=False)
+    bytes_q = decode_kv_bytes(cfg, b, max_len, pos, quantized=True, blk=blk)
+    bytes_q_8x = decode_kv_bytes(cfg, b, 8 * max_len, pos, quantized=True,
+                                 blk=blk)
+    ratio = bytes_bf16 / bytes_q
+    emit("decode/kv_bytes_per_step", 0.0,
+         f"bf16={bytes_bf16:.0f};posit8_full={bytes_q_full:.0f};"
+         f"posit8_lenaware={bytes_q:.0f};gain={ratio:.2f}x")
+    assert bytes_bf16 >= 2 * bytes_q, \
+        "quantized KV decode must move >=2x fewer bytes than the bf16 path"
+    assert bytes_q == bytes_q_8x, \
+        "length-aware decode must not scale with max_len when pos << max_len"
+    results["kv_bytes_per_step"] = {
+        "bf16_full": bytes_bf16, "posit8_full": bytes_q_full,
+        "posit8_lenaware": bytes_q,
+        "posit8_lenaware_8x_maxlen": bytes_q_8x,
+        "gain_vs_bf16": ratio, "block": blk, "pos": pos,
+    }
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    print(f"# wrote {os.path.normpath(OUT_JSON)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few steps (the CI invocation)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,8 @@
   Table IV  -> bench_e2e            (end-to-end packed vs dense serving)
   Fig 5-8   -> bench_accuracy       (precision sweeps on the XR workloads)
   size tbl  -> bench_model_size     (13.5 -> 2.42 MB UL-VIO story)
+  decode    -> bench_decode         (quantized-KV flash decode vs bf16
+                                     cache: tokens/s + KV bytes/step)
 
 Roofline terms for the assigned architectures come from the dry-run
 (launch/dryrun.py), not from CPU wall-clock -- see EXPERIMENTS.md.
@@ -20,16 +22,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single bench (mac_engine|coprocessor|"
-                         "e2e|accuracy|model_size)")
+                         "e2e|accuracy|model_size|decode)")
     args = ap.parse_args()
-    from . import (bench_accuracy, bench_coprocessor, bench_e2e,
-                   bench_mac_engine, bench_model_size)
+    from . import (bench_accuracy, bench_coprocessor, bench_decode,
+                   bench_e2e, bench_mac_engine, bench_model_size)
     benches = {
         "mac_engine": bench_mac_engine.run,
         "coprocessor": bench_coprocessor.run,
         "e2e": bench_e2e.run,
         "model_size": bench_model_size.run,
         "accuracy": bench_accuracy.run,
+        "decode": bench_decode.run,
     }
     print("name,us_per_call,derived")
     failed = []

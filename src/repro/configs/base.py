@@ -61,6 +61,11 @@ class ModelConfig:
                                    # triangular (causal-exact FLOPs)
     attn_scores_f32: bool = True   # False: bf16 scores+softmax (halves
                                    # attention HBM traffic; beyond-paper)
+    decode_impl: str = "blocked"   # quantized-KV decode path:
+                                   # blocked (pure-XLA length-aware
+                                   # fori_loop; portable default) |
+                                   # flash (fused Pallas kernel,
+                                   # kernels/flash_decode -- the TPU path)
     # --- metadata
     sub_quadratic: bool = False    # True -> long_500k cell is runnable
     source: str = ""

@@ -1,0 +1,182 @@
+"""Fused quantized-KV flash-decode kernel -- online softmax over posit8
+KV blocks, dequantized in VMEM.
+
+The decode roofline is KV + weight bytes.  PR 1 stopped paying bf16 for
+the weights; this kernel stops paying it for the KV cache: the posit8
+codes (+ po2 group scales) stream from HBM and are decoded per block
+*inside* the kernel by the codec registry's branch-free path -- the same
+VMEM-decode stage ``rmmec_matmul`` uses for weights, applied to the KV
+plane.  The bf16 cache never exists in HBM.
+
+Grid is (B, Kh, T/blk) with the KV-block axis innermost ('arbitrary'):
+the (G, Dh) output block is revisited across T steps and the online-
+softmax state (f32 accumulator, running max m, normalizer l) lives in
+VMEM scratch, carried across grid steps exactly like the K-step
+accumulator of ``rmmec_matmul``.
+
+Length-aware block skipping: ``pos`` arrives as a scalar-prefetch
+operand, so the KV BlockSpec index maps clamp the T-block index to
+``pos // blk``.  Every grid step past the live prefix maps to the SAME
+HBM block -- Pallas sees an unchanged block index between consecutive
+steps and issues no new DMA -- and ``pl.when`` gates its compute off.  A
+step at position ``pos`` therefore moves ceil((pos+1)/blk) KV blocks
+instead of ``max_len/blk``, so short sequences in a long cache no
+longer pay for ``max_len``.
+
+``attn_decode`` (models/attention.py) carries the pure-XLA analogue (a
+``fori_loop`` over the same blocks) for targets where a Pallas call is
+not portable -- the dry-run's host-compile path and sharded caches --
+mirroring the ``PACKED_USE_KERNEL`` split of the weight plane.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core import codec as codec_mod
+from ..core import formats as fmt
+
+__all__ = ["flash_decode_kernel", "flash_decode_pallas", "default_kv_block"]
+
+# renamed across JAX versions (TPUCompilerParams -> CompilerParams)
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+_NEG_INF = -1e30
+
+
+def default_kv_block(max_len: int) -> int:
+    """Largest KV block size <= 128 that divides ``max_len`` (128 keeps
+    MXU dims aligned while staying fine-grained enough that the live
+    prefix ceil((pos+1)/blk) tracks ``pos``, not ``max_len``)."""
+    for blk in (128, 64, 32, 16, 8, 4, 2):
+        if max_len % blk == 0:
+            return blk
+    return 1
+
+
+def _dequant_block(codes_ref, scale_ref, dh: int, gs: int) -> jax.Array:
+    """(1, blk, 1, Dh) uint8 codes + (1, blk, 1, Gs) scales -> (blk, Dh)
+    f32, decoded in VMEM (codec picks the branch-free path under
+    tracing).  Gs = Dh/group scale columns; Gs=1 broadcasts."""
+    codes = codes_ref[0, :, 0, :].astype(jnp.int32)
+    x = codec_mod.decode(fmt.POSIT8, codes, jnp.float32)
+    s = scale_ref[0, :, 0, :].astype(jnp.float32)
+    if gs == 1:
+        return x * s
+    return x * jnp.repeat(s, dh // gs, axis=-1)
+
+
+def flash_decode_kernel(pos_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                        o_ref, acc_ref, m_ref, l_ref, *,
+                        blk: int, softcap: float, scale: float):
+    """One (B, Kh) cell; online-softmax accumulation over live KV blocks."""
+    t = pl.program_id(2)
+    nt = pl.num_programs(2)
+    pos = pos_ref[0]
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(t * blk <= pos)
+    def _block():
+        dh = q_ref.shape[-1]
+        gs = ks_ref.shape[-1]
+        q = q_ref[0, 0].astype(jnp.float32)               # (G, Dh)
+        k = _dequant_block(kc_ref, ks_ref, dh, gs)        # (blk, Dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, blk)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = t * blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos <= pos, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        m_ref[...] = m_new
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        v = _dequant_block(vc_ref, vs_ref, dh, gs)        # (blk, Dh)
+        pv = jnp.dot(p, v, preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(t == nt - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_ref[...] / l_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("blk", "softcap", "interpret"))
+def flash_decode_pallas(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
+                        v_codes: jax.Array, v_scale: jax.Array,
+                        pos: jax.Array, *, blk: Optional[int] = None,
+                        softcap: float = 0.0,
+                        interpret: bool = False) -> jax.Array:
+    """GQA decode attention straight from posit8 KV codes.
+
+    q                : (B, Kh, G, Dh) float -- one new token's queries,
+                       grouped per KV head.
+    k_codes/v_codes  : (B, T, Kh, Dh) uint8 posit8 codes (T = max_len).
+    k_scale/v_scale  : (B, T, Kh, Gs) po2 dequant scales in the unified
+                       ``quant.group_scales`` layout: Gs = Dh/group
+                       (Gs = 1 is per-(token, head), the group=Dh case).
+    pos              : scalar int32 -- attends to cache slots [0, pos].
+
+    Returns (B, Kh, G, Dh) f32 attention output.
+    """
+    b, kh, g, dh = q.shape
+    t = k_codes.shape[1]
+    gs = k_scale.shape[-1]
+    if blk is None:
+        blk = default_kv_block(t)
+    assert t % blk == 0, (t, blk)
+    nt = t // blk
+
+    def q_im(i, h, tt, pos_ref):
+        return (i, h, 0, 0)
+
+    def kv_im(i, h, tt, pos_ref):
+        # clamp dead blocks onto the last live one: the block index stops
+        # changing, so Pallas re-uses the resident copy (no DMA)
+        return (i, jnp.minimum(tt, pos_ref[0] // blk), h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), q_im),
+            pl.BlockSpec((1, blk, 1, dh), kv_im),
+            pl.BlockSpec((1, blk, 1, gs), kv_im),
+            pl.BlockSpec((1, blk, 1, dh), kv_im),
+            pl.BlockSpec((1, blk, 1, gs), kv_im),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), q_im),
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),   # acc
+            pltpu.VMEM((g, 1), jnp.float32),    # running max m
+            pltpu.VMEM((g, 1), jnp.float32),    # normalizer l
+        ],
+    )
+    kernel = functools.partial(flash_decode_kernel, blk=blk,
+                               softcap=float(softcap),
+                               scale=1.0 / math.sqrt(dh))
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, dh), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos_arr, q, k_codes, k_scale, v_codes, v_scale)

@@ -19,7 +19,8 @@ from ..core import quant
 from ..core.formats import FormatSpec
 from ..core.packing import unpack
 
-__all__ = ["rmmec_matmul_ref", "quire_dot_ref", "dequant_ref"]
+__all__ = ["rmmec_matmul_ref", "quire_dot_ref", "dequant_ref",
+           "flash_decode_ref"]
 
 
 def _expand_scales(scales: jax.Array, k_rows: int) -> jax.Array:
@@ -43,6 +44,32 @@ def rmmec_matmul_ref(x: jax.Array, w_words: jax.Array, scales: jax.Array,
     ignores it.  Handles K-padded packed weights (pad rows are zero)."""
     w = dequant_ref(w_words, scales, spec, n)
     return jnp.dot(x.astype(jnp.float32), w[: x.shape[-1]])
+
+
+def _dequant_kv_ref(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    """(..., Dh) posit8 codes + (..., Gs) scales -> (..., Dh) f32."""
+    dh, gs = codes.shape[-1], scale.shape[-1]
+    x = codec_mod.decode(fmt.POSIT8, codes.astype(jnp.int32), jnp.float32)
+    return x * jnp.repeat(scale.astype(jnp.float32), dh // gs, axis=-1)
+
+
+def flash_decode_ref(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
+                     v_codes: jax.Array, v_scale: jax.Array, pos,
+                     softcap: float = 0.0) -> jax.Array:
+    """Naive full-softmax oracle for the fused flash-decode kernel:
+    dequantize the WHOLE cache, one masked softmax over all of T.
+    Shapes match :func:`..flash_decode.flash_decode_pallas`."""
+    b, kh, g, dh = q.shape
+    k = _dequant_kv_ref(k_codes, k_scale)                # (B, T, Kh, Dh)
+    v = _dequant_kv_ref(v_codes, v_scale)
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32), k)
+    s = s / jnp.sqrt(jnp.float32(dh))
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    tpos = jnp.arange(k_codes.shape[1])
+    s = jnp.where(tpos[None, None, None, :] <= pos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,btkd->bkgd", p, v)
 
 
 def quire_dot_ref(a_codes, b_codes) -> np.ndarray:

@@ -24,7 +24,8 @@ Usage:
   python -m repro.launch.dryrun --all                  # 40-cell baseline
   python -m repro.launch.dryrun --all --multi-pod      # 512-chip pass
   ... [--policy mixed|fp4|posit8_0|bf16|fp32] [--attn-impl triangular]
-      [--quantized-kv] [--opt-dtype posit8] [--tag NAME]
+      [--quantized-kv] [--decode-impl blocked|flash] [--opt-dtype posit8]
+      [--tag NAME]
 """
 
 import argparse
@@ -121,7 +122,8 @@ def _lower_one(cfg, shape, mesh, policy, policy_name, run_kw, quantized_kv):
                                    with_labels=False)
         batch_sh = _batch_shardings(mesh, batch_sds)
         fn = build_prefill_step(
-            cfg, last_logit_only=run_kw.get("last_logit_only", False))
+            cfg, last_logit_only=run_kw.get("last_logit_only", False),
+            quantized_kv=quantized_kv, kv_group=policy.group_size)
         with sh.use_mesh(mesh):
             lowered = jax.jit(
                 fn, in_shardings=(params_sh, batch_sh),
@@ -130,7 +132,7 @@ def _lower_one(cfg, shape, mesh, policy, policy_name, run_kw, quantized_kv):
         params_sds = _serve_params_sds(cfg, policy, policy_name)
         params_sh = sh.param_sharding_tree(mesh, params_sds)
         cache_sds = sp.cache_specs(cfg, shape.global_batch, shape.seq_len,
-                                   quantized_kv)
+                                   quantized_kv, kv_group=policy.group_size)
         cache_sh = sh.cache_sharding_tree(mesh, cache_sds,
                                           shape.global_batch)
         tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
@@ -152,10 +154,19 @@ def _lower_one(cfg, shape, mesh, policy, policy_name, run_kw, quantized_kv):
     return compiled, t_lower, time.time() - t0
 
 
+def _cost_dict(compiled):
+    """``compiled.cost_analysis()`` returns a bare dict on newer jax and a
+    one-element per-device list on 0.4.x -- normalize."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def _cost_of(cfg, shape, mesh, policy, policy_name, run_kw, quantized_kv):
     compiled, tl, tc = _lower_one(cfg, shape, mesh, policy, policy_name,
                                   run_kw, quantized_kv)
-    cost = dict(compiled.cost_analysis())
+    cost = _cost_dict(compiled)
     colls = ra.collective_stats(compiled.as_text())
     return cost, colls
 
@@ -172,7 +183,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                grad_compression: str = "none", qat: bool = True,
                seq_chunk: int = None, verbose: bool = True,
                extrapolate: bool = True, last_logit_only: bool = False,
-               attn_scores_f32: bool = True):
+               attn_scores_f32: bool = True, decode_impl: str = "blocked"):
     """Full-cell dry-run.
 
     ``extrapolate``: XLA's cost_analysis counts a while-loop (scan) body
@@ -185,8 +196,12 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     """
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
+    # decode_impl "blocked" (the default) keeps quantized-KV decode on
+    # the pure-XLA length-aware path, which lowers for the host compile
+    # target; "flash" lowers the fused Pallas kernel (TPU runs)
     over = {"attn_impl": attn_impl or "triangular",
-            "attn_scores_f32": attn_scores_f32}
+            "attn_scores_f32": attn_scores_f32,
+            "decode_impl": decode_impl}
     if remat:
         over["remat"] = remat
     if seq_chunk:
@@ -207,7 +222,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     compiled, t_lower, t_compile = _lower_one(
         cfg, shape, mesh, policy, policy_name, run_kw, quantized_kv)
     mem = compiled.memory_analysis()
-    cost = dict(compiled.cost_analysis())
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     colls = ra.collective_stats(hlo)
 
@@ -250,6 +265,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "multi_pod": multi_pod, "policy": policy_name,
         "quantized_kv": quantized_kv, "opt_dtype": opt_dtype,
         "attn_impl": cfg.attn_impl, "remat": cfg.remat,
+        "decode_impl": cfg.decode_impl,
         "grad_compression": grad_compression, "qat": qat,
         "microbatch": microbatch, "extrapolation": extrap,
         "lower_s": t_lower, "compile_s": t_compile,
@@ -309,6 +325,8 @@ def main():
     ap.add_argument("--quantized-kv", action="store_true")
     ap.add_argument("--opt-dtype", default="posit8")
     ap.add_argument("--attn-impl", default=None)
+    ap.add_argument("--decode-impl", default="blocked",
+                    choices=["blocked", "flash"])
     ap.add_argument("--remat", default=None)
     ap.add_argument("--seq-chunk", type=int, default=None)
     ap.add_argument("--microbatch", type=int, default=0)
@@ -351,7 +369,8 @@ def main():
                 remat=args.remat, microbatch=args.microbatch,
                 grad_compression=args.grad_compression,
                 qat=not args.no_qat, seq_chunk=args.seq_chunk,
-                extrapolate=not args.no_extrapolate)
+                extrapolate=not args.no_extrapolate,
+                decode_impl=args.decode_impl)
             path = save_record(rec, args.tag)
             print("saved", path)
         except Exception as e:

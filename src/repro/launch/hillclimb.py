@@ -49,15 +49,18 @@ def cell_A():
     run_variant(a, s, "hc0", "re-measure baseline after KV-reshard fix "
                 "(it1) + lm_head rule fix (it2): expect big t_memory drop "
                 "(all-gather of f32 KV per layer eliminated)")
-    run_variant(a, s, "hc_kvq", "it3: posit8 KV cache halves KV bytes; "
-                "KV dominates decode traffic -> t_memory ~ -30-50%",
-                quantized_kv=True)
+    run_variant(a, s, "hc_kvq", "it3 (re-measured after the fused KV "
+                "plane): posit8 KV codes are now consumed directly by the "
+                "length-aware decode -- no full-cache bf16 dequant in HBM "
+                "per step; KV dominates decode traffic -> t_memory ~ "
+                "-30-50% vs bf16 KV", quantized_kv=True)
     run_variant(a, s, "hc_bf16", "control: bf16 dense weights (pre-paper "
                 "serving baseline) -- shows the paper's packed-weight gain",
                 policy_name="bf16")
-    run_variant(a, s, "hc_fp4", "beyond-paper: uniform fp4 weights (vs "
-                "mixed) -- max packing; measures accuracy-free upper bound",
-                policy_name="fp4", quantized_kv=True)
+    run_variant(a, s, "hc_fp4", "beyond-paper: uniform fp4 weights + "
+                "posit8 KV (both planes packed) -- max packing; measures "
+                "accuracy-free upper bound", policy_name="fp4",
+                quantized_kv=True)
 
 
 def cell_B():

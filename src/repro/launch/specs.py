@@ -40,9 +40,9 @@ def batch_specs(cfg: ModelConfig, b: int, s: int,
 
 
 def cache_specs(cfg: ModelConfig, b: int, max_len: int,
-                quantized_kv: bool = False):
+                quantized_kv: bool = False, kv_group=None):
     return jax.eval_shape(
-        lambda: T.init_cache(cfg, b, max_len, quantized_kv))
+        lambda: T.init_cache(cfg, b, max_len, quantized_kv, kv_group))
 
 
 def input_specs(cfg: ModelConfig, shape: ShapeConfig,

@@ -14,6 +14,16 @@ see EXPERIMENTS.md §Perf):
 The KV cache supports optional Posit(8,0) quantization (beyond-paper
 optimization aligned with its thesis: the decode memory roofline is KV +
 weight bytes, and posit8 halves KV traffic vs bf16 at near-zero error).
+Scales live in the unified ``quant.group_scales`` layout -- ``group``
+codes along Dh share one po2 scale (``None`` = per-(token, head), the
+group=Dh case) -- so the cache and weight planes grid identically
+(``PrecisionPolicy.group_size`` threads both).  Quantized decode is
+length-aware: a step at position ``pos`` reads/dequantizes only the
+ceil((pos+1)/blk) live KV blocks, never the full ``max_len`` buffer,
+either via the fused Pallas kernel (``kernels/flash_decode``,
+``cfg.decode_impl == 'flash'``) or the pure-XLA ``fori_loop`` fallback
+(``'blocked'``, the portable default -- the dry-run's host compile and
+sharded caches go through XLA).
 """
 
 from __future__ import annotations
@@ -26,11 +36,13 @@ import jax.numpy as jnp
 
 from ..core import codec as codec_mod
 from ..core import formats as fmt
+from ..core import quant
 from ..parallel.sharding import shard
 from . import layers as L
 
-__all__ = ["attn_init", "attn_apply", "attn_decode", "init_kv_cache",
-           "quantize_kv", "dequantize_kv"]
+__all__ = ["attn_init", "attn_apply", "attn_decode",
+           "quantize_kv", "dequantize_kv", "kv_scale_cols",
+           "decode_quantized_blocks"]
 
 
 def attn_init(key, cfg):
@@ -168,42 +180,47 @@ def _flash_scan(q5, k, v, c: int):
 # KV cache (decode)
 # ---------------------------------------------------------------------------
 
-def init_kv_cache(cfg, batch: int, max_len: int, quantized: bool = False,
-                  dtype=jnp.bfloat16, n_attn_layers: Optional[int] = None):
-    """Stacked-over-layers KV cache pytree (scan-compatible)."""
-    nl = n_attn_layers if n_attn_layers is not None else cfg.n_layers
-    hd = cfg.resolved_head_dim
-    shape = (nl, batch, max_len, cfg.n_kv_heads, hd)
-    if quantized:
-        return {
-            "k_codes": jnp.zeros(shape, jnp.uint8),
-            "v_codes": jnp.zeros(shape, jnp.uint8),
-            "k_scale": jnp.ones(shape[:-1], jnp.bfloat16),
-            "v_scale": jnp.ones(shape[:-1], jnp.bfloat16),
-        }
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+def kv_scale_cols(head_dim: int, group_size: Optional[int]) -> int:
+    """Scale columns per (token, head): Dh/group, or 1 when ``group_size``
+    is None / does not divide Dh / is >= Dh (the group=Dh special case,
+    matching the weight plane's per-channel degeneration)."""
+    if not group_size or group_size >= head_dim or head_dim % group_size:
+        return 1
+    return head_dim // group_size
 
 
-def quantize_kv(k: jax.Array):
-    """Per-(token, head) posit8 quantization of a KV tensor (..., Dh)."""
-    s = jnp.max(jnp.abs(k), axis=-1) / 64.0 + 1e-8   # posit8 maxpos = 64
-    s = jnp.exp2(jnp.ceil(jnp.log2(s)))
-    codes = codec_mod.encode(fmt.POSIT8,
-                             (k / s[..., None]).astype(jnp.float32))
+def quantize_kv(k: jax.Array, group_size: Optional[int] = None):
+    """Posit8 quantization of a KV tensor (..., Dh) through the weight
+    plane's ``quant.group_scales`` grid: ``group_size`` codes along Dh
+    share one po2 (exponent-shift) scale.  ``None`` degenerates to one
+    scale per (token, head) -- the seed layout, now as the group=Dh
+    special case.  Returns (codes uint8 (..., Dh), scales bf16 (..., Gs))
+    with Gs = ``kv_scale_cols(Dh, group_size)``."""
+    dh = k.shape[-1]
+    gs = kv_scale_cols(dh, group_size)
+    g = None if gs == 1 else group_size
+    # Dh plays K in the (..., K, N) grouping contract (trailing N=1 axis)
+    s = quant.group_scales(fmt.POSIT8, k[..., None].astype(jnp.float32),
+                           g, method="absmax_po2")[..., 0]   # (..., Gs)
+    codes = codec_mod.encode(
+        fmt.POSIT8,
+        (k / jnp.repeat(s, dh // gs, axis=-1)).astype(jnp.float32))
     return codes.astype(jnp.uint8), s.astype(jnp.bfloat16)
 
 
 def dequantize_kv(codes: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    """codes (..., Dh) + scales (..., Gs) -> (..., Dh) floats."""
+    dh, gs = codes.shape[-1], scale.shape[-1]
     return (codec_mod.decode(fmt.POSIT8, codes.astype(jnp.int32))
-            * scale[..., None].astype(jnp.float32)).astype(dtype)
+            * jnp.repeat(scale.astype(jnp.float32), dh // gs,
+                         axis=-1)).astype(dtype)
 
 
-def _cache_read(layer_cache, dtype):
-    if "k" in layer_cache:
-        return layer_cache["k"], layer_cache["v"]
-    k = dequantize_kv(layer_cache["k_codes"], layer_cache["k_scale"], dtype)
-    v = dequantize_kv(layer_cache["v_codes"], layer_cache["v_scale"], dtype)
-    return k, v
+def _cache_group(layer_cache) -> Optional[int]:
+    """Recover the Dh-group size a quantized layer cache was built with."""
+    gs = layer_cache["k_scale"].shape[-1]
+    dh = layer_cache["k_codes"].shape[-1]
+    return None if gs == 1 else dh // gs
 
 
 def _cache_write(layer_cache, k_new, v_new, pos):
@@ -216,24 +233,82 @@ def _cache_write(layer_cache, k_new, v_new, pos):
             layer_cache["v"], v_new.astype(layer_cache["v"].dtype),
             (0, pos, 0, 0))
         return {"k": k, "v": v}
-    kc, ks = quantize_kv(k_new)
-    vc, vs = quantize_kv(v_new)
+    group = _cache_group(layer_cache)
+    kc, ks = quantize_kv(k_new, group)
+    vc, vs = quantize_kv(v_new, group)
     out = dict(layer_cache)
     out["k_codes"] = jax.lax.dynamic_update_slice(
         layer_cache["k_codes"], kc, (0, pos, 0, 0))
     out["v_codes"] = jax.lax.dynamic_update_slice(
         layer_cache["v_codes"], vc, (0, pos, 0, 0))
     out["k_scale"] = jax.lax.dynamic_update_slice(
-        layer_cache["k_scale"], ks, (0, pos, 0))
+        layer_cache["k_scale"], ks, (0, pos, 0, 0))
     out["v_scale"] = jax.lax.dynamic_update_slice(
-        layer_cache["v_scale"], vs, (0, pos, 0))
+        layer_cache["v_scale"], vs, (0, pos, 0, 0))
     return out
+
+
+def decode_quantized_blocks(q4, layer_cache, pos, softcap: float = 0.0,
+                            blk: Optional[int] = None) -> jax.Array:
+    """Pure-XLA length-aware decode over a posit8 KV cache.
+
+    Online-softmax ``fori_loop`` over KV blocks with a DYNAMIC trip count
+    ceil((pos+1)/blk): each iteration dynamic-slices one (blk,) chunk of
+    codes+scales out of HBM and dequantizes it; the dead tail of the
+    ``max_len`` buffer is never read.  This is the portable analogue of
+    ``kernels/flash_decode`` (same math, XLA-lowered -- works under the
+    dry-run's host compile and on sharded caches).
+
+    q4: (B, Kh, G, Dh).  Returns (B, Kh, G, Dh) f32.
+    """
+    from ..kernels.flash_decode import default_kv_block
+    b, kh, g, dh = q4.shape
+    kc, ks = layer_cache["k_codes"], layer_cache["k_scale"]
+    vc, vs = layer_cache["v_codes"], layer_cache["v_scale"]
+    t = kc.shape[1]
+    gs = ks.shape[-1]
+    if blk is None:
+        blk = default_kv_block(t)
+    qf = q4.astype(jnp.float32) * (1.0 / math.sqrt(dh))
+
+    def body(i, carry):
+        acc, m, l = carry
+        start = i * blk
+        kcb = jax.lax.dynamic_slice(kc, (0, start, 0, 0), (b, blk, kh, dh))
+        ksb = jax.lax.dynamic_slice(ks, (0, start, 0, 0), (b, blk, kh, gs))
+        k = dequantize_kv(kcb, ksb, jnp.float32)
+        s = jnp.einsum("bkgd,btkd->bkgt", qf, k,
+                       preferred_element_type=jnp.float32)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = start + jnp.arange(blk)
+        s = jnp.where(kpos[None, None, None, :] <= pos, s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1, keepdims=True)
+        vcb = jax.lax.dynamic_slice(vc, (0, start, 0, 0), (b, blk, kh, dh))
+        vsb = jax.lax.dynamic_slice(vs, (0, start, 0, 0), (b, blk, kh, gs))
+        v = dequantize_kv(vcb, vsb, jnp.float32)
+        pv = jnp.einsum("bkgt,btkd->bkgd", p, v,
+                        preferred_element_type=jnp.float32)
+        return acc * alpha + pv, m_new, l
+
+    acc0 = jnp.zeros((b, kh, g, dh), jnp.float32)
+    m0 = jnp.full((b, kh, g, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, 1), jnp.float32)
+    n_live = (pos + blk) // blk          # == ceil((pos + 1) / blk)
+    acc, _, l = jax.lax.fori_loop(0, n_live, body, (acc0, m0, l0))
+    return acc / l
 
 
 def attn_decode(p, x, cfg, layer_cache, pos):
     """One-token decode step. x: (B, 1, D); pos: scalar current position.
 
-    Returns (out, updated_layer_cache).
+    Returns (out, updated_layer_cache).  A bf16 cache takes the dense
+    full-buffer read (the baseline the benchmarks compare against); a
+    posit8 cache takes the length-aware quantized path -- codes are
+    dequantized per live block, on-chip, never materialized in HBM.
     """
     b = x.shape[0]
     positions = jnp.full((b, 1), pos, jnp.int32)
@@ -241,13 +316,28 @@ def attn_decode(p, x, cfg, layer_cache, pos):
         positions = jnp.broadcast_to(positions, (3, b, 1))
     q, k_new, v_new = _qkv(p, x, cfg, positions)
     layer_cache = _cache_write(layer_cache, k_new, v_new, pos)
-    k, v = _cache_read(layer_cache, x.dtype)
-    # NOTE: no sharding constraint here -- the cache arrives with its
+    # NOTE: no sharding constraint on the cache -- it arrives with its
     # input sharding (batch on data, head_dim on model) and forcing the
     # activation-rule layout all-gathered the full KV in f32 every layer
     # (measured: +6.5 GiB/layer/device on command-r decode; §Perf it1).
     g = cfg.n_heads // cfg.n_kv_heads
     hd = q.shape[-1]
+    if "k" not in layer_cache:
+        q4 = q.reshape(b, cfg.n_kv_heads, g, hd)
+        if getattr(cfg, "decode_impl", "blocked") == "flash":
+            from ..kernels.flash_decode import flash_decode_pallas
+            from ..kernels.ops import should_interpret
+            out4 = flash_decode_pallas(
+                q4, layer_cache["k_codes"], layer_cache["k_scale"],
+                layer_cache["v_codes"], layer_cache["v_scale"], pos,
+                softcap=cfg.attn_logit_softcap,
+                interpret=should_interpret())
+        else:
+            out4 = decode_quantized_blocks(q4, layer_cache, pos,
+                                           cfg.attn_logit_softcap)
+        out = out4.astype(x.dtype).reshape(b, 1, cfg.n_heads * hd)
+        return L.dense(p["wo"], out), layer_cache
+    k, v = layer_cache["k"], layer_cache["v"]
     q5 = q.reshape(b, 1, cfg.n_kv_heads, g, hd)
     s = _scores(q5, k, cfg.attn_logit_softcap)       # (B,Kh,G,1,T)
     tpos = jnp.arange(k.shape[1])

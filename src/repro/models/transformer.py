@@ -118,7 +118,9 @@ def _group_init(key, cfg):
 def _group_apply(p, x, cfg, positions, cache=None, pos=None, mode="train"):
     layout = _group_layout(cfg)
     aux = jnp.zeros((), jnp.float32)
-    new_cache = {} if cache is not None else None
+    # prefill materializes the group cache even from cache=None (it used
+    # to be dropped, so hybrid decode-after-prefill had no state)
+    new_cache = {} if (cache is not None or mode == "prefill") else None
     for i, (mixer, use_moe) in enumerate(layout):
         sub = cache.get(f"b{i}") if cache is not None else None
         x, c, a = _block_apply(p[f"b{i}"], x, cfg, mixer, use_moe,
@@ -314,8 +316,13 @@ def lm_decode(p, tokens, cfg, cache, pos):
 # Caches
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg, batch: int, max_len: int, quantized_kv: bool = False):
-    """Stacked cache pytree matching the scan layout of ``cfg``."""
+def init_cache(cfg, batch: int, max_len: int, quantized_kv: bool = False,
+               kv_group: Optional[int] = None):
+    """Stacked cache pytree matching the scan layout of ``cfg``.
+
+    ``kv_group``: Dh-group size of the quantized KV scales (None =
+    per-(token, head)); thread ``PrecisionPolicy.group_size`` here so
+    the cache grids like the packed weight plane."""
     mixer = _family_mixer(cfg)
     if mixer == "rwkv":
         def one(_):
@@ -329,26 +336,28 @@ def init_cache(cfg, batch: int, max_len: int, quantized_kv: bool = False):
             g = {}
             for i, (m, _u) in enumerate(layout):
                 if m == "attn":
-                    g[f"b{i}"] = _one_kv(cfg, batch, max_len, quantized_kv)
+                    g[f"b{i}"] = _one_kv(cfg, batch, max_len, quantized_kv,
+                                         kv_group)
                 else:
                     g[f"b{i}"] = S.mamba_state_init(cfg, batch)
             return g
         return jax.vmap(one)(jnp.arange(n_groups))
     # dense / moe: plain kv stacks
     def one(_):
-        return _one_kv(cfg, batch, max_len, quantized_kv)
+        return _one_kv(cfg, batch, max_len, quantized_kv, kv_group)
     return jax.vmap(one)(jnp.arange(cfg.n_layers))
 
 
-def _one_kv(cfg, batch, max_len, quantized):
+def _one_kv(cfg, batch, max_len, quantized, kv_group=None):
     hd = cfg.resolved_head_dim
     shape = (batch, max_len, cfg.n_kv_heads, hd)
     if quantized:
+        gs = A.kv_scale_cols(hd, kv_group)
         return {
             "k_codes": jnp.zeros(shape, jnp.uint8),
             "v_codes": jnp.zeros(shape, jnp.uint8),
-            "k_scale": jnp.ones(shape[:-1], jnp.bfloat16),
-            "v_scale": jnp.ones(shape[:-1], jnp.bfloat16),
+            "k_scale": jnp.ones(shape[:-1] + (gs,), jnp.bfloat16),
+            "v_scale": jnp.ones(shape[:-1] + (gs,), jnp.bfloat16),
         }
     return {"k": jnp.zeros(shape, jnp.bfloat16),
             "v": jnp.zeros(shape, jnp.bfloat16)}

@@ -21,10 +21,12 @@ from ..core import quant
 from ..core import formats as fmt
 from ..core.policy import PrecisionPolicy, flatten_with_paths
 from ..kernels.ops import PackedTensor, pack_tensor
+from . import attention as A
 from . import transformer as T
 
 __all__ = ["init_model", "apply_model", "decode_model", "init_cache",
-           "loss_fn", "quantize_params_fake", "pack_params", "packed_bytes"]
+           "loss_fn", "quantize_params_fake", "pack_params", "packed_bytes",
+           "quantize_cache"]
 
 init_model = T.lm_init
 apply_model = T.lm_apply
@@ -86,6 +88,31 @@ def pack_params(params, policy: PrecisionPolicy):
         return pack_tensor(spec, node, group_size=policy.group_for(path))
 
     return rec(params)
+
+
+def quantize_cache(cache, kv_group: Optional[int] = None):
+    """One-shot posit8 quantization of a prefill KV cache.
+
+    Walks the cache pytree and replaces every attention {k, v} pair
+    (dense / moe: stacked (L, B, S, Kh, Dh); hybrid: per-group sub-dicts)
+    with {k_codes, v_codes, k_scale, v_scale} in the unified
+    ``quant.group_scales`` Dh-grouped layout.  SSM / RWKV / mamba states
+    (no ``k``/``v`` keys) pass through untouched, so the engine can apply
+    this uniformly across families.  Decode then continues writing the
+    quantized layout incrementally (``attention._cache_write``).
+    """
+
+    def rec(node):
+        if isinstance(node, dict):
+            if "k" in node and "v" in node and not isinstance(node["k"], dict):
+                kc, ks = A.quantize_kv(node["k"], kv_group)
+                vc, vs = A.quantize_kv(node["v"], kv_group)
+                return {"k_codes": kc, "k_scale": ks,
+                        "v_codes": vc, "v_scale": vs}
+            return {k: rec(v) for k, v in node.items()}
+        return node
+
+    return rec(cache)
 
 
 def packed_bytes(params, policy: PrecisionPolicy) -> int:

@@ -25,7 +25,8 @@ from ..configs.base import ModelConfig, ShapeConfig
 from .hw import HW, TPU_V5E
 
 __all__ = ["collective_stats", "roofline_terms", "model_flops",
-           "summarize_cell", "active_param_count", "total_param_count"]
+           "summarize_cell", "active_param_count", "total_param_count",
+           "decode_kv_bytes"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
@@ -187,6 +188,31 @@ def min_traffic_bytes(cfg: ModelConfig, shape: ShapeConfig,
         kv = (2 * n_attn * shape.seq_len * cfg.n_kv_heads *
               cfg.resolved_head_dim * shape.global_batch * kv_bits / 8)
     return float(wbytes + kv)
+
+
+def decode_kv_bytes(cfg: ModelConfig, batch: int, max_len: int, pos: int,
+                    quantized: bool = False, kv_group=None,
+                    length_aware: bool = True, blk: int = 128) -> float:
+    """Modeled KV-cache HBM bytes moved by ONE decode step (all layers).
+
+    bf16 baseline: the full (max_len) k+v buffers are read per step.
+    quantized    : uint8 codes + bf16 scales in the unified
+                   ``group_scales`` layout (Gs = Dh/kv_group columns);
+                   with ``length_aware`` only the ceil((pos+1)/blk) live
+                   KV blocks are touched -- independent of ``max_len``.
+    This is the per-step model behind benchmarks/bench_decode.py; it uses
+    the same attention-layer count as :func:`min_traffic_bytes`.
+    """
+    from ..models.attention import kv_scale_cols
+    n_attn = cfg.n_layers if cfg.attn_every == 0 else \
+        cfg.n_layers // cfg.attn_every
+    hd = cfg.resolved_head_dim
+    rows = n_attn * batch * cfg.n_kv_heads        # per cached token
+    if not quantized:
+        return float(2 * rows * max_len * hd * 2)            # k+v bf16
+    gs = kv_scale_cols(hd, kv_group)
+    toks = -(-(pos + 1) // blk) * blk if length_aware else max_len
+    return float(2 * rows * toks * (hd * 1 + gs * 2))        # codes+scales
 
 
 def summarize_cell(cfg: ModelConfig, shape: ShapeConfig, terms: Dict,

@@ -4,7 +4,12 @@ This is the runtime the decode_* and long_* dry-run shapes lower:
 ``serve_step`` is one new token against a seq_len KV cache (or SSM state).
 Weights can be physically packed (PackedTensor leaves -- HBM holds the
 low-bit codes, the paper's memory-bandwidth reduction) and the KV cache
-can be Posit(8,0)-quantized (beyond-paper extension, same thesis).
+can be Posit(8,0)-quantized end-to-end (``quantized_kv=True``): prefill
+returns codes+scales (one-shot ``zoo.quantize_cache`` fused into the
+prefill jit, before ``_pad_cache``), decode writes the quantized layout
+incrementally and reads only the live prefix of it per step (the
+length-aware paths in ``models/attention``) -- the bf16 cache never
+exists in HBM.
 
 The engine itself does simple static batching with per-request lengths
 masked by position -- enough to serve real batched traffic in the
@@ -27,20 +32,29 @@ from ..models import zoo
 __all__ = ["build_prefill_step", "build_serve_step", "ServeEngine"]
 
 
-def build_prefill_step(cfg: ModelConfig, last_logit_only: bool = False):
+def build_prefill_step(cfg: ModelConfig, last_logit_only: bool = False,
+                       quantized_kv: bool = False,
+                       kv_group: Optional[int] = None):
     """(params, batch) -> (logits, cache): full-sequence forward that also
     materializes the KV cache / SSM state.
 
     ``last_logit_only``: return logits only for the final position -- the
     only one generation needs.  XLA pushes the slice up through the
     readout matmul, eliminating ~(S-1)/S of lm_head FLOPs and the
-    (B, S, vocab) buffer (a §Perf hillclimb lever for prefill cells)."""
+    (B, S, vocab) buffer (a §Perf hillclimb lever for prefill cells).
+
+    ``quantized_kv``: quantize the returned KV cache to posit8 codes +
+    ``kv_group``-grouped scales inside the same jit (XLA fuses the
+    quantize into the cache write, so the bf16 cache is a transient,
+    not an output)."""
 
     def prefill(params, batch):
         logits, cache, _ = zoo.apply_model(params, batch, cfg, mode="prefill",
                                            cache=None)
         if last_logit_only:
             logits = logits[:, -1:]
+        if quantized_kv:
+            cache = zoo.quantize_cache(cache, kv_group)
         return logits, cache
 
     return prefill
@@ -62,15 +76,19 @@ class ServeEngine:
     cfg: ModelConfig
     params: Any
     max_len: int = 2048
-    # accepted for launcher symmetry (the roofline memory model uses it);
-    # decode continues from whatever cache prefill materializes.
+    # posit8 KV cache end-to-end: prefill returns codes+scales, decode
+    # reads only the live prefix of them per step.  The scale grouping
+    # follows ``policy.group_size`` (the weight plane's grid).
     quantized_kv: bool = False
     policy: Optional[PrecisionPolicy] = None
 
     def __post_init__(self):
         if self.policy is not None:
             self.params = zoo.pack_params(self.params, self.policy)
-        self._prefill = jax.jit(build_prefill_step(self.cfg))
+        kv_group = self.policy.group_size if self.policy else None
+        self._prefill = jax.jit(build_prefill_step(
+            self.cfg, last_logit_only=True,
+            quantized_kv=self.quantized_kv, kv_group=kv_group))
         self._step = jax.jit(build_serve_step(self.cfg))
 
     def generate(self, tokens: jax.Array, steps: int,
@@ -79,7 +97,8 @@ class ServeEngine:
         b, s0 = tokens.shape
         batch = {"tokens": tokens}
         # prefill is unconditional for every model family: it returns the
-        # populated KV cache / SSM state that decode continues from.
+        # populated KV cache / SSM state (already posit8 codes+scales
+        # under quantized_kv) that decode continues from.
         logits, cache = self._prefill(self.params, batch)
         cache = self._pad_cache(cache, b)
         out = [np.asarray(tokens)]
@@ -98,14 +117,30 @@ class ServeEngine:
                 last = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
         return np.concatenate(out, axis=1)
 
+    # cache leaves with a sequence axis, all laid out (L, B, S, H, ...):
+    # bf16 k/v, posit8 codes, and their (..., Gs) scale tensors
+    _SEQ_KEYS = frozenset(
+        {"k", "v", "k_codes", "v_codes", "k_scale", "v_scale"})
+
     def _pad_cache(self, cache, b):
-        """Grow prefill-length KV buffers to max_len for decode."""
-        def pad(x):
-            # kv tensors: (L, B, S, H, D) or states (no seq axis) pass through
-            if x.ndim >= 3 and x.shape[1] == b and x.shape[2] < self.max_len \
-                    and x.dtype != jnp.int32:
+        """Grow prefill-length KV buffers to max_len for decode.
+
+        Structure-aware: pads by cache KEY (the seq axis is always axis 2
+        of the stacked (L, B, S, H, ...) layout) instead of guessing from
+        ndim/shape/dtype -- scale tensors pad on the right rank and SSM /
+        RWKV states (no seq axis, no KV keys) pass through untouched."""
+        def pad(key, x):
+            if key in self._SEQ_KEYS and x.shape[2] < self.max_len:
                 pad_width = [(0, 0)] * x.ndim
                 pad_width[2] = (0, self.max_len - x.shape[2])
                 return jnp.pad(x, pad_width)
             return x
-        return jax.tree.map(pad, cache)
+
+        def rec(node):
+            if isinstance(node, dict):
+                return {key: (rec(val) if isinstance(val, dict)
+                              else pad(key, val))
+                        for key, val in node.items()}
+            return node
+
+        return rec(cache)
