@@ -1,0 +1,233 @@
+"""Serving-plane benchmark: continuous batching over the paged KV pool
+vs static batching.
+
+A staggered-arrival trace of mixed-length requests is served by the
+``ContinuousEngine`` while the harness records, per engine step, the
+wall time, the live page count and the per-request positions.  It
+reports:
+
+  * throughput (generated tokens / wall second) for the continuous
+    engine vs one static left-padded ``ServeEngine`` batch that can only
+    start when ALL requests have arrived and must decode until the
+    LONGEST one finishes;
+  * request latency (arrival -> retirement wall time): p50 / p99;
+  * page-pool utilization (mean / peak over steps) vs the static plan's
+    ``batch * max_len`` slot reservation -- the "max_len waste";
+  * MODELED KV bytes/step: paged (live pages of each running request,
+    ``serve.paged_kv.paged_kv_bytes_per_step``) vs the static
+    length-aware posit8 plan (every row pays the shared front position)
+    and the static bf16 full-buffer plan.  The paged number is a
+    function of live positions ONLY -- recomputing it under an 8x
+    ``max_len`` serving plan must not change a single step (the paged
+    acceptance claim; asserted).
+
+Results go to stdout as the usual ``name,us_per_call,derived`` CSV and
+to BENCH_serve.json at the repo root (CI refreshes it via ``--smoke``).
+
+  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import zoo
+from repro.roofline.analysis import decode_kv_bytes
+from repro.serve import ContinuousEngine, ServeEngine
+from repro.serve.paged_kv import paged_kv_bytes_per_step
+from .common import emit
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+
+def _trace(cfg, n_req, rng):
+    """(arrival_step, prompt, gen) per request: ragged lengths, two
+    requests arriving every other engine step."""
+    out = []
+    for i in range(n_req):
+        plen = int(rng.integers(3, 13))
+        gen = int(rng.integers(4, 25))
+        out.append((i // 2, rng.integers(0, cfg.vocab, (plen,)).astype(
+            np.int32), gen))
+    return out
+
+
+def _serve_continuous(cfg, params, trace, n_pages, page_size, max_batch,
+                      max_len):
+    eng = ContinuousEngine(cfg, params, n_pages=n_pages,
+                           page_size=page_size, max_batch=max_batch,
+                           max_len=max_len)
+    # warm the jits (prefill bucket + decode step) off the clock
+    warm = eng.submit(trace[0][1], 2)
+    eng.run()
+    eng.scheduler.finished.pop(warm)
+
+    pending = sorted(trace, key=lambda t: t[0])
+    arrive, finish = {}, {}
+    util, positions_per_step = [], []
+    t0 = time.perf_counter()
+    rids = {}
+    i = 0
+    while pending or eng.scheduler.has_work:
+        while pending and pending[0][0] <= i:
+            _, prompt, gen = pending.pop(0)
+            rid = eng.submit(prompt, gen)
+            rids[rid] = (prompt, gen)
+            arrive[rid] = time.perf_counter()
+        eng.step()
+        # the engine records the positions its decode ACTUALLY served,
+        # including requests that retired within the step
+        positions_per_step.append(list(eng.last_positions))
+        util.append(eng.pool.utilization)
+        for rid_, req in eng.scheduler.finished.items():
+            finish.setdefault(rid_, time.perf_counter())
+        i += 1
+    dt = time.perf_counter() - t0
+    toks = sum(len(eng.scheduler.finished[r].generated) for r in rids)
+    lat = np.asarray([finish[r] - arrive[r] for r in rids])
+    return eng, dict(
+        tokens=toks, wall_s=dt, tokens_per_s=toks / dt,
+        engine_steps=i,
+        latency_p50_ms=float(np.percentile(lat, 50) * 1e3),
+        latency_p99_ms=float(np.percentile(lat, 99) * 1e3),
+        pool_util_mean=float(np.mean(util)),
+        pool_util_peak=float(np.max(util)),
+        peak_pages=eng.pool.alloc_peak,
+        preemptions=eng.scheduler.preemption_count,
+    ), positions_per_step
+
+
+def _serve_static(cfg, params, trace, max_len):
+    """The static plan: wait for every arrival, left-pad one batch,
+    decode until the longest request's budget."""
+    eng = ServeEngine(cfg, params, max_len=max_len, quantized_kv=True)
+    lens = [t[1].size for t in trace]
+    s0 = max(lens)
+    toks = np.zeros((len(trace), s0), np.int32)
+    for i, (_, p, _) in enumerate(trace):
+        toks[i, s0 - p.size:] = p
+    steps = max(t[2] for t in trace)
+    eng.generate(jnp.asarray(toks), steps=2,
+                 lengths=np.asarray(lens))            # warm the jits
+    t0 = time.perf_counter()
+    eng.generate(jnp.asarray(toks), steps=steps, lengths=np.asarray(lens))
+    dt = time.perf_counter() - t0
+    useful = sum(t[2] for t in trace)                 # tokens anyone wanted
+    return dict(wall_s=dt, steps=steps, batch=len(trace),
+                useful_tokens=useful, tokens_per_s=useful / dt)
+
+
+def run(smoke: bool = False) -> None:
+    cfg = get_config("qwen2-0.5b").reduced()
+    n_req = 8 if smoke else 16
+    page_size = 16
+    max_len = 48
+    max_batch = 8
+    n_pages = 6 * max_batch
+    rng = np.random.default_rng(0)
+    params = zoo.init_model(jax.random.PRNGKey(0), cfg)
+    trace = _trace(cfg, n_req, rng)
+    results = {"config": {"arch": cfg.name, "n_req": n_req,
+                          "page_size": page_size, "max_len": max_len,
+                          "max_batch": max_batch, "n_pages": n_pages,
+                          "backend": jax.default_backend()}}
+
+    eng, cont, positions_per_step = _serve_continuous(
+        cfg, params, trace, n_pages, page_size, max_batch, max_len)
+    static = _serve_static(cfg, params, trace, max_len)
+    results["continuous"] = cont
+    results["static"] = static
+    emit("serve/continuous_tokens_per_s", 1e6 / max(cont["tokens_per_s"],
+                                                    1e-9),
+         f"tokens_per_s={cont['tokens_per_s']:.1f};"
+         f"p50_ms={cont['latency_p50_ms']:.1f};"
+         f"p99_ms={cont['latency_p99_ms']:.1f}")
+    emit("serve/static_tokens_per_s", 1e6 / max(static["tokens_per_s"],
+                                                1e-9),
+         f"tokens_per_s={static['tokens_per_s']:.1f}")
+    emit("serve/pool_utilization", 0.0,
+         f"mean={cont['pool_util_mean']:.2f};"
+         f"peak={cont['pool_util_peak']:.2f};"
+         f"preemptions={cont['preemptions']}")
+
+    # --- modeled KV bytes/step: live pages vs max_len plans
+    paged_steps = [paged_kv_bytes_per_step(cfg, pos, page_size)
+                   for pos in positions_per_step if pos]
+    paged_mean = float(np.mean(paged_steps))
+    # re-serve the SAME trace through an engine planned for 8x max_len
+    # (8x wider page tables, same pool): the live positions -- and so
+    # the paged bytes -- must not move by a single step
+    _, _, positions_8x = _serve_continuous(
+        cfg, params, trace, n_pages, page_size, max_batch, 8 * max_len)
+    paged_8x = [paged_kv_bytes_per_step(cfg, pos, page_size)
+                for pos in positions_8x if pos]
+    assert paged_steps == paged_8x, \
+        "paged KV bytes/step must not depend on max_len"
+    # static plans at the trace's mean live batch: every row pays the
+    # shared front position (length-aware) or the full buffer (bf16)
+    bsz = static["batch"]
+    front_pos = max(t[1].size for t in trace) + static["steps"] - 1
+    static_q = decode_kv_bytes(cfg, bsz, max_len, front_pos,
+                               quantized=True, blk=page_size)
+    static_q_8x = decode_kv_bytes(cfg, bsz, 8 * max_len, front_pos,
+                                  quantized=True, blk=page_size)
+    static_bf16 = decode_kv_bytes(cfg, bsz, max_len, front_pos,
+                                  quantized=False)
+    static_bf16_8x = decode_kv_bytes(cfg, bsz, 8 * max_len, front_pos,
+                                     quantized=False)
+    results["kv_bytes_per_step"] = {
+        "paged_mean": paged_mean,
+        "paged_mean_8x_maxlen": float(np.mean(paged_8x)),
+        "paged_peak": float(np.max(paged_steps)),
+        "static_posit8_lenaware_front": static_q,
+        "static_posit8_lenaware_front_8x_maxlen": static_q_8x,
+        "static_bf16_full": static_bf16,
+        "static_bf16_full_8x_maxlen": static_bf16_8x,
+        "paged_vs_static_bf16_gain": static_bf16 / paged_mean,
+    }
+    emit("serve/kv_bytes_per_step", 0.0,
+         f"paged={paged_mean:.0f};static_posit8={static_q:.0f};"
+         f"static_bf16={static_bf16:.0f};"
+         f"gain={static_bf16 / paged_mean:.2f}x")
+    assert paged_mean <= static_q, \
+        "live-page accounting must beat the shared-front static plan"
+    assert static_bf16_8x == 8 * static_bf16, \
+        "the bf16 plan pays max_len (that is the waste being removed)"
+
+    # --- slot waste: reserved slots vs live tokens
+    reserved = bsz * max_len
+    live_mean = float(np.mean([sum(p + 1 for p in pos)
+                               for pos in positions_per_step if pos]))
+    results["slot_waste"] = {
+        "static_reserved_slots": reserved,
+        "paged_live_tokens_mean": live_mean,
+        "reserved_over_live": reserved / max(live_mean, 1.0),
+    }
+    emit("serve/slot_waste", 0.0,
+         f"static_reserved={reserved};live_mean={live_mean:.0f};"
+         f"ratio={reserved / max(live_mean, 1.0):.1f}x")
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    print(f"# wrote {os.path.normpath(OUT_JSON)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace (the CI invocation)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,9 @@
   size tbl  -> bench_model_size     (13.5 -> 2.42 MB UL-VIO story)
   decode    -> bench_decode         (quantized-KV flash decode vs bf16
                                      cache: tokens/s + KV bytes/step)
+  serve     -> bench_serve          (continuous batching over paged KV:
+                                     throughput, p50/p99 latency, pool
+                                     utilization vs static max_len waste)
 
 Roofline terms for the assigned architectures come from the dry-run
 (launch/dryrun.py), not from CPU wall-clock -- see EXPERIMENTS.md.
@@ -22,10 +25,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single bench (mac_engine|coprocessor|"
-                         "e2e|accuracy|model_size|decode)")
+                         "e2e|accuracy|model_size|decode|serve)")
     args = ap.parse_args()
     from . import (bench_accuracy, bench_coprocessor, bench_decode,
-                   bench_e2e, bench_mac_engine, bench_model_size)
+                   bench_e2e, bench_mac_engine, bench_model_size,
+                   bench_serve)
     benches = {
         "mac_engine": bench_mac_engine.run,
         "coprocessor": bench_coprocessor.run,
@@ -33,6 +37,7 @@ def main() -> None:
         "model_size": bench_model_size.run,
         "accuracy": bench_accuracy.run,
         "decode": bench_decode.run,
+        "serve": bench_serve.run,
     }
     print("name,us_per_call,derived")
     failed = []

@@ -9,8 +9,18 @@ precision, end to end.
    model bytes (13.5 -> 2.42 MB story).
 4. Serve a batch of "frames" through the quantized model.
 
-Run:  PYTHONPATH=src python examples/vio_serve.py
+Run:  PYTHONPATH=src python examples/vio_serve.py [--continuous]
+
+``--continuous`` additionally demos the XR serving story end-to-end:
+concurrent perception-narration streams of very different lengths are
+submitted to the paged-KV ``ContinuousEngine`` as they "arrive" --
+admission, batched paged decode and retirement all run while the VIO
+frames keep being served, which is how an XR device multiplexes VIO /
+gaze / classification traffic without paying worst-case KV memory per
+stream.
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +31,12 @@ from repro.core.qat import quantize_tree
 from repro.core.sensitivity import assign_layer_adaptive
 from repro.data.vio_data import VIOStream
 from repro.models import perception as P
+
+ARGS = argparse.ArgumentParser()
+ARGS.add_argument("--continuous", action="store_true",
+                  help="also serve staggered LM streams through the "
+                       "paged-KV ContinuousEngine")
+ARGS = ARGS.parse_args()
 
 stream = VIOStream(batch=64)
 params = P.vio_init(jax.random.PRNGKey(0))
@@ -65,4 +81,34 @@ q = quantize_tree(params, policy)
 pose = P.vio_apply(q, test)
 print(f"\nserved {pose.shape[0]} frame-pairs; "
       f"first pose estimate: {np.asarray(pose[0])}")
+
+if ARGS.continuous:
+    # concurrent perception streams: staggered arrivals, ragged lengths,
+    # one paged-KV pool -- the serving plane the static batch can't grow
+    # into (see serve/__init__ for the page-table layout).
+    from repro.configs import get_config
+    from repro.models import zoo
+    from repro.serve import ContinuousEngine
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    lm = zoo.init_model(jax.random.PRNGKey(7), cfg)
+    eng = ContinuousEngine(cfg, lm, n_pages=32, page_size=16,
+                           max_batch=4, max_len=64,
+                           policy=PrecisionPolicy.uniform("posit8_0"))
+    rng = np.random.default_rng(0)
+    arrivals = [(s, int(rng.integers(3, 12)), int(rng.integers(4, 16)))
+                for s in (0, 0, 1, 2, 2, 4)]   # (arrive_step, plen, gen)
+    print("\ncontinuous XR streams (arrive@step, prompt, gen):", arrivals)
+    pending = list(arrivals)
+    step = 0
+    while pending or eng.scheduler.has_work:
+        while pending and pending[0][0] <= step:
+            _, plen, gen = pending.pop(0)
+            eng.submit(rng.integers(0, cfg.vocab, (plen,)), gen)
+        eng.step()
+        step += 1
+    done = eng.scheduler.finished
+    print(f"served {len(done)} streams in {step} engine steps; "
+          f"peak pool use {eng.pool.alloc_peak}/{eng.pool.n_pages} pages, "
+          f"preemptions {eng.scheduler.preemption_count}")
 print("OK")

@@ -27,6 +27,17 @@ longer pay for ``max_len``.
 ``fori_loop`` over the same blocks) for targets where a Pallas call is
 not portable -- the dry-run's host-compile path and sharded caches --
 mirroring the ``PACKED_USE_KERNEL`` split of the weight plane.
+
+Paged variant (``paged_flash_decode_pallas``): the KV operands are a
+POOL of fixed-size pages (page size == the KV block) shared by all
+requests, and each request owns a row of a page table.  The
+scalar-prefetch clamp generalizes exactly as the PR 2 design predicted:
+the block-index clamp ``min(t, pos // blk)`` becomes a GATHER through
+the prefetched page-table row, ``page_table[i, min(t, pos[i] // blk)]``
+-- dead grid steps still map to the request's last live page, so Pallas
+re-uses the resident block and issues no DMA.  ``pos`` is per-request
+(a second scalar-prefetch operand): requests at different positions
+decode in one batched grid, which is what continuous batching needs.
 """
 
 from __future__ import annotations
@@ -43,7 +54,8 @@ from jax.experimental.pallas import tpu as pltpu
 from ..core import codec as codec_mod
 from ..core import formats as fmt
 
-__all__ = ["flash_decode_kernel", "flash_decode_pallas", "default_kv_block"]
+__all__ = ["flash_decode_kernel", "flash_decode_pallas", "default_kv_block",
+           "paged_flash_decode_kernel", "paged_flash_decode_pallas"]
 
 # renamed across JAX versions (TPUCompilerParams -> CompilerParams)
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
@@ -74,13 +86,16 @@ def _dequant_block(codes_ref, scale_ref, dh: int, gs: int) -> jax.Array:
     return x * jnp.repeat(s, dh // gs, axis=-1)
 
 
-def flash_decode_kernel(pos_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
-                        o_ref, acc_ref, m_ref, l_ref, *,
-                        blk: int, softcap: float, scale: float):
-    """One (B, Kh) cell; online-softmax accumulation over live KV blocks."""
+def _online_softmax_step(pos, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                         o_ref, acc_ref, m_ref, l_ref, *,
+                         blk: int, softcap: float, scale: float):
+    """One grid step of the online-softmax decode: init scratch at t=0,
+    accumulate the current KV block when it is live for ``pos``, emit the
+    normalized output at the last step.  Shared by the contiguous and
+    paged kernels -- they differ only in where ``pos`` comes from and how
+    the BlockSpec index maps pick the HBM block."""
     t = pl.program_id(2)
     nt = pl.num_programs(2)
-    pos = pos_ref[0]
 
     @pl.when(t == 0)
     def _init():
@@ -114,6 +129,26 @@ def flash_decode_kernel(pos_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
     @pl.when(t == nt - 1)
     def _finalize():
         o_ref[0, 0] = acc_ref[...] / l_ref[...]
+
+
+def flash_decode_kernel(pos_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                        o_ref, acc_ref, m_ref, l_ref, *,
+                        blk: int, softcap: float, scale: float):
+    """One (B, Kh) cell; online-softmax accumulation over live KV blocks."""
+    _online_softmax_step(pos_ref[0], q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                         o_ref, acc_ref, m_ref, l_ref,
+                         blk=blk, softcap=softcap, scale=scale)
+
+
+def paged_flash_decode_kernel(pt_ref, pos_ref, q_ref, kc_ref, ks_ref,
+                              vc_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref,
+                              *, blk: int, softcap: float, scale: float):
+    """Paged cell: identical math, but ``pos`` is per-request and the KV
+    blocks were gathered through the page table by the index maps (the
+    kernel body never sees physical page ids)."""
+    _online_softmax_step(pos_ref[pl.program_id(0)], q_ref, kc_ref, ks_ref,
+                         vc_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref,
+                         blk=blk, softcap=softcap, scale=scale)
 
 
 @functools.partial(jax.jit,
@@ -180,3 +215,76 @@ def flash_decode_pallas(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(pos_arr, q, k_codes, k_scale, v_codes, v_scale)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_flash_decode_pallas(q: jax.Array, k_codes: jax.Array,
+                              k_scale: jax.Array, v_codes: jax.Array,
+                              v_scale: jax.Array, page_table: jax.Array,
+                              positions: jax.Array, *,
+                              softcap: float = 0.0,
+                              interpret: bool = False) -> jax.Array:
+    """GQA decode attention over a PAGED posit8 KV pool.
+
+    q                : (B, Kh, G, Dh) float -- one new token per request.
+    k_codes/v_codes  : (P, page, Kh, Dh) uint8 pool pages (page = KV blk).
+    k_scale/v_scale  : (P, page, Kh, Gs) po2 scales, unified layout.
+    page_table       : (B, NP) int32 -- request i's logical block t lives
+                       in pool page ``page_table[i, t]``; rows are padded
+                       with a parking page id past the live prefix.
+    positions        : (B,) int32 -- request i attends to logical slots
+                       [0, positions[i]].
+
+    The whole page indirection lives in the KV BlockSpec index map: the
+    contiguous kernel's clamp ``min(t, pos // blk)`` becomes the gather
+    ``page_table[i, min(t, pos[i] // blk)]`` through the two prefetched
+    scalar operands.  Past a request's live prefix the gathered page id
+    stops changing, so Pallas sees an unchanged block index and issues no
+    DMA -- a step still moves only ceil((pos+1)/page) pages per request.
+
+    Returns (B, Kh, G, Dh) f32 attention output.
+    """
+    b, kh, g, dh = q.shape
+    blk = k_codes.shape[1]
+    gs = k_scale.shape[-1]
+    npp = page_table.shape[1]
+
+    def q_im(i, h, tt, pt_ref, pos_ref):
+        return (i, h, 0, 0)
+
+    def kv_im(i, h, tt, pt_ref, pos_ref):
+        # the PR 2 clamp, now a gather: dead steps re-read the request's
+        # last live page (same block index -> no DMA)
+        tc = jnp.minimum(tt, pos_ref[i] // blk)
+        return (pt_ref[i * npp + tc], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kh, npp),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), q_im),
+            pl.BlockSpec((1, blk, 1, dh), kv_im),
+            pl.BlockSpec((1, blk, 1, gs), kv_im),
+            pl.BlockSpec((1, blk, 1, dh), kv_im),
+            pl.BlockSpec((1, blk, 1, gs), kv_im),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), q_im),
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),   # acc
+            pltpu.VMEM((g, 1), jnp.float32),    # running max m
+            pltpu.VMEM((g, 1), jnp.float32),    # normalizer l
+        ],
+    )
+    kernel = functools.partial(paged_flash_decode_kernel, blk=blk,
+                               softcap=float(softcap),
+                               scale=1.0 / math.sqrt(dh))
+    pt_flat = page_table.reshape(-1).astype(jnp.int32)
+    pos_arr = jnp.asarray(positions, jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, dh), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pt_flat, pos_arr, q, k_codes, k_scale, v_codes, v_scale)

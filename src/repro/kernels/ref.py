@@ -20,7 +20,7 @@ from ..core.formats import FormatSpec
 from ..core.packing import unpack
 
 __all__ = ["rmmec_matmul_ref", "quire_dot_ref", "dequant_ref",
-           "flash_decode_ref"]
+           "flash_decode_ref", "paged_flash_decode_ref"]
 
 
 def _expand_scales(scales: jax.Array, k_rows: int) -> jax.Array:
@@ -68,6 +68,36 @@ def flash_decode_ref(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
         s = jnp.tanh(s / softcap) * softcap
     tpos = jnp.arange(k_codes.shape[1])
     s = jnp.where(tpos[None, None, None, :] <= pos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,btkd->bkgd", p, v)
+
+
+def paged_flash_decode_ref(q: jax.Array, k_codes: jax.Array,
+                           k_scale: jax.Array, v_codes: jax.Array,
+                           v_scale: jax.Array, page_table: jax.Array,
+                           positions: jax.Array,
+                           softcap: float = 0.0) -> jax.Array:
+    """Naive oracle for the paged kernel: gather every request's pages
+    back into a contiguous cache, then one masked softmax per request
+    with its own ``positions[i]``.  Shapes match
+    :func:`..flash_decode.paged_flash_decode_pallas` (pool pages
+    (P, page, Kh, Dh), page table (B, NP), positions (B,))."""
+    b, kh, g, dh = q.shape
+    page = k_codes.shape[1]
+    t = page_table.shape[1] * page
+    # (B, NP, page, Kh, X) -> (B, T, Kh, X): request-contiguous layout
+    def gather(pool):
+        x = pool[page_table]
+        return x.reshape(b, t, *pool.shape[2:])
+    k = _dequant_kv_ref(gather(k_codes), gather(k_scale))
+    v = _dequant_kv_ref(gather(v_codes), gather(v_scale))
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32), k)
+    s = s / jnp.sqrt(jnp.float32(dh))
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    tpos = jnp.arange(t)
+    s = jnp.where(tpos[None, None, None, :] <= positions[:, None, None, None],
+                  s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bkgt,btkd->bkgd", p, v)
 

@@ -25,7 +25,7 @@ Usage:
   python -m repro.launch.dryrun --all --multi-pod      # 512-chip pass
   ... [--policy mixed|fp4|posit8_0|bf16|fp32] [--attn-impl triangular]
       [--quantized-kv] [--decode-impl blocked|flash] [--opt-dtype posit8]
-      [--tag NAME]
+      [--paged [--pool-frac 0.25]] [--tag NAME]
 """
 
 import argparse
@@ -131,8 +131,18 @@ def _lower_one(cfg, shape, mesh, policy, policy_name, run_kw, quantized_kv):
     else:  # decode
         params_sds = _serve_params_sds(cfg, policy, policy_name)
         params_sh = sh.param_sharding_tree(mesh, params_sds)
-        cache_sds = sp.cache_specs(cfg, shape.global_batch, shape.seq_len,
-                                   quantized_kv, kv_group=policy.group_size)
+        if run_kw.get("paged"):
+            # continuous-batching cell: pool pages + page table instead
+            # of the dense (B, max_len) cache; build_serve_step lowers
+            # unchanged (the paged dispatch is cache-structure-driven)
+            cache_sds = sp.paged_cache_specs(
+                cfg, shape.global_batch, shape.seq_len,
+                pool_frac=run_kw.get("pool_frac", 0.25),
+                kv_group=policy.group_size)
+        else:
+            cache_sds = sp.cache_specs(cfg, shape.global_batch,
+                                       shape.seq_len, quantized_kv,
+                                       kv_group=policy.group_size)
         cache_sh = sh.cache_sharding_tree(mesh, cache_sds,
                                           shape.global_batch)
         tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
@@ -183,7 +193,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                grad_compression: str = "none", qat: bool = True,
                seq_chunk: int = None, verbose: bool = True,
                extrapolate: bool = True, last_logit_only: bool = False,
-               attn_scores_f32: bool = True, decode_impl: str = "blocked"):
+               attn_scores_f32: bool = True, decode_impl: str = "blocked",
+               paged: bool = False, pool_frac: float = 0.25):
     """Full-cell dry-run.
 
     ``extrapolate``: XLA's cost_analysis counts a while-loop (scan) body
@@ -217,7 +228,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     policy = _policy(policy_name)
     run_kw = dict(qat=qat, opt_dtype=opt_dtype, microbatch=microbatch,
                   grad_compression=grad_compression,
-                  last_logit_only=last_logit_only)
+                  last_logit_only=last_logit_only,
+                  paged=paged, pool_frac=pool_frac)
 
     compiled, t_lower, t_compile = _lower_one(
         cfg, shape, mesh, policy, policy_name, run_kw, quantized_kv)
@@ -266,6 +278,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "quantized_kv": quantized_kv, "opt_dtype": opt_dtype,
         "attn_impl": cfg.attn_impl, "remat": cfg.remat,
         "decode_impl": cfg.decode_impl,
+        "paged": paged, "pool_frac": pool_frac if paged else None,
         "grad_compression": grad_compression, "qat": qat,
         "microbatch": microbatch, "extrapolation": extrap,
         "lower_s": t_lower, "compile_s": t_compile,
@@ -327,6 +340,12 @@ def main():
     ap.add_argument("--attn-impl", default=None)
     ap.add_argument("--decode-impl", default="blocked",
                     choices=["blocked", "flash"])
+    ap.add_argument("--paged", action="store_true",
+                    help="decode cells lower the paged-KV (continuous "
+                         "batching) cache plane instead of the dense one")
+    ap.add_argument("--pool-frac", type=float, default=0.25,
+                    help="paged pool capacity as a fraction of the "
+                         "worst-case batch*max_len token count")
     ap.add_argument("--remat", default=None)
     ap.add_argument("--seq-chunk", type=int, default=None)
     ap.add_argument("--microbatch", type=int, default=0)
@@ -370,7 +389,8 @@ def main():
                 grad_compression=args.grad_compression,
                 qat=not args.no_qat, seq_chunk=args.seq_chunk,
                 extrapolate=not args.no_extrapolate,
-                decode_impl=args.decode_impl)
+                decode_impl=args.decode_impl,
+                paged=args.paged, pool_frac=args.pool_frac)
             path = save_record(rec, args.tag)
             print("saved", path)
         except Exception as e:

@@ -2,6 +2,13 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
       --policy mixed --batch 4 --prompt-len 16 --steps 32 [--quantized-kv]
+
+``--continuous`` serves the same request mix through the paged-KV
+``ContinuousEngine`` instead: per-request prompt/generation lengths,
+FIFO admission against a page pool, one batched decode step for all
+live requests (see serve/__init__ for the page-table layout).
+
+  ... --continuous --batch 8 --n-pages 48 [--page-size 16]
 """
 
 from __future__ import annotations
@@ -16,29 +23,10 @@ import numpy as np
 from ..configs import get_config
 from ..core.policy import PrecisionPolicy
 from ..models import zoo
-from ..serve.engine import ServeEngine
+from ..serve.engine import ContinuousEngine, ServeEngine
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--policy", default="mixed")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--steps", type=int, default=32)
-    ap.add_argument("--quantized-kv", action="store_true")
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    params = zoo.init_model(jax.random.PRNGKey(0), cfg)
-    policy = None
-    if args.policy not in ("fp32", "none"):
-        policy = (PrecisionPolicy.paper_mixed() if args.policy == "mixed"
-                  else PrecisionPolicy.uniform(args.policy))
+def _static(args, cfg, params, policy) -> None:
     eng = ServeEngine(cfg, params,
                       max_len=args.prompt_len + args.steps + 8,
                       quantized_kv=args.quantized_kv, policy=policy)
@@ -51,6 +39,65 @@ def main() -> None:
     tps = args.batch * args.steps / dt
     print(f"generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
     print(out[:, args.prompt_len:][:2])
+
+
+def _continuous(args, cfg, params, policy) -> None:
+    rng = np.random.default_rng(0)
+    max_len = args.prompt_len + args.steps + 8
+    eng = ContinuousEngine(
+        cfg, params, n_pages=args.n_pages, page_size=args.page_size,
+        max_batch=args.batch, max_len=max_len, policy=policy,
+        temperature=args.temperature)
+    # ragged request mix around the CLI's nominal prompt/step counts
+    n_req = 2 * args.batch
+    rids = []
+    for i in range(n_req):
+        plen = max(1, args.prompt_len - int(rng.integers(0, 4)))
+        steps = max(1, args.steps - int(rng.integers(0, args.steps // 2 + 1)))
+        rids.append(eng.submit(rng.integers(0, cfg.vocab, (plen,)), steps))
+    t0 = time.time()
+    out = eng.run()
+    dt = time.time() - t0
+    toks = sum(len(eng.scheduler.finished[r].generated) for r in rids)
+    print(f"served {n_req} requests / {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s) over {eng.steps_run} engine steps")
+    print(f"pool: {eng.pool.n_pages} pages x {eng.pool.page_size} slots, "
+          f"peak used {eng.pool.alloc_peak}, "
+          f"preemptions {eng.scheduler.preemption_count}")
+    for r in rids[:2]:
+        print(f"  req {r}: {np.asarray(eng.scheduler.finished[r].generated)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--policy", default="mixed")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--quantized-kv", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--continuous", "--paged", action="store_true",
+                    help="serve through the paged-KV ContinuousEngine")
+    ap.add_argument("--n-pages", type=int, default=48,
+                    help="paged pool size (allocatable pages)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per page (default: the decode KV block)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = zoo.init_model(jax.random.PRNGKey(0), cfg)
+    policy = None
+    if args.policy not in ("fp32", "none"):
+        policy = (PrecisionPolicy.paper_mixed() if args.policy == "mixed"
+                  else PrecisionPolicy.uniform(args.policy))
+    if args.continuous:
+        _continuous(args, cfg, params, policy)
+    else:
+        _static(args, cfg, params, policy)
 
 
 if __name__ == "__main__":

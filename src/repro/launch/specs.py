@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig, ShapeConfig
 from ..models import transformer as T
 
-__all__ = ["batch_specs", "cache_specs", "input_specs"]
+__all__ = ["batch_specs", "cache_specs", "paged_cache_specs", "input_specs"]
 
 
 def _sds(shape, dtype):
@@ -45,9 +45,34 @@ def cache_specs(cfg: ModelConfig, b: int, max_len: int,
         lambda: T.init_cache(cfg, b, max_len, quantized_kv, kv_group))
 
 
+def paged_cache_specs(cfg: ModelConfig, b: int, max_len: int,
+                      pool_frac: float = 0.25, kv_group=None,
+                      page_size=None) -> Dict[str, Any]:
+    """Abstract paged decode cache: pool pages + page table + positions.
+
+    The pool holds ``pool_frac`` of the worst-case ``b * max_len`` token
+    capacity (continuous batching's bet: live tokens << max_len); the
+    page table still spans the full ``max_len`` per request.  Leaves
+    carry the leading layer-scan axis exactly as the engine builds them,
+    so ``build_serve_step`` lowers unchanged -- the paged dispatch is
+    cache-structure-driven."""
+    from ..kernels.flash_decode import default_kv_block
+    from ..serve.paged_kv import PagedKVPool
+    psize = page_size or default_kv_block(max_len)
+    npp = max_len // psize
+    n_pages = max(int(pool_frac * b * npp), npp)
+    specs = PagedKVPool.device_specs(cfg, n_pages, psize, kv_group)
+    L = cfg.n_layers
+    specs["page_table"] = _sds((L, b, npp), jnp.int32)
+    specs["positions"] = _sds((L, b), jnp.int32)
+    return specs
+
+
 def input_specs(cfg: ModelConfig, shape: ShapeConfig,
                 quantized_kv: bool = False) -> Dict[str, Any]:
-    """Abstract inputs for the step function that ``shape.kind`` lowers."""
+    """Abstract inputs for the step function that ``shape.kind`` lowers.
+    (Paged decode cells swap ``cache`` for :func:`paged_cache_specs` --
+    the dry-run driver composes that itself.)"""
     b, s = shape.global_batch, shape.seq_len
     if shape.kind == "train":
         return {"batch": batch_specs(cfg, b, s)}

@@ -42,7 +42,7 @@ from . import layers as L
 
 __all__ = ["attn_init", "attn_apply", "attn_decode",
            "quantize_kv", "dequantize_kv", "kv_scale_cols",
-           "decode_quantized_blocks"]
+           "decode_quantized_blocks", "paged_decode_blocked"]
 
 
 def attn_init(key, cfg):
@@ -98,11 +98,16 @@ def _attend_block(q5, k, v, bias, f32: bool = True):
     return jnp.einsum("bkgqt,btkd->bqkgd", p, v)
 
 
-def attn_apply(p, x, cfg, positions=None, mode: str = "train"):
+def attn_apply(p, x, cfg, positions=None, mode: str = "train",
+               kv_mask=None):
     """Causal self-attention over a full sequence (train / prefill).
 
     Returns (out, (k, v)) -- the kv tensors feed cache initialization in
     prefill mode.
+
+    ``kv_mask``: optional (B, S) bool, True = real token.  Keys at False
+    slots are masked out of every query's softmax (ragged left-padded
+    serving batches: pad tokens stop leaking into real ones).
     """
     b, s, d = x.shape
     if positions is None:
@@ -117,8 +122,14 @@ def attn_apply(p, x, cfg, positions=None, mode: str = "train"):
     f32 = getattr(cfg, "attn_scores_f32", True)
     c = min(cfg.seq_chunk, s)
     n_chunks = s // c if s % c == 0 else 1
+    pad_bias = None
+    if kv_mask is not None:
+        # (B, 1, 1, 1, S): added onto the (1,1,1,Sq,Skv) causal bias
+        pad_bias = jnp.where(kv_mask, 0.0, -1e30)[:, None, None, None, :]
     if n_chunks <= 1:
         bias = _causal_bias(s, s, 0)
+        if pad_bias is not None:
+            bias = bias + pad_bias
         out = _attend_block(q5, k, v, bias, f32)
     elif impl == "triangular":
         outs = []
@@ -126,11 +137,13 @@ def attn_apply(p, x, cfg, positions=None, mode: str = "train"):
             qi = q5[:, i * c:(i + 1) * c]
             kv_len = (i + 1) * c
             bias = _causal_bias(c, kv_len, i * c)
+            if pad_bias is not None:
+                bias = bias + pad_bias[..., :kv_len]
             outs.append(_attend_block(qi, k[:, :kv_len], v[:, :kv_len],
                                       bias, f32))
         out = jnp.concatenate(outs, axis=1)
     else:  # online-softmax scan over kv chunks
-        out = _flash_scan(q5, k, v, c)
+        out = _flash_scan(q5, k, v, c, kv_mask)
     out = out.reshape(b, s, cfg.n_heads * q.shape[-1])
     out = shard(out, "batch", "seq", "heads")
     return L.dense(p["wo"], out), (k, v)
@@ -142,7 +155,7 @@ def _causal_bias(sq: int, skv: int, q_offset: int) -> jax.Array:
     return jnp.where(kpos <= qpos, 0.0, -1e30)[None, None, None]
 
 
-def _flash_scan(q5, k, v, c: int):
+def _flash_scan(q5, k, v, c: int, kv_mask=None):
     """Online-softmax over KV chunks (lax.scan; numerically standard)."""
     b, s, kh, g, hd = q5.shape
     n = s // c
@@ -150,15 +163,24 @@ def _flash_scan(q5, k, v, c: int):
     v_c = v.reshape(b, n, c, kh, hd).transpose(1, 0, 2, 3, 4)
     scale = 1.0 / math.sqrt(hd)
     qpos = jnp.arange(s)
+    km_c = None
+    if kv_mask is not None:
+        km_c = kv_mask.reshape(b, n, c).transpose(1, 0, 2)   # (n, B, c)
 
     def body(carry, xs):
         acc, m, l = carry
-        kc, vc, idx = xs
+        if km_c is None:
+            kc, vc, idx = xs
+            km = None
+        else:
+            kc, vc, idx, km = xs
         sc = jnp.einsum("bqkgd,btkd->bkgqt", q5, kc,
                         preferred_element_type=jnp.float32) * scale
         kpos = idx * c + jnp.arange(c)
-        mask = kpos[None, :] <= qpos[:, None]            # (Sq, c)
-        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        mask = (kpos[None, :] <= qpos[:, None])[None, None, None]  # (Sq, c)
+        if km is not None:
+            mask = mask & km[:, None, None, None, :]     # (B,1,1,Sq,c)
+        sc = jnp.where(mask, sc, -1e30)
         m_new = jnp.maximum(m, sc.max(-1))
         p = jnp.exp(sc - m_new[..., None])
         alpha = jnp.exp(m - m_new)
@@ -170,8 +192,9 @@ def _flash_scan(q5, k, v, c: int):
     acc0 = jnp.zeros((b, kh, g, s, hd), q5.dtype)
     m0 = jnp.full((b, kh, g, s), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((b, kh, g, s), jnp.float32)
-    (acc, m, l), _ = jax.lax.scan(
-        body, (acc0, m0, l0), (k_c, v_c, jnp.arange(n)))
+    xs = (k_c, v_c, jnp.arange(n)) if km_c is None else \
+        (k_c, v_c, jnp.arange(n), km_c)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), xs)
     out = acc / l[..., None].astype(acc.dtype)
     return out.transpose(0, 3, 1, 2, 4)                  # (B,S,Kh,G,Dh)
 
@@ -249,7 +272,8 @@ def _cache_write(layer_cache, k_new, v_new, pos):
 
 
 def decode_quantized_blocks(q4, layer_cache, pos, softcap: float = 0.0,
-                            blk: Optional[int] = None) -> jax.Array:
+                            blk: Optional[int] = None,
+                            pad=None) -> jax.Array:
     """Pure-XLA length-aware decode over a posit8 KV cache.
 
     Online-softmax ``fori_loop`` over KV blocks with a DYNAMIC trip count
@@ -258,6 +282,9 @@ def decode_quantized_blocks(q4, layer_cache, pos, softcap: float = 0.0,
     ``max_len`` buffer is never read.  This is the portable analogue of
     ``kernels/flash_decode`` (same math, XLA-lowered -- works under the
     dry-run's host compile and on sharded caches).
+
+    ``pad``: optional (B,) int32 left-pad widths of a ragged batch --
+    cache slots below ``pad[b]`` hold pad-token KV and are masked out.
 
     q4: (B, Kh, G, Dh).  Returns (B, Kh, G, Dh) f32.
     """
@@ -282,7 +309,11 @@ def decode_quantized_blocks(q4, layer_cache, pos, softcap: float = 0.0,
         if softcap > 0.0:
             s = jnp.tanh(s / softcap) * softcap
         kpos = start + jnp.arange(blk)
-        s = jnp.where(kpos[None, None, None, :] <= pos, s, -1e30)
+        live = kpos[None, None, None, :] <= pos
+        if pad is not None:
+            live = live & (kpos[None, None, None, :] >=
+                           pad[:, None, None, None])
+        s = jnp.where(live, s, -1e30)
         m_new = jnp.maximum(m, s.max(-1, keepdims=True))
         p = jnp.exp(s - m_new)
         alpha = jnp.exp(m - m_new)
@@ -302,16 +333,84 @@ def decode_quantized_blocks(q4, layer_cache, pos, softcap: float = 0.0,
     return acc / l
 
 
-def attn_decode(p, x, cfg, layer_cache, pos):
+def paged_decode_blocked(q4, layer_cache, page_table, positions,
+                         softcap: float = 0.0) -> jax.Array:
+    """Pure-XLA paged decode: the portable analogue of
+    ``kernels/flash_decode.paged_flash_decode_pallas``.
+
+    The pool pages ARE the KV blocks: iteration ``t`` gathers each
+    request's logical block ``t`` through its page-table row
+    (``pool[page_table[:, t]]``) and runs the same online-softmax update
+    as :func:`decode_quantized_blocks` -- identical math and block
+    partition, so a contiguous and a paged decode of the same tokens
+    agree bitwise when ``blk == page_size``.  The trip count is the MAX
+    live-block count over the batch; a block past a shorter request's
+    prefix is fully masked for that row and every update degenerates to
+    an exact no-op (p = exp(-1e30 - m) underflows to 0, alpha = 1).
+
+    q4         : (B, Kh, G, Dh) queries, one token per request.
+    layer_cache: pool dict with k_codes/v_codes (P, page, Kh, Dh) and
+                 k_scale/v_scale (P, page, Kh, Gs).
+    page_table : (B, NP) int32, rows padded with a parking page id.
+    positions  : (B,) int32 per-request positions.
+    """
+    b, kh, g, dh = q4.shape
+    kc, ks = layer_cache["k_codes"], layer_cache["k_scale"]
+    vc, vs = layer_cache["v_codes"], layer_cache["v_scale"]
+    psize = kc.shape[1]
+    qf = q4.astype(jnp.float32) * (1.0 / math.sqrt(dh))
+    pos_col = positions[:, None, None, None]
+
+    def body(t, carry):
+        acc, m, l = carry
+        pg = jnp.take(page_table, t, axis=1)             # (B,)
+        k = dequantize_kv(kc[pg], ks[pg], jnp.float32)   # (B, page, Kh, Dh)
+        s = jnp.einsum("bkgd,btkd->bkgt", qf, k,
+                       preferred_element_type=jnp.float32)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = t * psize + jnp.arange(psize)
+        s = jnp.where(kpos[None, None, None, :] <= pos_col, s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1, keepdims=True)
+        v = dequantize_kv(vc[pg], vs[pg], jnp.float32)
+        pv = jnp.einsum("bkgt,btkd->bkgd", p, v,
+                        preferred_element_type=jnp.float32)
+        return acc * alpha + pv, m_new, l
+
+    acc0 = jnp.zeros((b, kh, g, dh), jnp.float32)
+    m0 = jnp.full((b, kh, g, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, 1), jnp.float32)
+    n_live = (jnp.max(positions) + psize) // psize
+    acc, _, l = jax.lax.fori_loop(0, n_live, body, (acc0, m0, l0))
+    return acc / l
+
+
+def attn_decode(p, x, cfg, layer_cache, pos, pad=None):
     """One-token decode step. x: (B, 1, D); pos: scalar current position.
 
     Returns (out, updated_layer_cache).  A bf16 cache takes the dense
     full-buffer read (the baseline the benchmarks compare against); a
     posit8 cache takes the length-aware quantized path -- codes are
     dequantized per live block, on-chip, never materialized in HBM.
+    A PAGED cache (the layer dict carries ``page_table``/``positions``)
+    dispatches to :func:`_attn_decode_paged`: per-request positions, KV
+    read/written through the page table, ``pos`` ignored.
+
+    ``pad``: optional (B,) left-pad widths for ragged static batches --
+    RoPE positions shift to ``pos - pad[b]`` and cache slots below
+    ``pad[b]`` are masked, so mixed-length prompts decode like their
+    unpadded selves.
     """
+    if "page_table" in layer_cache:
+        return _attn_decode_paged(p, x, cfg, layer_cache)
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    if pad is None:
+        positions = jnp.full((b, 1), pos, jnp.int32)
+    else:
+        positions = (pos - pad).astype(jnp.int32)[:, None]
     if cfg.rope_kind == "mrope":
         positions = jnp.broadcast_to(positions, (3, b, 1))
     q, k_new, v_new = _qkv(p, x, cfg, positions)
@@ -324,7 +423,7 @@ def attn_decode(p, x, cfg, layer_cache, pos):
     hd = q.shape[-1]
     if "k" not in layer_cache:
         q4 = q.reshape(b, cfg.n_kv_heads, g, hd)
-        if getattr(cfg, "decode_impl", "blocked") == "flash":
+        if pad is None and getattr(cfg, "decode_impl", "blocked") == "flash":
             from ..kernels.flash_decode import flash_decode_pallas
             from ..kernels.ops import should_interpret
             out4 = flash_decode_pallas(
@@ -333,16 +432,70 @@ def attn_decode(p, x, cfg, layer_cache, pos):
                 softcap=cfg.attn_logit_softcap,
                 interpret=should_interpret())
         else:
+            # ragged batches take the XLA path (the fused kernel carries
+            # no pad operand; pad=None is the common serving case)
             out4 = decode_quantized_blocks(q4, layer_cache, pos,
-                                           cfg.attn_logit_softcap)
+                                           cfg.attn_logit_softcap, pad=pad)
         out = out4.astype(x.dtype).reshape(b, 1, cfg.n_heads * hd)
         return L.dense(p["wo"], out), layer_cache
     k, v = layer_cache["k"], layer_cache["v"]
     q5 = q.reshape(b, 1, cfg.n_kv_heads, g, hd)
     s = _scores(q5, k, cfg.attn_logit_softcap)       # (B,Kh,G,1,T)
     tpos = jnp.arange(k.shape[1])
-    s = jnp.where(tpos[None, None, None, None, :] <= pos, s, -1e30)
+    live = tpos[None, None, None, None, :] <= pos
+    if pad is not None:
+        live = live & (tpos[None, None, None, None, :] >=
+                       pad[:, None, None, None, None])
+    s = jnp.where(live, s, -1e30)
     pw = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     out = jnp.einsum("bkgqt,btkd->bqkgd", pw, v)
     out = out.reshape(b, 1, cfg.n_heads * hd)
     return L.dense(p["wo"], out), layer_cache
+
+
+def _attn_decode_paged(p, x, cfg, layer_cache):
+    """Paged one-token decode: each request reads/writes posit8 KV pages
+    through its page-table row at its OWN position (the layer cache
+    carries ``page_table`` (B, NP) and ``positions`` (B,) alongside the
+    pool pages; the engine broadcasts them over the layer-scan axis).
+
+    The new token's quantized k/v land at pool slot
+    ``(page_table[b, pos_b // page], pos_b % page)`` -- a batched scatter
+    -- then attention runs over the live pages (fused Pallas kernel under
+    ``decode_impl='flash'``, XLA gather fallback otherwise)."""
+    b = x.shape[0]
+    page_table = layer_cache["page_table"]
+    positions = layer_cache["positions"]
+    pos2 = positions[:, None]                   # (B, 1)
+    if cfg.rope_kind == "mrope":
+        # text continuation: t/h/w streams all advance with the 1-D
+        # position, mirroring the contiguous decode path
+        pos2 = jnp.broadcast_to(pos2, (3, b, 1))
+    q, k_new, v_new = _qkv(p, x, cfg, pos2)
+    psize = layer_cache["k_codes"].shape[1]
+    group = _cache_group(layer_cache)
+    kc_new, ks_new = quantize_kv(k_new, group)
+    vc_new, vs_new = quantize_kv(v_new, group)
+    pg = jnp.take_along_axis(page_table, (positions // psize)[:, None],
+                             axis=1)[:, 0]
+    row = positions % psize
+    out = dict(layer_cache)
+    out["k_codes"] = layer_cache["k_codes"].at[pg, row].set(kc_new[:, 0])
+    out["v_codes"] = layer_cache["v_codes"].at[pg, row].set(vc_new[:, 0])
+    out["k_scale"] = layer_cache["k_scale"].at[pg, row].set(ks_new[:, 0])
+    out["v_scale"] = layer_cache["v_scale"].at[pg, row].set(vs_new[:, 0])
+    g = cfg.n_heads // cfg.n_kv_heads
+    hd = q.shape[-1]
+    q4 = q.reshape(b, cfg.n_kv_heads, g, hd)
+    if getattr(cfg, "decode_impl", "blocked") == "flash":
+        from ..kernels.flash_decode import paged_flash_decode_pallas
+        from ..kernels.ops import should_interpret
+        out4 = paged_flash_decode_pallas(
+            q4, out["k_codes"], out["k_scale"],
+            out["v_codes"], out["v_scale"], page_table, positions,
+            softcap=cfg.attn_logit_softcap, interpret=should_interpret())
+    else:
+        out4 = paged_decode_blocked(q4, out, page_table, positions,
+                                    cfg.attn_logit_softcap)
+    o = out4.astype(x.dtype).reshape(b, 1, cfg.n_heads * hd)
+    return L.dense(p["wo"], o), out

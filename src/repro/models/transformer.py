@@ -58,15 +58,19 @@ def _block_init(key, cfg, mixer: str, use_moe: bool):
 
 
 def _block_apply(p, x, cfg, mixer: str, use_moe: bool, positions,
-                 cache=None, pos=None, mode: str = "train"):
-    """Returns (x, new_cache, aux)."""
+                 cache=None, pos=None, mode: str = "train",
+                 pad=None, kv_mask=None):
+    """Returns (x, new_cache, aux).  ``pad``/``kv_mask`` carry the ragged
+    left-padded batch info to the attention mixer (decode / prefill);
+    SSM mixers ignore them (ragged serving is attention-family only)."""
     aux = jnp.zeros((), jnp.float32)
     h = L.rmsnorm(p["ln1"], x)
     if mixer == "attn":
         if mode == "decode":
-            h, cache = A.attn_decode(p["attn"], h, cfg, cache, pos)
+            h, cache = A.attn_decode(p["attn"], h, cfg, cache, pos, pad)
         else:
-            h, kv = A.attn_apply(p["attn"], h, cfg, positions, mode)
+            h, kv = A.attn_apply(p["attn"], h, cfg, positions, mode,
+                                 kv_mask=kv_mask)
             if mode == "prefill":
                 cache = {"k": kv[0].astype(jnp.bfloat16),
                          "v": kv[1].astype(jnp.bfloat16)}
@@ -115,7 +119,8 @@ def _group_init(key, cfg):
             for i, (mixer, use_moe) in enumerate(layout)}
 
 
-def _group_apply(p, x, cfg, positions, cache=None, pos=None, mode="train"):
+def _group_apply(p, x, cfg, positions, cache=None, pos=None, mode="train",
+                 pad=None, kv_mask=None):
     layout = _group_layout(cfg)
     aux = jnp.zeros((), jnp.float32)
     # prefill materializes the group cache even from cache=None (it used
@@ -124,7 +129,7 @@ def _group_apply(p, x, cfg, positions, cache=None, pos=None, mode="train"):
     for i, (mixer, use_moe) in enumerate(layout):
         sub = cache.get(f"b{i}") if cache is not None else None
         x, c, a = _block_apply(p[f"b{i}"], x, cfg, mixer, use_moe,
-                               positions, sub, pos, mode)
+                               positions, sub, pos, mode, pad, kv_mask)
         if new_cache is not None:
             new_cache[f"b{i}"] = c
         aux = aux + a
@@ -178,6 +183,10 @@ def _inputs_to_embeds(p, batch, cfg, dtype):
         x = jnp.concatenate([pe, x[:, np_:]], axis=1)
         positions = _mrope_positions(cfg, b, s, np_)
         return x, positions
+    # ragged left-padded serving batches override the arange: position 0
+    # sits at each request's first REAL token (engine supplies these)
+    if "positions" in batch:
+        return x, batch["positions"].astype(jnp.int32)
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     return x, positions
 
@@ -237,6 +246,7 @@ def lm_apply(p, batch, cfg, mode: str = "train", cache=None, policy=None):
             if k in p:
                 p[k] = quantize_tree(p[k], policy, k)
     x, positions = _inputs_to_embeds(p, batch, cfg, dtype)
+    kv_mask = batch.get("kv_mask")      # ragged: (B, S) bool, True = real
     x = shard(x, "batch", "seq", "embed")
     mixer = _family_mixer(cfg)
     aux_total = jnp.zeros((), jnp.float32)
@@ -246,7 +256,8 @@ def lm_apply(p, batch, cfg, mode: str = "train", cache=None, policy=None):
             x, aux = carry
             gp, gc = xs
             gp = quantize_tree(gp, policy, "groups")
-            x, c, a = _group_apply(gp, x, cfg, positions, gc, mode=mode)
+            x, c, a = _group_apply(gp, x, cfg, positions, gc, mode=mode,
+                                   kv_mask=kv_mask)
             return (x, aux + a), c
         body = _maybe_remat(body, cfg)
         (x, aux_total), new_cache = _scan_or_unroll(
@@ -259,7 +270,7 @@ def lm_apply(p, batch, cfg, mode: str = "train", cache=None, policy=None):
             lp, lc = xs
             lp = quantize_tree(lp, policy, "layers")
             x, c, a = _block_apply(lp, x, cfg, mixer, use_moe, positions,
-                                   lc, mode=mode)
+                                   lc, mode=mode, kv_mask=kv_mask)
             return (x, aux + a), c
         body = _maybe_remat(body, cfg)
         (x, aux_total), new_cache = _scan_or_unroll(
@@ -274,8 +285,13 @@ def lm_apply(p, batch, cfg, mode: str = "train", cache=None, policy=None):
     return logits, new_cache, aux_total
 
 
-def lm_decode(p, tokens, cfg, cache, pos):
-    """One decode step: tokens (B, 1) -> (logits (B,1,V), new_cache)."""
+def lm_decode(p, tokens, cfg, cache, pos, pad=None):
+    """One decode step: tokens (B, 1) -> (logits (B,1,V), new_cache).
+
+    ``pad``: optional (B,) left-pad widths of a ragged batch (threaded to
+    the attention mixers).  A PAGED cache (leaves carry
+    ``page_table``/``positions``) ignores ``pos`` entirely -- each
+    request decodes at its own position."""
     dtype = jnp.dtype(cfg.dtype)
     if cfg.frontend == "audio":
         # autoregressive over audio codes: embed via lm_head weights^T
@@ -291,7 +307,8 @@ def lm_decode(p, tokens, cfg, cache, pos):
     if mixer == "group":
         def body(x, xs):
             gp, gc = xs
-            x, c, _ = _group_apply(gp, x, cfg, None, gc, pos, mode="decode")
+            x, c, _ = _group_apply(gp, x, cfg, None, gc, pos,
+                                   mode="decode", pad=pad)
             return x, c
         x, new_cache = _scan_or_unroll(body, x, (p["groups"], cache), cfg)
     else:
@@ -300,7 +317,7 @@ def lm_decode(p, tokens, cfg, cache, pos):
         def body(x, xs):
             lp, lc = xs
             x, c, _ = _block_apply(lp, x, cfg, mixer, use_moe, None,
-                                   lc, pos, mode="decode")
+                                   lc, pos, mode="decode", pad=pad)
             return x, c
         x, new_cache = _scan_or_unroll(body, x, (p["layers"], cache), cfg)
 

@@ -36,6 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = [
     "activation_rules", "use_mesh", "current_mesh", "shard", "param_pspec",
     "param_sharding_tree", "logical_pspec", "batch_pspec", "DATA_AXES",
+    "cache_pspec", "paged_cache_pspec", "cache_sharding_tree",
 ]
 
 _ctx = threading.local()
@@ -237,6 +238,19 @@ def param_sharding_tree(mesh: Mesh, params):
 # Decode-cache sharding rules
 # ---------------------------------------------------------------------------
 
+def _fit_axes(shape: Sequence[int], axes: dict, dim_idx: int, names) -> list:
+    """Greedily stack mesh axes onto ``shape[dim_idx]`` while the dim
+    stays divisible -- THE divisibility rule of the cache planes
+    (contiguous and paged); change it here only."""
+    got = []
+    prod = 1
+    for a in names:
+        if a in axes and shape[dim_idx] % (prod * axes[a]) == 0:
+            got.append(a)
+            prod *= axes[a]
+    return got
+
+
 def cache_pspec(mesh: Mesh, path: str, shape: Sequence[int],
                 batch: int) -> P:
     """Sharding for KV-cache / SSM-state leaves (stacked over layers on
@@ -248,13 +262,7 @@ def cache_pspec(mesh: Mesh, path: str, shape: Sequence[int],
     axes = _mesh_axes(mesh)
 
     def fit_axes(dim_idx, names):
-        got = []
-        prod = 1
-        for a in names:
-            if a in axes and shape[dim_idx] % (prod * axes[a]) == 0:
-                got.append(a)
-                prod *= axes[a]
-        return got
+        return _fit_axes(shape, axes, dim_idx, names)
 
     # find batch dim: first dim equal to batch (after the layer-stack dim)
     bdim = None
@@ -285,12 +293,45 @@ def cache_pspec(mesh: Mesh, path: str, shape: Sequence[int],
     return P(*specs)
 
 
+def paged_cache_pspec(mesh: Mesh, path: str, shape: Sequence[int]) -> P:
+    """Sharding for PAGED decode-cache leaves.
+
+    Pool pages REPLICATE across the data axes: any request's page-table
+    gather may touch any physical page, so splitting the page dim turns
+    every block read into an all-gather (XLA's 'involuntary full
+    rematerialization').  'model' rides the innermost head/feature dim
+    that divides, like the contiguous cache.  ``page_table``/``positions``
+    shard their request (batch) dim on the data axes -- requests, not
+    pages, are the data-parallel unit of continuous batching."""
+    key = path.rsplit("/", 1)[-1]
+    axes = _mesh_axes(mesh)
+    nd = len(shape)
+    specs: list = [None] * nd
+    if key in ("page_table", "positions"):
+        got = _fit_axes(shape, axes, 1,
+                        [x for x in DATA_AXES if x in axes]) if nd > 1 else []
+        if got:
+            specs[1] = tuple(got) if len(got) > 1 else got[0]
+        return P(*specs)
+    if "model" in axes:
+        for i in reversed(range(min(3, nd - 1), nd)):
+            if shape[i] % axes["model"] == 0:
+                specs[i] = "model"
+                break
+    return P(*specs)
+
+
 def cache_sharding_tree(mesh: Mesh, cache, batch: int):
     from ..core.policy import flatten_with_paths
 
     flat = flatten_with_paths(cache)
-    specs = {p: NamedSharding(mesh, cache_pspec(mesh, p, v.shape, batch))
-             for p, v in flat}
+    paged = any(p.rsplit("/", 1)[-1] == "page_table" for p, _ in flat)
+    if paged:
+        specs = {p: NamedSharding(mesh, paged_cache_pspec(mesh, p, v.shape))
+                 for p, v in flat}
+    else:
+        specs = {p: NamedSharding(mesh, cache_pspec(mesh, p, v.shape, batch))
+                 for p, v in flat}
 
     def rebuild(node, path=""):
         if isinstance(node, dict):

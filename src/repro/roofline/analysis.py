@@ -178,8 +178,7 @@ def min_traffic_bytes(cfg: ModelConfig, shape: ShapeConfig,
         return float(wbytes + acts)
     # decode: one token; KV read dominates
     kv_bits = 8 if quantized_kv else 16
-    n_attn = cfg.n_layers if cfg.attn_every == 0 else \
-        cfg.n_layers // cfg.attn_every
+    n_attn = cfg.n_attn_layers
     if cfg.family == "ssm":
         kv = shape.global_batch * cfg.n_layers * \
             (cfg.d_model // max(cfg.rwkv_head_dim, 1)) * \
@@ -204,8 +203,7 @@ def decode_kv_bytes(cfg: ModelConfig, batch: int, max_len: int, pos: int,
     the same attention-layer count as :func:`min_traffic_bytes`.
     """
     from ..models.attention import kv_scale_cols
-    n_attn = cfg.n_layers if cfg.attn_every == 0 else \
-        cfg.n_layers // cfg.attn_every
+    n_attn = cfg.n_attn_layers
     hd = cfg.resolved_head_dim
     rows = n_attn * batch * cfg.n_kv_heads        # per cached token
     if not quantized:

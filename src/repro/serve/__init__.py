@@ -1,1 +1,44 @@
-from .engine import ServeEngine, build_prefill_step, build_serve_step  # noqa: F401
+"""Serving plane: static batching, paged KV, continuous batching.
+
+Two engines share the model step functions:
+
+  * ``ServeEngine`` -- static batching against a dense ``max_len`` cache
+    (optionally posit8-quantized); the oracle the paged plane is tested
+    against.  Accepts ragged LEFT-padded prompts via
+    ``generate(..., lengths=)``.
+  * ``ContinuousEngine`` -- continuous batching over a ``PagedKVPool``.
+
+Page-table layout
+-----------------
+The pool holds posit8 codes + po2 group scales in fixed-size pages,
+stacked over layers: ``(L, P, page, Kh, Dh)`` codes and
+``(L, P, page, Kh, Gs)`` scales, where ``page`` equals the decode
+kernel's KV block (one block partition for paged and contiguous decode)
+and a page id indexes all L layers at once.  Page 0 is the parking
+page: never allocated; padded batch rows write there and page-table
+rows are padded with it.  Each request owns a page-table row
+``(NP,) int32`` mapping logical KV block ``t`` to its pool page; decode
+gathers blocks through it (Pallas: via the scalar-prefetch index map;
+XLA: via a ``fori_loop`` gather) and reads only the live prefix
+ceil((pos+1)/page), so per-step KV bytes track LIVE pages, not
+``max_len``.
+
+Scheduler contract
+------------------
+``Scheduler`` (serve/scheduler.py) owns request state + page accounting:
+FIFO admission gated on ``pages_for(prefix + 1)`` free pages (the head
+blocks the queue -- deterministic, starvation-free), one page allocated
+lazily whenever a running request's position crosses a page boundary,
+LIFO preemption on pool exhaustion (the youngest running request's
+pages are freed and it requeues at the FRONT; its generated tokens are
+kept, so resume re-prefills prompt+generated and greedy decoding
+continues exactly where it stopped), retire-on-finish (EOS or token
+budget) returns pages the same step.  The engine turns that policy into
+batched steps: per-request prefill for admissions, one fixed-shape
+batched decode for everyone running, per-row sampling and retirement.
+"""
+
+from .engine import (ServeEngine, ContinuousEngine,  # noqa: F401
+                     build_prefill_step, build_serve_step)
+from .paged_kv import PagedKVPool, paged_kv_bytes_per_step  # noqa: F401
+from .scheduler import Request, Scheduler  # noqa: F401

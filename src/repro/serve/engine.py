@@ -19,17 +19,18 @@ examples while keeping the step function identical to the dry-run cell.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ModelConfig, RunConfig
+from ..configs.base import ModelConfig
 from ..core.policy import PrecisionPolicy
 from ..models import zoo
 
-__all__ = ["build_prefill_step", "build_serve_step", "ServeEngine"]
+__all__ = ["build_prefill_step", "build_serve_step", "ServeEngine",
+           "ContinuousEngine"]
 
 
 def build_prefill_step(cfg: ModelConfig, last_logit_only: bool = False,
@@ -60,11 +61,20 @@ def build_prefill_step(cfg: ModelConfig, last_logit_only: bool = False,
     return prefill
 
 
-def build_serve_step(cfg: ModelConfig):
-    """(params, tokens (B,1), cache, pos) -> (logits, new_cache)."""
+def build_serve_step(cfg: ModelConfig, ragged: bool = False):
+    """(params, tokens (B,1), cache, pos) -> (logits, new_cache).
 
-    def serve_step(params, tokens, cache, pos):
-        return zoo.decode_model(params, tokens, cfg, cache, pos)
+    ``ragged=True`` adds a trailing ``pad`` operand ((B,) left-pad
+    widths): RoPE positions shift per request and pad cache slots are
+    masked, so a left-padded mixed-length batch decodes like its
+    unpadded per-request selves."""
+
+    if ragged:
+        def serve_step(params, tokens, cache, pos, pad):
+            return zoo.decode_model(params, tokens, cfg, cache, pos, pad)
+    else:
+        def serve_step(params, tokens, cache, pos):
+            return zoo.decode_model(params, tokens, cfg, cache, pos)
 
     return serve_step
 
@@ -90,24 +100,50 @@ class ServeEngine:
             self.cfg, last_logit_only=True,
             quantized_kv=self.quantized_kv, kv_group=kv_group))
         self._step = jax.jit(build_serve_step(self.cfg))
+        self._step_ragged = jax.jit(build_serve_step(self.cfg, ragged=True))
 
     def generate(self, tokens: jax.Array, steps: int,
-                 temperature: float = 0.0, key=None) -> np.ndarray:
-        """tokens: (B, S0) prompt -> (B, S0+steps) completed."""
+                 temperature: float = 0.0, key=None,
+                 lengths=None) -> np.ndarray:
+        """tokens: (B, S0) prompt -> (B, S0+steps) completed.
+
+        ``lengths``: optional (B,) true prompt lengths of a LEFT-padded
+        ragged batch (request b occupies ``tokens[b, S0-lengths[b]:]``).
+        Pad tokens are masked out of attention and RoPE positions start
+        at each request's first real token, so a mixed-length batch
+        generates exactly what per-request calls would."""
         b, s0 = tokens.shape
         batch = {"tokens": tokens}
+        pad = None
+        if lengths is not None:
+            if self.cfg.family not in ("dense", "moe") or \
+                    self.cfg.rope_kind != "default":
+                raise ValueError(
+                    "ragged prompts need a pure-attention family with "
+                    "default RoPE (SSM state would still absorb pads)")
+            lengths = jnp.asarray(lengths, jnp.int32)
+            pad = (s0 - lengths).astype(jnp.int32)          # (B,)
+            idx = jnp.arange(s0, dtype=jnp.int32)[None]
+            batch["positions"] = jnp.maximum(idx - pad[:, None], 0)
+            batch["kv_mask"] = idx >= pad[:, None]
         # prefill is unconditional for every model family: it returns the
         # populated KV cache / SSM state (already posit8 codes+scales
-        # under quantized_kv) that decode continues from.
+        # under quantized_kv) that decode continues from.  Left padding
+        # keeps the LAST column the last real token of every request, so
+        # the last_logit_only logits feed sampling for ragged batches too.
         logits, cache = self._prefill(self.params, batch)
         cache = self._pad_cache(cache, b)
         out = [np.asarray(tokens)]
-        last = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        last = jnp.argmax(logits, -1).astype(jnp.int32)     # (B, 1)
         key = key if key is not None else jax.random.PRNGKey(0)
         for i in range(steps):
             out.append(np.asarray(last))
-            logits, cache = self._step(self.params, last,
-                                       cache, jnp.int32(s0 + i))
+            if pad is None:
+                logits, cache = self._step(self.params, last,
+                                           cache, jnp.int32(s0 + i))
+            else:
+                logits, cache = self._step_ragged(
+                    self.params, last, cache, jnp.int32(s0 + i), pad)
             lg = logits[:, -1]
             if temperature > 0:
                 key, sub = jax.random.split(key)
@@ -144,3 +180,186 @@ class ServeEngine:
             return node
 
         return rec(cache)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching over the paged posit8 KV pool
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ContinuousEngine:
+    """Continuous-batching serving over a paged posit8 KV pool.
+
+    The static ``ServeEngine`` batches a fixed set of requests against a
+    dense ``max_len`` cache: every request pays worst-case KV memory and
+    new arrivals wait for the whole batch.  This engine keeps ONE jitted
+    decode step of shape ``max_batch`` alive and per step (a) admits
+    queued requests (FIFO, gated on free pages; each gets a per-request
+    prefill whose quantized cache scatters into its pages), (b) runs one
+    batched paged decode for every running request at its OWN position,
+    and (c) retires finished requests, returning their pages -- with
+    LIFO preemption (free the youngest's pages, requeue it) when the
+    pool runs dry.  See ``serve/scheduler.py`` for the policy and
+    ``serve/paged_kv.py`` for the page layout.
+
+    The KV plane is ALWAYS the posit8 paged pool (that is the point);
+    weights pack per ``policy`` exactly like the static engine.  At
+    temperature 0 with ``page_size == default_kv_block(max_len)`` of a
+    static engine, outputs match per-request ``ServeEngine.generate``
+    token for token (the paged and contiguous block partitions --
+    and therefore the online-softmax accumulation order -- coincide).
+    """
+
+    cfg: ModelConfig
+    params: Any
+    n_pages: int = 64
+    page_size: Optional[int] = None
+    max_batch: int = 8
+    max_len: int = 512
+    policy: Optional[PrecisionPolicy] = None
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        from ..kernels.flash_decode import default_kv_block
+        from .paged_kv import PagedKVPool
+        from .scheduler import Scheduler
+        if self.cfg.frontend != "none":
+            raise ValueError(
+                "ContinuousEngine serves token prompts; vision/audio "
+                "frontends need per-request frame/patch embeddings the "
+                "request queue does not carry")
+        if self.policy is not None:
+            self.params = zoo.pack_params(self.params, self.policy)
+        kv_group = self.policy.group_size if self.policy else None
+        if self.page_size is None:
+            self.page_size = default_kv_block(self.max_len)
+        assert self.max_len % self.page_size == 0, \
+            (self.max_len, self.page_size)
+        self.max_pages_per_req = self.max_len // self.page_size
+        pool = PagedKVPool(self.cfg, self.n_pages, self.page_size, kv_group)
+        self.scheduler = Scheduler(pool, self.max_batch)
+        # per-request prefill: FULL logits (the request's last real token
+        # sits at len-1 of its page-aligned bucket, not at -1)
+        self._prefill = jax.jit(build_prefill_step(
+            self.cfg, last_logit_only=False,
+            quantized_kv=True, kv_group=kv_group))
+
+        def step(params, tokens, cache):
+            # pos operand is dead on the paged path: positions ride in
+            # the cache (per request), broadcast over the layer scan
+            return zoo.decode_model(params, tokens, self.cfg, cache,
+                                    jnp.int32(0))
+        self._step = jax.jit(step, donate_argnums=(2,))
+        self._key = jax.random.PRNGKey(self.seed)
+        self.steps_run = 0
+        # positions the LAST decode step actually served (requests that
+        # retired within the step included) -- the per-step KV-traffic
+        # ground truth benchmarks read; [] when the step decoded nothing
+        self.last_positions: List[int] = []
+
+    @property
+    def pool(self):
+        return self.scheduler.pool
+
+    # -- request intake -----------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: Optional[int] = None) -> int:
+        """Queue one request; returns its id.  Total length must fit the
+        per-request page-table width (``max_len`` slots)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        total = prompt.size + int(max_new_tokens)
+        if total > self.max_len:
+            raise ValueError(f"prompt+new = {total} exceeds "
+                             f"max_len={self.max_len}")
+        return self.scheduler.submit(
+            prompt, max_new_tokens,
+            eos_id if eos_id is not None else self.eos_id)
+
+    # -- sampling -----------------------------------------------------------
+
+    def _sample(self, lg: np.ndarray) -> int:
+        """One token from one (V,) logit row (greedy at temperature 0,
+        matching ``ServeEngine``'s argmax tie-breaking)."""
+        if self.temperature <= 0:
+            return int(np.argmax(lg))
+        self._key, sub = jax.random.split(self._key)
+        return int(jax.random.categorical(
+            sub, jnp.asarray(lg) / self.temperature))
+
+    # -- one engine step ----------------------------------------------------
+
+    def _prefill_request(self, req) -> None:
+        """Prefill a newly admitted request's prefix (page-aligned
+        right-padded bucket; causal attention keeps pad columns out of
+        real logits) and scatter its quantized cache into its pages."""
+        prefix = req.prefix
+        ln = prefix.size
+        bucket = self.pool.pages_for(ln) * self.page_size
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :ln] = prefix
+        logits, cache_q = self._prefill(self.params,
+                                        {"tokens": jnp.asarray(toks)})
+        self.pool.write_prefill(cache_q, req.pages)
+        nxt = self._sample(np.asarray(logits[0, ln - 1]))
+        req.generated.append(nxt)
+        req.next_token = nxt
+
+    def step(self) -> int:
+        """Admit + prefill arrivals, one batched decode for everyone
+        running, retire finishers.  Returns decoded request count."""
+        sched = self.scheduler
+        for req in sched.admit():
+            self._prefill_request(req)
+            if req.done:
+                sched.retire(req)
+        for req in list(sched.running):
+            if req.status == "running":      # a victim may drop mid-loop
+                sched.ensure_capacity(req)
+        running = list(sched.running)
+        self.last_positions = [req.position for req in running]
+        if not running:
+            return 0
+        b, npp = self.max_batch, self.max_pages_per_req
+        tokens = np.zeros((b, 1), np.int32)
+        positions = np.zeros((b,), np.int32)
+        page_table = np.zeros((b, npp), np.int32)   # pad rows park on page 0
+        for row, req in enumerate(running):
+            tokens[row, 0] = req.next_token
+            positions[row] = req.position
+            page_table[row, :len(req.pages)] = req.pages
+        L = self.cfg.n_layers
+        cache = self.pool.device_state()
+        cache["page_table"] = jnp.tile(
+            jnp.asarray(page_table)[None], (L, 1, 1))
+        cache["positions"] = jnp.tile(jnp.asarray(positions)[None], (L, 1))
+        logits, new_cache = self._step(self.params, jnp.asarray(tokens),
+                                       cache)
+        self.pool.set_device_state(new_cache)
+        lg = np.asarray(logits[:, 0].astype(jnp.float32))
+        for row, req in enumerate(running):
+            nxt = self._sample(lg[row])
+            req.generated.append(nxt)
+            req.next_token = nxt
+            if req.done:
+                sched.retire(req)
+        self.steps_run += 1
+        return len(running)
+
+    # -- drive to completion ------------------------------------------------
+
+    def run(self, max_steps: int = 100000) -> Dict[int, np.ndarray]:
+        """Step until every submitted request finished; returns
+        {rid: prompt+generated}.  Admission can always make progress
+        when nothing is running (all pages are free then), so the step
+        bound only guards against bugs."""
+        steps = 0
+        while self.scheduler.has_work:
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("continuous engine failed to drain")
+        return {rid: req.output
+                for rid, req in self.scheduler.finished.items()}

@@ -1,0 +1,196 @@
+"""Paged posit8 KV pool: the physical cache plane of continuous batching.
+
+The static engine's contiguous cache charges every request worst-case
+``max_len`` KV memory up front.  The pool instead holds one shared set
+of fixed-size PAGES per layer -- posit8 codes + po2 group scales, the
+same unified ``quant.group_scales`` layout as the contiguous quantized
+cache -- and each request owns an ordered list of page ids (its page
+table).  A request's KV footprint is ceil(live_tokens / page) pages, so
+pool capacity is spent on LIVE tokens, and admission/preemption decide
+who gets pages when they run out.
+
+Layout (page size == the decode kernel's KV block, so paged and
+contiguous decode share one block partition and agree bitwise):
+
+  k_codes/v_codes : (L, P, page, Kh, Dh) uint8
+  k_scale/v_scale : (L, P, page, Kh, Gs) bf16, Gs = Dh/group
+
+A page id indexes every layer's pool simultaneously (one allocation
+covers all L layers).  Page 0 is the PARKING page: never allocated,
+never read through a live mask -- padded batch rows in the fixed-shape
+decode step write their garbage there, and page-table rows are padded
+with it so dead gathers stay in bounds.
+
+Alloc/free is host-side (a free list, LIFO for locality); the device
+arrays move only through ``write_prefill`` (batched scatter of a
+quantized prefill cache into pages) and the decode step itself (the
+per-token scatter in ``attention._attn_decode_paged``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.attention import kv_scale_cols
+
+__all__ = ["PagedKVPool", "paged_kv_bytes_per_step"]
+
+_POOL_KEYS = ("k_codes", "v_codes", "k_scale", "v_scale")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_pages(dst: jax.Array, src: jax.Array,
+                   idx: jax.Array) -> jax.Array:
+    """In-place page scatter: ``dst`` is donated, so XLA updates the pool
+    buffer where it lives instead of copying the whole L x P x page
+    array per admission."""
+    return dst.at[:, idx].set(src)
+
+
+class PagedKVPool:
+    """Fixed-size paged posit8 KV pool with host-side page accounting.
+
+    ``n_pages`` counts allocatable pages; one extra parking page (id 0)
+    is added on top, so device arrays hold ``n_pages + 1`` pages.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_pages: int, page_size: int,
+                 kv_group: Optional[int] = None):
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"paged KV needs a pure-attention cache; family "
+                f"{cfg.family!r} carries SSM state")
+        self.cfg = cfg
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.kv_group = kv_group
+        hd = cfg.resolved_head_dim
+        self.gs = kv_scale_cols(hd, kv_group)
+        L, P = cfg.n_layers, self.n_pages + 1
+        code_shape = (L, P, self.page_size, cfg.n_kv_heads, hd)
+        scale_shape = code_shape[:-1] + (self.gs,)
+        self.k_codes = jnp.zeros(code_shape, jnp.uint8)
+        self.v_codes = jnp.zeros(code_shape, jnp.uint8)
+        self.k_scale = jnp.ones(scale_shape, jnp.bfloat16)
+        self.v_scale = jnp.ones(scale_shape, jnp.bfloat16)
+        # LIFO free list: recently-freed pages are re-used first
+        self._free: List[int] = list(range(P - 1, 0, -1))
+        self.alloc_peak = 0
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.used_pages / max(self.n_pages, 1)
+
+    def pages_for(self, tokens: int) -> int:
+        """Pages needed to hold ``tokens`` cache slots."""
+        return -(-tokens // self.page_size)
+
+    # -- alloc / free -------------------------------------------------------
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` pages off the free list; None (and no change) if the
+        pool cannot satisfy the request."""
+        if n > len(self._free):
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        self.alloc_peak = max(self.alloc_peak, self.used_pages)
+        return got
+
+    def free(self, pages: List[int]) -> None:
+        for pg in pages:
+            assert 0 < pg <= self.n_pages, pg
+            assert pg not in self._free, f"double free of page {pg}"
+            self._free.append(pg)
+
+    # -- device state -------------------------------------------------------
+
+    def device_state(self) -> Dict[str, jax.Array]:
+        """The pool leaves a paged decode step reads AND writes."""
+        return {k: getattr(self, k) for k in _POOL_KEYS}
+
+    def set_device_state(self, state: Dict[str, jax.Array]) -> None:
+        for k in _POOL_KEYS:
+            setattr(self, k, state[k])
+
+    @staticmethod
+    def device_specs(cfg: ModelConfig, n_pages: int, page_size: int,
+                     kv_group: Optional[int] = None) -> Dict[str, Any]:
+        """ShapeDtypeStructs of the pool leaves (dry-run lowering)."""
+        hd = cfg.resolved_head_dim
+        gs = kv_scale_cols(hd, kv_group)
+        cs = (cfg.n_layers, n_pages + 1, page_size, cfg.n_kv_heads, hd)
+        return {
+            "k_codes": jax.ShapeDtypeStruct(cs, jnp.uint8),
+            "v_codes": jax.ShapeDtypeStruct(cs, jnp.uint8),
+            "k_scale": jax.ShapeDtypeStruct(cs[:-1] + (gs,), jnp.bfloat16),
+            "v_scale": jax.ShapeDtypeStruct(cs[:-1] + (gs,), jnp.bfloat16),
+        }
+
+    # -- data movement ------------------------------------------------------
+
+    def write_prefill(self, cache_q, pages: List[int]) -> None:
+        """Scatter a quantized prefill cache into allocated pages.
+
+        ``cache_q``: the scan-stacked quantized cache of a B=1 prefill
+        whose seq length is a multiple of ``page_size`` -- leaves
+        (L, 1, S, Kh, X).  The first S/page_size entries of ``pages``
+        receive the S tokens in logical order."""
+        leaf = cache_q["k_codes"]
+        L, b, s = leaf.shape[:3]
+        assert b == 1, "prefill writes are per-request (B=1)"
+        assert s % self.page_size == 0, (s, self.page_size)
+        nblk = s // self.page_size
+        assert nblk <= len(pages), (nblk, len(pages))
+        idx = jnp.asarray(pages[:nblk], jnp.int32)
+        for key in _POOL_KEYS:
+            src = cache_q[key][:, 0]                     # (L, S, Kh, X)
+            src = src.reshape(L, nblk, self.page_size, *src.shape[2:])
+            setattr(self, key, _scatter_pages(getattr(self, key), src, idx))
+
+
+    def gather_request(self, pages: List[int]) -> Dict[str, jax.Array]:
+        """Read a request's pages back as a contiguous (1, T, Kh, X)
+        quantized cache per layer (debug / test oracle)."""
+        idx = jnp.asarray(pages, jnp.int32)
+        out = {}
+        for key in _POOL_KEYS:
+            x = getattr(self, key)[:, idx]               # (L, n, page, ...)
+            out[key] = x.reshape(x.shape[0], 1, -1, *x.shape[3:])
+        return out
+
+    # -- roofline -----------------------------------------------------------
+
+    def modeled_bytes_per_step(self, positions) -> float:
+        """Modeled KV HBM bytes one batched decode step moves: each live
+        request reads its ceil((pos+1)/page) live pages across all
+        layers -- a function of LIVE pages, never of any ``max_len``."""
+        return paged_kv_bytes_per_step(self.cfg, positions, self.page_size,
+                                       self.kv_group)
+
+
+def paged_kv_bytes_per_step(cfg: ModelConfig, positions, page_size: int,
+                            kv_group: Optional[int] = None) -> float:
+    """Companion of ``roofline.analysis.decode_kv_bytes`` for the paged
+    plane: codes+scales bytes of the live pages of every request."""
+    hd = cfg.resolved_head_dim
+    gs = kv_scale_cols(hd, kv_group)
+    toks = sum(-(-(int(p) + 1) // page_size) * page_size
+               for p in np.atleast_1d(np.asarray(positions)))
+    return float(2 * cfg.n_attn_layers * cfg.n_kv_heads * toks
+                 * (hd * 1 + gs * 2))

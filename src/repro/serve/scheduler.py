@@ -1,0 +1,172 @@
+"""Continuous-batching scheduler: FIFO admission gated on free pages,
+LIFO preemption, retire-on-EOS.
+
+The scheduler owns the REQUEST state machine and the page accounting;
+it never touches the model.  The engine drives it:
+
+  submit()          WAITING, queued FIFO.
+  admit()           WAITING -> RUNNING while a batch slot is open and the
+                    pool can page the request's whole prefix plus one
+                    decode slot.  Strict FIFO: a too-big head blocks the
+                    queue (deterministic, no starvation).
+  ensure_capacity() called before every decode step for each running
+                    request: allocates the next page when the request's
+                    position crosses a page boundary.  On pool
+                    exhaustion the YOUNGEST running request is preempted
+                    (its pages freed, its request re-queued at the
+                    FRONT) -- the victim loses no tokens: its prefix
+                    (prompt + generated so far) re-prefills on
+                    re-admission and greedy decoding resumes exactly
+                    where it stopped.
+  retire()          RUNNING -> FINISHED (EOS hit or token budget spent);
+                    pages return to the pool the same step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from .paged_kv import PagedKVPool
+
+__all__ = ["Request", "Scheduler",
+           "WAITING", "RUNNING", "FINISHED"]
+
+WAITING = "waiting"
+RUNNING = "running"
+FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its paged-cache bookkeeping."""
+
+    rid: int
+    prompt: np.ndarray                  # (len,) int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    status: str = WAITING
+    pages: List[int] = dataclasses.field(default_factory=list)
+    generated: List[int] = dataclasses.field(default_factory=list)
+    next_token: int = -1                # fed to the next decode step
+    preemptions: int = 0
+
+    @property
+    def prefix(self) -> np.ndarray:
+        """Tokens whose KV must be live: prompt + generated so far."""
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated, np.int32)])
+
+    @property
+    def position(self) -> int:
+        """Cache slot the next decode step writes (== the position the
+        last generated token's KV lands at)."""
+        return len(self.prompt) + len(self.generated) - 1
+
+    @property
+    def done(self) -> bool:
+        if self.generated and self.eos_id is not None \
+                and self.generated[-1] == self.eos_id:
+            return True
+        return len(self.generated) >= self.max_new_tokens
+
+    @property
+    def output(self) -> np.ndarray:
+        return self.prefix
+
+
+class Scheduler:
+    """FIFO admission + LIFO preemption over a shared ``PagedKVPool``."""
+
+    def __init__(self, pool: PagedKVPool, max_batch: int):
+        self.pool = pool
+        self.max_batch = int(max_batch)
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Request] = []      # admission order
+        self.finished: Dict[int, Request] = {}
+        self._next_rid = 0
+        self.preemption_count = 0
+
+    # -- queue --------------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: Optional[int] = None) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert prompt.size > 0 and max_new_tokens >= 1
+        need = self.pool.pages_for(prompt.size + max_new_tokens)
+        if need > self.pool.n_pages:
+            raise ValueError(
+                f"request needs {need} pages but the pool only has "
+                f"{self.pool.n_pages}: raise n_pages or shorten the request")
+        req = Request(self._next_rid, prompt, int(max_new_tokens), eos_id)
+        self._next_rid += 1
+        self.waiting.append(req)
+        return req.rid
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # -- admission ----------------------------------------------------------
+
+    def admit(self) -> List[Request]:
+        """Move FIFO-head requests to RUNNING while a batch slot is open
+        and the pool can page prefix + 1 decode slot.  Pages are
+        allocated here; the engine prefills the returned requests."""
+        admitted = []
+        while self.waiting and len(self.running) < self.max_batch:
+            head = self.waiting[0]
+            need = self.pool.pages_for(len(head.prefix) + 1)
+            pages = self.pool.alloc(need)
+            if pages is None:
+                break                    # head-of-line blocks: strict FIFO
+            self.waiting.popleft()
+            head.pages = pages
+            head.status = RUNNING
+            self.running.append(head)
+            admitted.append(head)
+        return admitted
+
+    # -- capacity / preemption ----------------------------------------------
+
+    def ensure_capacity(self, req: Request) -> bool:
+        """Make sure ``req`` owns the page its next write lands in,
+        preempting younger requests if the pool is dry.  False if ``req``
+        itself was preempted (it is no longer running)."""
+        need_idx = req.position // self.pool.page_size
+        while need_idx >= len(req.pages):
+            got = self.pool.alloc(1)
+            if got is not None:
+                req.pages.extend(got)
+                continue
+            victim = self.running[-1]    # youngest admitted
+            self.preempt(victim)
+            if victim is req:
+                return False
+        return True
+
+    def preempt(self, req: Request) -> None:
+        """Free the victim's pages and put it back at the FRONT of the
+        queue; its generated tokens stay (resume = re-prefill prefix)."""
+        assert req.status == RUNNING
+        self.pool.free(req.pages)
+        req.pages = []
+        req.status = WAITING
+        req.next_token = -1
+        req.preemptions += 1
+        self.preemption_count += 1
+        self.running.remove(req)
+        self.waiting.appendleft(req)
+
+    # -- retirement ---------------------------------------------------------
+
+    def retire(self, req: Request) -> None:
+        assert req.status == RUNNING
+        self.pool.free(req.pages)
+        req.pages = []
+        req.status = FINISHED
+        self.running.remove(req)
+        self.finished[req.rid] = req

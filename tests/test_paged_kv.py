@@ -1,0 +1,194 @@
+"""Paged-KV plane: kernel/fallback parity vs the oracle, pool
+bookkeeping, paged-vs-contiguous decode equivalence, ragged static
+serving."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ref
+from repro.kernels.flash_decode import paged_flash_decode_pallas
+from repro.models import attention as A
+from repro.models import transformer as T
+from repro.serve import PagedKVPool, ServeEngine, paged_kv_bytes_per_step
+
+CFG = get_config("qwen2-0.5b").reduced()
+RNG = np.random.default_rng(0)
+
+
+def _paged_setup(b=3, psize=16, n_pages=15, npp=4, kh=2, dh=32, group=None):
+    """Random pool pages + disjoint per-request page tables (page 0 is
+    the parking page, never referenced live)."""
+    P = n_pages + 1
+    k = RNG.normal(size=(P, psize, kh, dh)).astype(np.float32)
+    v = RNG.normal(size=(P, psize, kh, dh)).astype(np.float32)
+    kc, ks = A.quantize_kv(jnp.asarray(k), group)
+    vc, vs = A.quantize_kv(jnp.asarray(v), group)
+    pages = RNG.permutation(np.arange(1, P))[: b * npp].reshape(b, npp)
+    pt = jnp.asarray(pages.astype(np.int32))
+    return {"k_codes": kc, "k_scale": ks, "v_codes": vc, "v_scale": vs}, pt
+
+
+# ---------------------------------------------------------------------------
+# paged kernel / fallback vs the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("positions", [[0, 0, 0], [5, 33, 60], [63, 1, 17]])
+@pytest.mark.parametrize("softcap", [0.0, 20.0])
+@pytest.mark.parametrize("group", [None, 8])
+def test_paged_kernel_vs_oracle(positions, softcap, group):
+    cache, pt = _paged_setup(group=group)
+    q = jnp.asarray(RNG.normal(size=(3, 2, 2, 32)).astype(np.float32))
+    pos = jnp.asarray(positions, jnp.int32)
+    got = paged_flash_decode_pallas(
+        q, cache["k_codes"], cache["k_scale"], cache["v_codes"],
+        cache["v_scale"], pt, pos, softcap=softcap, interpret=True)
+    want = ref.paged_flash_decode_ref(
+        q, cache["k_codes"], cache["k_scale"], cache["v_codes"],
+        cache["v_scale"], pt, pos, softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("positions", [[2, 40, 63], [63, 63, 63]])
+def test_paged_blocked_vs_oracle(positions):
+    cache, pt = _paged_setup()
+    q = jnp.asarray(RNG.normal(size=(3, 2, 2, 32)).astype(np.float32))
+    pos = jnp.asarray(positions, jnp.int32)
+    got = jax.jit(A.paged_decode_blocked)(q, cache, pt, pos)
+    want = ref.paged_flash_decode_ref(
+        q, cache["k_codes"], cache["k_scale"], cache["v_codes"],
+        cache["v_scale"], pt, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_matches_contiguous_bitwise():
+    """Scattering a contiguous cache into (shuffled) pages and decoding
+    through the page table reproduces the contiguous blocked decode
+    BITWISE when page size == the KV block: one block partition, one
+    accumulation order -- the invariant ContinuousEngine's token parity
+    rests on."""
+    b, t, kh, dh, psize = 2, 64, 2, 32, 16
+    k = RNG.normal(size=(b, t, kh, dh)).astype(np.float32)
+    v = RNG.normal(size=(b, t, kh, dh)).astype(np.float32)
+    kc, ks = A.quantize_kv(jnp.asarray(k))
+    vc, vs = A.quantize_kv(jnp.asarray(v))
+    contig = {"k_codes": kc, "k_scale": ks, "v_codes": vc, "v_scale": vs}
+    npp = t // psize
+    # scatter each request's blocks into a shuffled shared pool
+    perm = RNG.permutation(np.arange(1, b * npp + 1))
+    pt = perm.reshape(b, npp).astype(np.int32)
+    pool = {}
+    for key, x in contig.items():
+        xp = np.asarray(x).reshape(b, npp, psize, *x.shape[2:])
+        buf = np.zeros((b * npp + 1,) + xp.shape[2:], xp.dtype)
+        buf[pt.reshape(-1)] = xp.reshape(-1, *xp.shape[2:])
+        pool[key] = jnp.asarray(buf)
+    q = jnp.asarray(RNG.normal(size=(b, kh, 2, dh)).astype(np.float32))
+    for pos_pair in ([5, 60], [17, 17], [0, 63]):
+        pos = jnp.asarray(pos_pair, jnp.int32)
+        paged = A.paged_decode_blocked(q, pool, jnp.asarray(pt), pos)
+        for i, p in enumerate(pos_pair):
+            contig_i = A.decode_quantized_blocks(
+                q[i:i + 1], {k_: v_[i:i + 1] for k_, v_ in contig.items()},
+                jnp.int32(p), blk=psize)
+            np.testing.assert_array_equal(np.asarray(paged[i:i + 1]),
+                                          np.asarray(contig_i))
+
+
+# ---------------------------------------------------------------------------
+# pool bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_free_utilization():
+    pool = PagedKVPool(CFG, n_pages=8, page_size=16)
+    assert pool.free_pages == 8 and pool.utilization == 0.0
+    a = pool.alloc(3)
+    b = pool.alloc(4)
+    assert len(a) == 3 and len(b) == 4 and not (set(a) & set(b))
+    assert 0 not in a + b                     # parking page never allocated
+    assert pool.alloc(2) is None              # 1 page left: refused, intact
+    assert pool.free_pages == 1
+    assert pool.utilization == pytest.approx(7 / 8)
+    pool.free(a)
+    assert pool.free_pages == 4 and pool.alloc_peak == 7
+    with pytest.raises(AssertionError):       # double free is a bug
+        pool.free([a[0]])
+
+
+def test_pool_pages_for():
+    pool = PagedKVPool(CFG, n_pages=4, page_size=16)
+    assert [pool.pages_for(n) for n in (1, 16, 17, 32, 33)] == [1, 1, 2, 2, 3]
+
+
+def test_pool_rejects_stateful_family():
+    with pytest.raises(ValueError):
+        PagedKVPool(get_config("rwkv6-1.6b").reduced(), 4, 16)
+
+
+def test_pool_prefill_roundtrip():
+    """write_prefill + gather_request reproduce the quantized prefill
+    cache exactly (pure data movement, no recoding)."""
+    pool = PagedKVPool(CFG, n_pages=6, page_size=8)
+    L, kh, dh = CFG.n_layers, CFG.n_kv_heads, CFG.resolved_head_dim
+    cache_q = {}
+    for key, dt, cols in (("k_codes", np.uint8, dh), ("v_codes", np.uint8, dh),
+                          ("k_scale", np.float32, 1),
+                          ("v_scale", np.float32, 1)):
+        x = RNG.integers(0, 255, (L, 1, 16, kh, cols)).astype(dt)
+        cache_q[key] = jnp.asarray(x).astype(
+            jnp.uint8 if dt == np.uint8 else jnp.bfloat16)
+    pages = pool.alloc(3)                      # one spare page
+    pool.write_prefill(cache_q, pages)
+    back = pool.gather_request(pages[:2])
+    for key in cache_q:
+        np.testing.assert_array_equal(np.asarray(back[key]),
+                                      np.asarray(cache_q[key]))
+
+
+def test_paged_kv_bytes_scale_with_live_pages():
+    """The modeled per-step KV bytes depend on live positions only --
+    there is no max_len anywhere in the paged model."""
+    b1 = paged_kv_bytes_per_step(CFG, [7, 40], 16)
+    b2 = paged_kv_bytes_per_step(CFG, [7, 40, 40], 16)
+    assert b2 > b1
+    # doubling a request's live length doubles its share
+    lo = paged_kv_bytes_per_step(CFG, [15], 16)
+    hi = paged_kv_bytes_per_step(CFG, [31], 16)
+    assert hi == 2 * lo
+
+
+# ---------------------------------------------------------------------------
+# ragged (left-padded) static serving
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantized_kv", [False, True])
+def test_ragged_generate_matches_per_request(quantized_kv):
+    """A LEFT-padded mixed-length batch generates exactly what
+    per-request calls would: pads are masked out of attention and RoPE
+    starts at each request's first real token."""
+    params = T.lm_init(jax.random.PRNGKey(0), CFG)
+    lens = [3, 7, 5, 10]
+    s0 = max(lens)
+    prompts = [RNG.integers(0, CFG.vocab, (n,)).astype(np.int32)
+               for n in lens]
+    toks = np.zeros((len(lens), s0), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, s0 - p.size:] = p
+    eng = ServeEngine(CFG, params, max_len=32, quantized_kv=quantized_kv)
+    ragged = eng.generate(jnp.asarray(toks), steps=6,
+                          lengths=np.asarray(lens))
+    for i, p in enumerate(prompts):
+        want = eng.generate(jnp.asarray(p)[None], steps=6)[0]
+        np.testing.assert_array_equal(ragged[i, s0 - p.size:], want)
+
+
+def test_ragged_rejects_stateful_family():
+    cfg = get_config("rwkv6-1.6b").reduced()
+    params = T.lm_init(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_len=16)
+    with pytest.raises(ValueError):
+        eng.generate(jnp.zeros((2, 4), jnp.int32), steps=2, lengths=[2, 4])
