@@ -120,8 +120,8 @@ class ModelConfig:
             per_layer += d * hd * (self.n_heads + 2 * self.n_kv_heads)  # qkv
             per_layer += self.n_heads * hd * d                           # out
         ff_mats = 3 if self.ffn_kind in ("swiglu", "geglu") else 2
-        n_attnish = L if self.attn_every == 0 else L // self.attn_every
-        n_ssm = 0 if self.attn_every == 0 else L - n_attnish
+        n_attnish = self.n_attn_layers
+        n_ssm = L - n_attnish
         if self.family == "ssm":
             n_ssm, n_attnish = L, 0
             per_layer = 0

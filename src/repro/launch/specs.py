@@ -58,7 +58,13 @@ def paged_cache_specs(cfg: ModelConfig, b: int, max_len: int,
     cache-structure-driven."""
     from ..kernels.flash_decode import default_kv_block
     from ..serve.paged_kv import PagedKVPool
+    PagedKVPool.validate_family(cfg)
     psize = page_size or default_kv_block(max_len)
+    if max_len % psize:
+        raise ValueError(
+            f"page_size {psize} must divide max_len {max_len}; the "
+            f"page table would truncate the last {max_len % psize} "
+            f"tokens")
     npp = max_len // psize
     n_pages = max(int(pool_frac * b * npp), npp)
     specs = PagedKVPool.device_specs(cfg, n_pages, psize, kv_group)

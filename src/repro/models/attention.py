@@ -271,6 +271,32 @@ def _cache_write(layer_cache, k_new, v_new, pos):
     return out
 
 
+def _online_softmax_block(qf, k, v, live, carry, softcap: float):
+    """One online-softmax accumulation over a dequantized KV block: the
+    XLA twin of ``kernels.flash_decode._online_softmax_step``.  The
+    contiguous (:func:`decode_quantized_blocks`) and paged
+    (:func:`paged_decode_blocked`) loops share this body -- their
+    bitwise agreement is the invariant the paged-parity tests and
+    ``ContinuousEngine`` token parity rest on.
+
+    qf: (B, Kh, G, Dh) pre-scaled queries; k/v: (B, blk, Kh, Dh) f32;
+    live: bool, broadcastable to (B, Kh, G, blk); carry: (acc, m, l).
+    """
+    acc, m, l = carry
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, k,
+                   preferred_element_type=jnp.float32)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(live, s, -1e30)
+    m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m - m_new)
+    l = l * alpha + p.sum(-1, keepdims=True)
+    pv = jnp.einsum("bkgt,btkd->bkgd", p, v,
+                    preferred_element_type=jnp.float32)
+    return acc * alpha + pv, m_new, l
+
+
 def decode_quantized_blocks(q4, layer_cache, pos, softcap: float = 0.0,
                             blk: Optional[int] = None,
                             pad=None) -> jax.Array:
@@ -299,31 +325,19 @@ def decode_quantized_blocks(q4, layer_cache, pos, softcap: float = 0.0,
     qf = q4.astype(jnp.float32) * (1.0 / math.sqrt(dh))
 
     def body(i, carry):
-        acc, m, l = carry
         start = i * blk
         kcb = jax.lax.dynamic_slice(kc, (0, start, 0, 0), (b, blk, kh, dh))
         ksb = jax.lax.dynamic_slice(ks, (0, start, 0, 0), (b, blk, kh, gs))
-        k = dequantize_kv(kcb, ksb, jnp.float32)
-        s = jnp.einsum("bkgd,btkd->bkgt", qf, k,
-                       preferred_element_type=jnp.float32)
-        if softcap > 0.0:
-            s = jnp.tanh(s / softcap) * softcap
+        vcb = jax.lax.dynamic_slice(vc, (0, start, 0, 0), (b, blk, kh, dh))
+        vsb = jax.lax.dynamic_slice(vs, (0, start, 0, 0), (b, blk, kh, gs))
         kpos = start + jnp.arange(blk)
         live = kpos[None, None, None, :] <= pos
         if pad is not None:
             live = live & (kpos[None, None, None, :] >=
                            pad[:, None, None, None])
-        s = jnp.where(live, s, -1e30)
-        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        alpha = jnp.exp(m - m_new)
-        l = l * alpha + p.sum(-1, keepdims=True)
-        vcb = jax.lax.dynamic_slice(vc, (0, start, 0, 0), (b, blk, kh, dh))
-        vsb = jax.lax.dynamic_slice(vs, (0, start, 0, 0), (b, blk, kh, gs))
-        v = dequantize_kv(vcb, vsb, jnp.float32)
-        pv = jnp.einsum("bkgt,btkd->bkgd", p, v,
-                        preferred_element_type=jnp.float32)
-        return acc * alpha + pv, m_new, l
+        return _online_softmax_block(
+            qf, dequantize_kv(kcb, ksb, jnp.float32),
+            dequantize_kv(vcb, vsb, jnp.float32), live, carry, softcap)
 
     acc0 = jnp.zeros((b, kh, g, dh), jnp.float32)
     m0 = jnp.full((b, kh, g, 1), -1e30, jnp.float32)
@@ -362,23 +376,13 @@ def paged_decode_blocked(q4, layer_cache, page_table, positions,
     pos_col = positions[:, None, None, None]
 
     def body(t, carry):
-        acc, m, l = carry
         pg = jnp.take(page_table, t, axis=1)             # (B,)
-        k = dequantize_kv(kc[pg], ks[pg], jnp.float32)   # (B, page, Kh, Dh)
-        s = jnp.einsum("bkgd,btkd->bkgt", qf, k,
-                       preferred_element_type=jnp.float32)
-        if softcap > 0.0:
-            s = jnp.tanh(s / softcap) * softcap
         kpos = t * psize + jnp.arange(psize)
-        s = jnp.where(kpos[None, None, None, :] <= pos_col, s, -1e30)
-        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        alpha = jnp.exp(m - m_new)
-        l = l * alpha + p.sum(-1, keepdims=True)
-        v = dequantize_kv(vc[pg], vs[pg], jnp.float32)
-        pv = jnp.einsum("bkgt,btkd->bkgd", p, v,
-                        preferred_element_type=jnp.float32)
-        return acc * alpha + pv, m_new, l
+        live = kpos[None, None, None, :] <= pos_col
+        return _online_softmax_block(
+            qf, dequantize_kv(kc[pg], ks[pg], jnp.float32),
+            dequantize_kv(vc[pg], vs[pg], jnp.float32), live, carry,
+            softcap)
 
     acc0 = jnp.zeros((b, kh, g, dh), jnp.float32)
     m0 = jnp.full((b, kh, g, 1), -1e30, jnp.float32)

@@ -60,12 +60,19 @@ class PagedKVPool:
     is added on top, so device arrays hold ``n_pages + 1`` pages.
     """
 
-    def __init__(self, cfg: ModelConfig, n_pages: int, page_size: int,
-                 kv_group: Optional[int] = None):
+    @classmethod
+    def validate_family(cls, cfg: ModelConfig) -> None:
+        """Single copy of the family invariant, shared with
+        ``launch.specs.paged_cache_specs`` so lowering and runtime
+        reject the same configs with the same error."""
         if cfg.family not in ("dense", "moe"):
             raise ValueError(
                 f"paged KV needs a pure-attention cache; family "
                 f"{cfg.family!r} carries SSM state")
+
+    def __init__(self, cfg: ModelConfig, n_pages: int, page_size: int,
+                 kv_group: Optional[int] = None):
+        self.validate_family(cfg)
         self.cfg = cfg
         self.n_pages = int(n_pages)
         self.page_size = int(page_size)
