@@ -92,14 +92,20 @@ if ARGS.continuous:
 
     cfg = get_config("qwen2-0.5b").reduced()
     lm = zoo.init_model(jax.random.PRNGKey(7), cfg)
+    # chunked paged prefill: one engine step pays at most 16 prefill
+    # tokens, so a long narration prompt never stalls the VIO-adjacent
+    # decode streams for a full prefill (p99 stays chunk-bounded)
     eng = ContinuousEngine(cfg, lm, n_pages=32, page_size=16,
                            max_batch=4, max_len=64,
-                           policy=PrecisionPolicy.uniform("posit8_0"))
+                           policy=PrecisionPolicy.uniform("posit8_0"),
+                           prefill_chunk_tokens=16)
     rng = np.random.default_rng(0)
     arrivals = [(s, int(rng.integers(3, 12)), int(rng.integers(4, 16)))
                 for s in (0, 0, 1, 2, 2, 4)]   # (arrive_step, plen, gen)
+    arrivals.append((3, 40, 6))   # a long prompt lands mid-decode:
+    #                               chunked prefill absorbs it 16 at a time
     print("\ncontinuous XR streams (arrive@step, prompt, gen):", arrivals)
-    pending = list(arrivals)
+    pending = sorted(arrivals, key=lambda a: a[0])
     step = 0
     while pending or eng.scheduler.has_work:
         while pending and pending[0][0] <= step:

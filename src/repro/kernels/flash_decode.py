@@ -55,7 +55,8 @@ from ..core import codec as codec_mod
 from ..core import formats as fmt
 
 __all__ = ["flash_decode_kernel", "flash_decode_pallas", "default_kv_block",
-           "paged_flash_decode_kernel", "paged_flash_decode_pallas"]
+           "paged_flash_decode_kernel", "paged_flash_decode_pallas",
+           "paged_flash_prefill_kernel", "paged_flash_prefill_pallas"]
 
 # renamed across JAX versions (TPUCompilerParams -> CompilerParams)
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
@@ -86,14 +87,24 @@ def _dequant_block(codes_ref, scale_ref, dh: int, gs: int) -> jax.Array:
     return x * jnp.repeat(s, dh // gs, axis=-1)
 
 
-def _online_softmax_step(pos, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
-                         o_ref, acc_ref, m_ref, l_ref, *,
+def _online_softmax_step(pos_last, qpos, q2, kc_ref, ks_ref, vc_ref, vs_ref,
+                         write_out, acc_ref, m_ref, l_ref, *,
                          blk: int, softcap: float, scale: float):
-    """One grid step of the online-softmax decode: init scratch at t=0,
-    accumulate the current KV block when it is live for ``pos``, emit the
-    normalized output at the last step.  Shared by the contiguous and
-    paged kernels -- they differ only in where ``pos`` comes from and how
-    the BlockSpec index maps pick the HBM block."""
+    """One grid step of the online-softmax accumulation: init scratch at
+    t=0, accumulate the current KV block while any query row is live for
+    it, emit the normalized output through ``write_out`` at the last
+    step.  ONE copy of the math for the contiguous-decode, paged-decode
+    and paged-prefill kernels (the bitwise-parity tests rest on it) --
+    they differ only in how the BlockSpec index maps pick the HBM block
+    and in the query geometry:
+
+      q2       : (R, Dh) row-flattened query block (decode: R = G;
+                 prefill: R = C*G, row = qi*G + gi).
+      qpos     : per-row key-visibility horizon, broadcastable against
+                 (R, blk) (decode: the scalar ``pos``; prefill:
+                 ``start + row // G`` as an (R, 1) column).
+      pos_last : scalar max of ``qpos`` -- gates dead grid steps off.
+    """
     t = pl.program_id(2)
     nt = pl.num_programs(2)
 
@@ -103,19 +114,19 @@ def _online_softmax_step(pos, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
         m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    @pl.when(t * blk <= pos)
+    @pl.when(t * blk <= pos_last)
     def _block():
-        dh = q_ref.shape[-1]
+        dh = q2.shape[-1]
         gs = ks_ref.shape[-1]
-        q = q_ref[0, 0].astype(jnp.float32)               # (G, Dh)
+        q = q2.astype(jnp.float32)                        # (R, Dh)
         k = _dequant_block(kc_ref, ks_ref, dh, gs)        # (blk, Dh)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale   # (G, blk)
+            preferred_element_type=jnp.float32) * scale   # (R, blk)
         if softcap > 0.0:
             s = jnp.tanh(s / softcap) * softcap
         kpos = t * blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(kpos <= pos, s, _NEG_INF)
+        s = jnp.where(kpos <= qpos, s, _NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -128,15 +139,20 @@ def _online_softmax_step(pos, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
 
     @pl.when(t == nt - 1)
     def _finalize():
-        o_ref[0, 0] = acc_ref[...] / l_ref[...]
+        write_out(acc_ref[...] / l_ref[...])
 
 
 def flash_decode_kernel(pos_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
                         o_ref, acc_ref, m_ref, l_ref, *,
                         blk: int, softcap: float, scale: float):
     """One (B, Kh) cell; online-softmax accumulation over live KV blocks."""
-    _online_softmax_step(pos_ref[0], q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
-                         o_ref, acc_ref, m_ref, l_ref,
+    pos = pos_ref[0]
+
+    def write_out(out):
+        o_ref[0, 0] = out
+
+    _online_softmax_step(pos, pos, q_ref[0, 0], kc_ref, ks_ref, vc_ref,
+                         vs_ref, write_out, acc_ref, m_ref, l_ref,
                          blk=blk, softcap=softcap, scale=scale)
 
 
@@ -146,8 +162,13 @@ def paged_flash_decode_kernel(pt_ref, pos_ref, q_ref, kc_ref, ks_ref,
     """Paged cell: identical math, but ``pos`` is per-request and the KV
     blocks were gathered through the page table by the index maps (the
     kernel body never sees physical page ids)."""
-    _online_softmax_step(pos_ref[pl.program_id(0)], q_ref, kc_ref, ks_ref,
-                         vc_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref,
+    pos = pos_ref[pl.program_id(0)]
+
+    def write_out(out):
+        o_ref[0, 0] = out
+
+    _online_softmax_step(pos, pos, q_ref[0, 0], kc_ref, ks_ref, vc_ref,
+                         vs_ref, write_out, acc_ref, m_ref, l_ref,
                          blk=blk, softcap=softcap, scale=scale)
 
 
@@ -288,3 +309,98 @@ def paged_flash_decode_pallas(q: jax.Array, k_codes: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(pt_flat, pos_arr, q, k_codes, k_scale, v_codes, v_scale)
+
+
+def paged_flash_prefill_kernel(pt_ref, start_ref, q_ref, kc_ref, ks_ref,
+                               vc_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref,
+                               *, blk: int, c: int, g: int, softcap: float,
+                               scale: float):
+    """One (B, Kh) cell of the paged chunk-PREFILL kernel: the SAME
+    online-softmax body as the decode kernels, widened to a (C*G, Dh)
+    query block (row ``qi*G + gi``); the causal horizon of row ``r`` is
+    ``start + r // G``."""
+    start = start_ref[pl.program_id(0)]
+    dh = q_ref.shape[-1]
+    q2 = q_ref[0, :, 0].reshape(c * g, dh)
+    qpos = start + jax.lax.broadcasted_iota(jnp.int32, (c * g, 1), 0) // g
+
+    def write_out(out):
+        o_ref[0, :, 0] = out.reshape(c, g, dh)
+
+    _online_softmax_step(start + c - 1, qpos, q2, kc_ref, ks_ref, vc_ref,
+                         vs_ref, write_out, acc_ref, m_ref, l_ref,
+                         blk=blk, softcap=softcap, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_flash_prefill_pallas(q: jax.Array, k_codes: jax.Array,
+                               k_scale: jax.Array, v_codes: jax.Array,
+                               v_scale: jax.Array, page_table: jax.Array,
+                               start: jax.Array, *,
+                               softcap: float = 0.0,
+                               interpret: bool = False) -> jax.Array:
+    """Paged chunk-PREFILL attention over a posit8 KV pool: the prefill
+    twin of :func:`paged_flash_decode_pallas`.
+
+    q                : (B, C, Kh, G, Dh) float -- one CHUNK of C queries
+                       per request, at absolute positions
+                       ``start[i] .. start[i] + C - 1``.
+    k_codes/v_codes  : (P, page, Kh, Dh) uint8 pool pages (page = KV blk).
+    k_scale/v_scale  : (P, page, Kh, Gs) po2 scales, unified layout.
+    page_table       : (B, NP) int32 -- the request's previously written
+                       pages plus its own (just-written) chunk pages;
+                       rows padded with a parking page id.
+    start            : (B,) int32 -- query i*? attends to logical slots
+                       [0, start[i] + row] causally.
+
+    Identical page indirection to the decode kernel: the KV index map
+    gathers ``page_table[i, min(t, (start[i]+C-1) // blk)]``, so grid
+    steps past the chunk's last live page re-read the resident block
+    (no DMA) and ``pl.when`` gates their compute off.  A chunk step
+    moves ceil((start+C)/page) pages -- the chunk's causal prefix --
+    regardless of NP.
+
+    Returns (B, C, Kh, G, Dh) f32 attention output.
+    """
+    b, c, kh, g, dh = q.shape
+    blk = k_codes.shape[1]
+    gs = k_scale.shape[-1]
+    npp = page_table.shape[1]
+
+    def q_im(i, h, tt, pt_ref, start_ref):
+        return (i, 0, h, 0, 0)
+
+    def kv_im(i, h, tt, pt_ref, start_ref):
+        tc = jnp.minimum(tt, (start_ref[i] + c - 1) // blk)
+        return (pt_ref[i * npp + tc], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kh, npp),
+        in_specs=[
+            pl.BlockSpec((1, c, 1, g, dh), q_im),
+            pl.BlockSpec((1, blk, 1, dh), kv_im),
+            pl.BlockSpec((1, blk, 1, gs), kv_im),
+            pl.BlockSpec((1, blk, 1, dh), kv_im),
+            pl.BlockSpec((1, blk, 1, gs), kv_im),
+        ],
+        out_specs=pl.BlockSpec((1, c, 1, g, dh), q_im),
+        scratch_shapes=[
+            pltpu.VMEM((c * g, dh), jnp.float32),   # acc
+            pltpu.VMEM((c * g, 1), jnp.float32),    # running max m
+            pltpu.VMEM((c * g, 1), jnp.float32),    # normalizer l
+        ],
+    )
+    kernel = functools.partial(paged_flash_prefill_kernel, blk=blk, c=c,
+                               g=g, softcap=float(softcap),
+                               scale=1.0 / math.sqrt(dh))
+    pt_flat = page_table.reshape(-1).astype(jnp.int32)
+    start_arr = jnp.asarray(start, jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, kh, g, dh), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pt_flat, start_arr, q, k_codes, k_scale, v_codes, v_scale)

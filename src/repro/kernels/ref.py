@@ -20,7 +20,8 @@ from ..core.formats import FormatSpec
 from ..core.packing import unpack
 
 __all__ = ["rmmec_matmul_ref", "quire_dot_ref", "dequant_ref",
-           "flash_decode_ref", "paged_flash_decode_ref"]
+           "flash_decode_ref", "paged_flash_decode_ref",
+           "paged_prefill_ref"]
 
 
 def _expand_scales(scales: jax.Array, k_rows: int) -> jax.Array:
@@ -100,6 +101,40 @@ def paged_flash_decode_ref(q: jax.Array, k_codes: jax.Array,
                   s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bkgt,btkd->bkgd", p, v)
+
+
+def paged_prefill_ref(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
+                      v_codes: jax.Array, v_scale: jax.Array,
+                      page_table: jax.Array, start: jax.Array,
+                      softcap: float = 0.0) -> jax.Array:
+    """Naive oracle for the paged chunk-PREFILL kernel: gather every
+    request's pages back into a contiguous cache, then one causally
+    masked softmax per (request, chunk row) -- row ``i`` of request
+    ``b`` sits at absolute position ``start[b] + i`` and attends to
+    logical slots [0, start[b] + i].  Shapes match
+    :func:`..flash_decode.paged_flash_prefill_pallas` (q
+    (B, C, Kh, G, Dh), pool pages (P, page, Kh, X), page table (B, NP),
+    start (B,)); returns (B, C, Kh, G, Dh) f32."""
+    b, c, kh, g, dh = q.shape
+    page = k_codes.shape[1]
+    t = page_table.shape[1] * page
+
+    def gather(pool):
+        x = pool[page_table]
+        return x.reshape(b, t, *pool.shape[2:])
+    k = _dequant_kv_ref(gather(k_codes), gather(k_scale))
+    v = _dequant_kv_ref(gather(v_codes), gather(v_scale))
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q.astype(jnp.float32), k)
+    s = s / jnp.sqrt(jnp.float32(dh))
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = start[:, None] + jnp.arange(c)                    # (B, C)
+    live = jnp.arange(t)[None, None, None, None, :] \
+        <= qpos[:, None, None, :, None]                      # (B,1,1,C,T)
+    s = jnp.where(live, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bkgqd", p, v)
+    return out.transpose(0, 3, 1, 2, 4)
 
 
 def quire_dot_ref(a_codes, b_codes) -> np.ndarray:

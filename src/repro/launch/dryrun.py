@@ -25,7 +25,8 @@ Usage:
   python -m repro.launch.dryrun --all --multi-pod      # 512-chip pass
   ... [--policy mixed|fp4|posit8_0|bf16|fp32] [--attn-impl triangular]
       [--quantized-kv] [--decode-impl blocked|flash] [--opt-dtype posit8]
-      [--paged [--pool-frac 0.25]] [--tag NAME]
+      [--paged [--pool-frac 0.25]]
+      [--chunked-prefill [--prefill-chunk 256]] [--tag NAME]
 """
 
 import argparse
@@ -115,6 +116,25 @@ def _lower_one(cfg, shape, mesh, policy, policy_name, run_kw, quantized_kv):
                 out_shardings=(state_sh, None),
                 donate_argnums=(0,),
             ).lower(state_sds, batch_sds)
+    elif shape.kind == "prefill" and run_kw.get("chunked_prefill"):
+        # chunked-prefill cell: the LAST chunk of an S-token prompt --
+        # `chunk` query tokens against an (S - chunk)-token bf16 KV
+        # carry, the largest step chunked paged prefill ever pays
+        from ..serve.engine import build_prefill_chunk_step
+        params_sds = _serve_params_sds(cfg, policy, policy_name)
+        params_sh = sh.param_sharding_tree(mesh, params_sds)
+        chunk = min(run_kw.get("prefill_chunk") or 256, shape.seq_len)
+        in_sds = sp.chunk_prefill_specs(cfg, chunk, shape.seq_len - chunk)
+        ctx_sh = sh.cache_sharding_tree(mesh, in_sds["ctx"], 1)
+        tok_sh = _batch_shardings(mesh, in_sds["tokens"])
+        start_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        fn = build_prefill_chunk_step(cfg, kv_group=policy.group_size)
+        with sh.use_mesh(mesh):
+            lowered = jax.jit(
+                fn, in_shardings=(params_sh, tok_sh, ctx_sh, start_sh),
+            ).lower(params_sds, in_sds["tokens"], in_sds["ctx"],
+                    in_sds["start"])
     elif shape.kind == "prefill":
         params_sds = _serve_params_sds(cfg, policy, policy_name)
         params_sh = sh.param_sharding_tree(mesh, params_sds)
@@ -194,7 +214,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                seq_chunk: int = None, verbose: bool = True,
                extrapolate: bool = True, last_logit_only: bool = False,
                attn_scores_f32: bool = True, decode_impl: str = "blocked",
-               paged: bool = False, pool_frac: float = 0.25):
+               paged: bool = False, pool_frac: float = 0.25,
+               chunked_prefill: bool = False, prefill_chunk: int = 256):
     """Full-cell dry-run.
 
     ``extrapolate``: XLA's cost_analysis counts a while-loop (scan) body
@@ -229,7 +250,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     run_kw = dict(qat=qat, opt_dtype=opt_dtype, microbatch=microbatch,
                   grad_compression=grad_compression,
                   last_logit_only=last_logit_only,
-                  paged=paged, pool_frac=pool_frac)
+                  paged=paged, pool_frac=pool_frac,
+                  chunked_prefill=chunked_prefill,
+                  prefill_chunk=prefill_chunk)
 
     compiled, t_lower, t_compile = _lower_one(
         cfg, shape, mesh, policy, policy_name, run_kw, quantized_kv)
@@ -279,6 +302,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "attn_impl": cfg.attn_impl, "remat": cfg.remat,
         "decode_impl": cfg.decode_impl,
         "paged": paged, "pool_frac": pool_frac if paged else None,
+        "chunked_prefill": chunked_prefill,
+        "prefill_chunk": (min(prefill_chunk, shape.seq_len)
+                          if chunked_prefill else None),
         "grad_compression": grad_compression, "qat": qat,
         "microbatch": microbatch, "extrapolation": extrap,
         "lower_s": t_lower, "compile_s": t_compile,
@@ -346,6 +372,12 @@ def main():
     ap.add_argument("--pool-frac", type=float, default=0.25,
                     help="paged pool capacity as a fraction of the "
                          "worst-case batch*max_len token count")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="prefill cells lower ONE chunk-prefill step "
+                         "(the last chunk of an S-token prompt) instead "
+                         "of the monolithic prefill")
+    ap.add_argument("--prefill-chunk", type=int, default=256,
+                    help="chunk width of the --chunked-prefill cell")
     ap.add_argument("--remat", default=None)
     ap.add_argument("--seq-chunk", type=int, default=None)
     ap.add_argument("--microbatch", type=int, default=0)
@@ -390,7 +422,9 @@ def main():
                 qat=not args.no_qat, seq_chunk=args.seq_chunk,
                 extrapolate=not args.no_extrapolate,
                 decode_impl=args.decode_impl,
-                paged=args.paged, pool_frac=args.pool_frac)
+                paged=args.paged, pool_frac=args.pool_frac,
+                chunked_prefill=args.chunked_prefill,
+                prefill_chunk=args.prefill_chunk)
             path = save_record(rec, args.tag)
             print("saved", path)
         except Exception as e:

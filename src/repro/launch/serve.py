@@ -7,8 +7,12 @@
 ``ContinuousEngine`` instead: per-request prompt/generation lengths,
 FIFO admission against a page pool, one batched decode step for all
 live requests (see serve/__init__ for the page-table layout).
+``--prefill-chunk N`` turns on chunked paged prefill: one step pays at
+most N prefill tokens, so a long prompt no longer stalls the running
+decode batch for a full prefill.
 
   ... --continuous --batch 8 --n-pages 48 [--page-size 16]
+      [--prefill-chunk 16]
 """
 
 from __future__ import annotations
@@ -44,10 +48,18 @@ def _static(args, cfg, params, policy) -> None:
 def _continuous(args, cfg, params, policy) -> None:
     rng = np.random.default_rng(0)
     max_len = args.prompt_len + args.steps + 8
+    page_size = args.page_size
+    if args.prefill_chunk:
+        if max_len % args.prefill_chunk:
+            # chunk | max_len is the page-table contract; round up
+            max_len += args.prefill_chunk - max_len % args.prefill_chunk
+        if page_size is None:
+            page_size = args.prefill_chunk   # chunk == k * page, k = 1
     eng = ContinuousEngine(
-        cfg, params, n_pages=args.n_pages, page_size=args.page_size,
+        cfg, params, n_pages=args.n_pages, page_size=page_size,
         max_batch=args.batch, max_len=max_len, policy=policy,
-        temperature=args.temperature)
+        temperature=args.temperature,
+        prefill_chunk_tokens=args.prefill_chunk)
     # ragged request mix around the CLI's nominal prompt/step counts
     n_req = 2 * args.batch
     rids = []
@@ -63,7 +75,11 @@ def _continuous(args, cfg, params, policy) -> None:
           f"({toks / dt:.1f} tok/s) over {eng.steps_run} engine steps")
     print(f"pool: {eng.pool.n_pages} pages x {eng.pool.page_size} slots, "
           f"peak used {eng.pool.alloc_peak}, "
-          f"preemptions {eng.scheduler.preemption_count}")
+          f"preemptions {eng.scheduler.preemption_count} "
+          f"(mid-prefill {eng.scheduler.prefill_preemptions}, "
+          f"wasted prefill tokens {eng.scheduler.wasted_prefill_tokens})")
+    print(f"prefill: "
+          f"{'chunked, %d tokens/step' % eng.prefill_chunk_tokens if eng.prefill_chunk_tokens else 'monolithic'}")
     for r in rids[:2]:
         print(f"  req {r}: {np.asarray(eng.scheduler.finished[r].generated)}")
 
@@ -83,7 +99,11 @@ def main() -> None:
     ap.add_argument("--n-pages", type=int, default=48,
                     help="paged pool size (allocatable pages)")
     ap.add_argument("--page-size", type=int, default=None,
-                    help="tokens per page (default: the decode KV block)")
+                    help="tokens per page (default: the decode KV block, "
+                         "or --prefill-chunk when that is set)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked paged prefill: max prefill tokens one "
+                         "engine step may process (default: monolithic)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig, ShapeConfig
 from ..models import transformer as T
 
-__all__ = ["batch_specs", "cache_specs", "paged_cache_specs", "input_specs"]
+__all__ = ["batch_specs", "cache_specs", "paged_cache_specs",
+           "chunk_prefill_specs", "input_specs"]
 
 
 def _sds(shape, dtype):
@@ -72,6 +73,24 @@ def paged_cache_specs(cfg: ModelConfig, b: int, max_len: int,
     specs["page_table"] = _sds((L, b, npp), jnp.int32)
     specs["positions"] = _sds((L, b), jnp.int32)
     return specs
+
+
+def chunk_prefill_specs(cfg: ModelConfig, chunk: int,
+                        ctx_len: int) -> Dict[str, Any]:
+    """Abstract inputs of ``serve.engine.build_prefill_chunk_step``
+    (carry form): ONE chunk of ``chunk`` tokens attending to a
+    ``ctx_len``-token bf16 KV carry of the already-prefilled prefix.
+    With ``ctx_len = S - chunk`` this is the latency-critical LAST
+    chunk of an S-token prompt -- the largest step chunked prefill
+    ever pays, which is exactly what the ``--chunked-prefill`` dry-run
+    cell must prove fits and costs."""
+    hd = cfg.resolved_head_dim
+    kv = (cfg.n_layers, 1, ctx_len, cfg.n_kv_heads, hd)
+    return {
+        "tokens": _sds((1, chunk), jnp.int32),
+        "ctx": {"k": _sds(kv, jnp.bfloat16), "v": _sds(kv, jnp.bfloat16)},
+        "start": _sds((1,), jnp.int32),
+    }
 
 
 def input_specs(cfg: ModelConfig, shape: ShapeConfig,

@@ -40,9 +40,10 @@ from ..core import quant
 from ..parallel.sharding import shard
 from . import layers as L
 
-__all__ = ["attn_init", "attn_apply", "attn_decode",
+__all__ = ["attn_init", "attn_apply", "attn_decode", "attn_prefill_chunk",
            "quantize_kv", "dequantize_kv", "kv_scale_cols",
-           "decode_quantized_blocks", "paged_decode_blocked"]
+           "decode_quantized_blocks", "paged_decode_blocked",
+           "paged_prefill_blocked"]
 
 
 def attn_init(key, cfg):
@@ -390,6 +391,165 @@ def paged_decode_blocked(q4, layer_cache, page_table, positions,
     n_live = (jnp.max(positions) + psize) // psize
     acc, _, l = jax.lax.fori_loop(0, n_live, body, (acc0, m0, l0))
     return acc / l
+
+
+# ---------------------------------------------------------------------------
+# Chunked paged prefill
+# ---------------------------------------------------------------------------
+
+def _online_softmax_qblock(qf, k, v, live, carry, softcap: float):
+    """Online-softmax accumulation of a Q-query chunk over one KV block:
+    the multi-query generalization of :func:`_online_softmax_block`
+    (which stays untouched -- the decode parity invariants rest on its
+    exact einsum shapes).
+
+    qf: (B, Kh, G, Q, Dh) pre-scaled queries; k/v: (B, blk, Kh, Dh) f32;
+    live: bool, broadcastable to (B, Kh, G, Q, blk);
+    carry: (acc (B,Kh,G,Q,Dh), m (B,Kh,G,Q,1), l (B,Kh,G,Q,1)).
+    """
+    acc, m, l = carry
+    s = jnp.einsum("bkgqd,btkd->bkgqt", qf, k,
+                   preferred_element_type=jnp.float32)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(live, s, -1e30)
+    m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m - m_new)
+    l = l * alpha + p.sum(-1, keepdims=True)
+    pv = jnp.einsum("bkgqt,btkd->bkgqd", p, v,
+                    preferred_element_type=jnp.float32)
+    return acc * alpha + pv, m_new, l
+
+
+def paged_prefill_blocked(q5, layer_cache, page_table, start,
+                          softcap: float = 0.0) -> jax.Array:
+    """Pure-XLA PAGED chunk-prefill attention: a chunk of C queries at
+    absolute positions ``start[b] .. start[b]+C-1`` attends causally
+    through the request's page table -- its previously written pages
+    plus its own (just-written) chunk pages.  The gather generalization
+    of the prefill side of :func:`attn_apply`, mirroring
+    :func:`paged_decode_blocked`: iteration ``t`` gathers each request's
+    logical block ``t`` (``pool[page_table[:, t]]``), dequantizes it and
+    runs one online-softmax update; blocks past the chunk's last
+    position are exact no-ops.  Oracle:
+    ``kernels.ref.paged_prefill_ref``.
+
+    q5         : (B, C, Kh, G, Dh) chunk queries.
+    layer_cache: pool dict with k_codes/v_codes (P, page, Kh, Dh) and
+                 k_scale/v_scale (P, page, Kh, Gs).
+    page_table : (B, NP) int32, rows padded with a parking page id.
+    start      : (B,) int32 first absolute position of each chunk.
+
+    Returns (B, C, Kh, G, Dh) f32.
+    """
+    b, c, kh, g, dh = q5.shape
+    kc, ks = layer_cache["k_codes"], layer_cache["k_scale"]
+    vc, vs = layer_cache["v_codes"], layer_cache["v_scale"]
+    psize = kc.shape[1]
+    qf = q5.astype(jnp.float32).transpose(0, 2, 3, 1, 4) \
+        * (1.0 / math.sqrt(dh))                      # (B, Kh, G, C, Dh)
+    qpos = start[:, None] + jnp.arange(c)            # (B, C)
+    pos_col = qpos[:, None, None, :, None]           # (B, 1, 1, C, 1)
+
+    def body(t, carry):
+        pg = jnp.take(page_table, t, axis=1)         # (B,)
+        kpos = t * psize + jnp.arange(psize)
+        live = kpos[None, None, None, None, :] <= pos_col
+        return _online_softmax_qblock(
+            qf, dequantize_kv(kc[pg], ks[pg], jnp.float32),
+            dequantize_kv(vc[pg], vs[pg], jnp.float32), live, carry,
+            softcap)
+
+    acc0 = jnp.zeros((b, kh, g, c, dh), jnp.float32)
+    m0 = jnp.full((b, kh, g, c, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, c, 1), jnp.float32)
+    n_live = (jnp.max(start) + c + psize - 1) // psize
+    acc, _, l = jax.lax.fori_loop(0, n_live, body, (acc0, m0, l0))
+    return (acc / l).transpose(0, 3, 1, 2, 4)
+
+
+def attn_prefill_chunk(p, x, cfg, positions, ctx):
+    """Causal self-attention of ONE prefill chunk (chunked paged prefill).
+
+    x: (B, C, D) chunk embeddings at absolute ``positions`` (B, C)
+    (``start .. start+C-1``).  ``ctx`` is the per-layer context the
+    chunk attends to in addition to itself, in one of two forms:
+
+      * CARRY context ``{"k", "v"}``: (B, T, Kh, Dh) bf16 tensors
+        holding the request's already-prefilled prefix (T == start).
+        The chunk sees the same bf16 keys/values a monolithic prefill
+        would, so chunked and monolithic prefill logits agree BITWISE
+        (per-query full softmax does not depend on how queries are
+        batched) -- this is the engine default and what the
+        temperature-0 static-parity guarantee rests on.  Returns
+        (out, {"k": chunk_k, "v": chunk_v}); the engine appends the
+        chunk kv to the carry and quantizes it into pages.
+      * PAGED context (the dict carries ``page_table``): the pool
+        leaves + (B, NP) page table.  The chunk's kv is quantized and
+        scattered into its pages FIRST (mirroring the decode write),
+        then attention reads prefix + chunk back through the page table
+        (:func:`paged_prefill_blocked`, or the fused kernel under
+        ``decode_impl='flash'``).  Zero extra residency, but the
+        context is posit8-dequantized, so logits differ from monolithic
+        prefill at quantization error.  Returns (out, updated_ctx).
+    """
+    if "page_table" in ctx:
+        return _attn_prefill_paged(p, x, cfg, positions, ctx)
+    b, c, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    g = cfg.n_heads // cfg.n_kv_heads
+    hd = q.shape[-1]
+    q5 = q.reshape(b, c, cfg.n_kv_heads, g, hd)
+    t = ctx["k"].shape[1]
+    kk = jnp.concatenate([ctx["k"].astype(k.dtype), k], axis=1) if t else k
+    vv = jnp.concatenate([ctx["v"].astype(v.dtype), v], axis=1) if t else v
+    out = _attend_block(q5, kk, vv, _causal_bias(c, t + c, t),
+                        getattr(cfg, "attn_scores_f32", True))
+    out = out.reshape(b, c, cfg.n_heads * hd)
+    out = shard(out, "batch", "seq", "heads")
+    return L.dense(p["wo"], out), {"k": k.astype(jnp.bfloat16),
+                                   "v": v.astype(jnp.bfloat16)}
+
+
+def _attn_prefill_paged(p, x, cfg, positions, ctx):
+    """Paged chunk prefill: quantize + scatter the chunk's kv into its
+    pages (page-aligned chunk slots -- the chunk/page contract of
+    ``serve/paged_kv.py``), then attend to prefix + chunk through the
+    page table."""
+    b, c, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    psize = ctx["k_codes"].shape[1]
+    assert c % psize == 0, (c, psize)
+    group = _cache_group(ctx)
+    kc_new, ks_new = quantize_kv(k, group)
+    vc_new, vs_new = quantize_kv(v, group)
+    page_table = ctx["page_table"]
+    start = positions[:, 0]
+    nblk = c // psize
+    blk_ids = start[:, None] // psize \
+        + jnp.arange(nblk, dtype=jnp.int32)[None]    # (B, nblk)
+    pgs = jnp.take_along_axis(page_table, blk_ids, axis=1).reshape(-1)
+    out = dict(ctx)
+    for key, src in (("k_codes", kc_new), ("v_codes", vc_new),
+                     ("k_scale", ks_new), ("v_scale", vs_new)):
+        s4 = src.reshape(b * nblk, psize, *src.shape[2:])
+        out[key] = ctx[key].at[pgs].set(s4)
+    g = cfg.n_heads // cfg.n_kv_heads
+    hd = q.shape[-1]
+    q5 = q.reshape(b, c, cfg.n_kv_heads, g, hd)
+    if getattr(cfg, "decode_impl", "blocked") == "flash":
+        from ..kernels.flash_decode import paged_flash_prefill_pallas
+        from ..kernels.ops import should_interpret
+        out5 = paged_flash_prefill_pallas(
+            q5, out["k_codes"], out["k_scale"], out["v_codes"],
+            out["v_scale"], page_table, start,
+            softcap=cfg.attn_logit_softcap, interpret=should_interpret())
+    else:
+        out5 = paged_prefill_blocked(q5, out, page_table, start,
+                                     cfg.attn_logit_softcap)
+    o = out5.astype(x.dtype).reshape(b, c, cfg.n_heads * hd)
+    return L.dense(p["wo"], o), out
 
 
 def attn_decode(p, x, cfg, layer_cache, pos, pad=None):

@@ -68,6 +68,12 @@ def _block_apply(p, x, cfg, mixer: str, use_moe: bool, positions,
     if mixer == "attn":
         if mode == "decode":
             h, cache = A.attn_decode(p["attn"], h, cfg, cache, pos, pad)
+        elif mode == "prefill_chunk":
+            # chunked paged prefill: one chunk attends to its per-layer
+            # context (bf16 carry or the paged pool) plus itself; the
+            # returned cache is the chunk's kv / the updated pool
+            h, cache = A.attn_prefill_chunk(p["attn"], h, cfg, positions,
+                                            cache)
         else:
             h, kv = A.attn_apply(p["attn"], h, cfg, positions, mode,
                                  kv_mask=kv_mask)

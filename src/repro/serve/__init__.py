@@ -26,19 +26,33 @@ ceil((pos+1)/page), so per-step KV bytes track LIVE pages, not
 Scheduler contract
 ------------------
 ``Scheduler`` (serve/scheduler.py) owns request state + page accounting:
-FIFO admission gated on ``pages_for(prefix + 1)`` free pages (the head
-blocks the queue -- deterministic, starvation-free), one page allocated
-lazily whenever a running request's position crosses a page boundary,
-LIFO preemption on pool exhaustion (the youngest running request's
-pages are freed and it requeues at the FRONT; its generated tokens are
-kept, so resume re-prefills prompt+generated and greedy decoding
-continues exactly where it stopped), retire-on-finish (EOS or token
-budget) returns pages the same step.  The engine turns that policy into
-batched steps: per-request prefill for admissions, one fixed-shape
-batched decode for everyone running, per-row sampling and retirement.
+FIFO admission gated on ``pages_for(prefix + 1)`` UNCLAIMED free pages
+(the head blocks the queue -- deterministic, starvation-free; pages of
+mid-prefill requests' outstanding claims are excluded so co-admitted
+prefills never race each other), pages allocated lazily -- per prefill
+CHUNK while PREFILLING, then one page whenever a running request's
+position crosses a page boundary -- LIFO preemption on pool exhaustion
+(the youngest request's pages are freed and it requeues at the FRONT;
+a RUNNING victim keeps its generated tokens, so resume re-prefills
+prompt+generated and greedy decoding continues exactly where it
+stopped; a PREFILLING victim restarts its prefill from chunk 0),
+retire-on-finish (EOS or token budget) returns pages the same step.
+
+The engine turns that policy into batched steps with a load-bearing
+ORDER: capacity for the running batch first, then admission, then
+chunked prefill inside a per-step token budget
+(``prefill_chunk_tokens``), then one fixed-shape batched decode for
+everyone running, per-row sampling and retirement.  Admitting before
+capacity (the PR 3 order) let a newcomer take the last free page only
+to be preempted as the youngest victim in the same step -- its whole
+prefill wasted, every step, while pool pressure lasted.  The token
+budget bounds p99 decode-step latency by the chunk, not the longest
+prompt: a long-prompt arrival costs a chain of chunk steps interleaved
+with decode instead of one monolithic stall.
 """
 
 from .engine import (ServeEngine, ContinuousEngine,  # noqa: F401
-                     build_prefill_step, build_serve_step)
+                     build_prefill_step, build_prefill_chunk_step,
+                     build_serve_step)
 from .paged_kv import PagedKVPool, paged_kv_bytes_per_step  # noqa: F401
 from .scheduler import Request, Scheduler  # noqa: F401

@@ -28,9 +28,10 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.policy import PrecisionPolicy
 from ..models import zoo
+from .scheduler import PREFILLING, RUNNING
 
-__all__ = ["build_prefill_step", "build_serve_step", "ServeEngine",
-           "ContinuousEngine"]
+__all__ = ["build_prefill_step", "build_prefill_chunk_step",
+           "build_serve_step", "ServeEngine", "ContinuousEngine"]
 
 
 def build_prefill_step(cfg: ModelConfig, last_logit_only: bool = False,
@@ -59,6 +60,49 @@ def build_prefill_step(cfg: ModelConfig, last_logit_only: bool = False,
         return logits, cache
 
     return prefill
+
+
+def build_prefill_chunk_step(cfg: ModelConfig,
+                             kv_group: Optional[int] = None,
+                             paged: bool = False):
+    """(params, tokens (1, C), ctx, start (1,)) -> the chunk-prefill step
+    of chunked paged prefill: forward one CHUNK of C tokens at absolute
+    positions ``start .. start+C-1``, attending causally to ``ctx`` (the
+    request's already-prefilled prefix) plus the chunk itself.
+
+    ``paged=False`` (carry, the engine default): ``ctx`` is the bf16 KV
+    carry ``{"k", "v"}`` stacked (L, 1, T, Kh, Dh) with T == start.
+    Returns (logits (1, C, V), chunk_kv, chunk_q): ``chunk_kv`` extends
+    the carry for the next chunk and ``chunk_q`` (posit8 codes+scales,
+    quantized inside the jit) scatters into pages via
+    ``PagedKVPool.write_chunk``.  Chunk logits agree BITWISE with a
+    monolithic prefill of the same prefix.
+
+    ``paged=True``: ``ctx`` carries the pool leaves + ``page_table``
+    (leaves lead with the layer-scan axis, like the paged decode cache);
+    the chunk is quantized and scattered in-jit, attention reads prefix
+    + chunk back through the page table, and (logits, updated_ctx) is
+    returned -- zero extra residency, posit8-accurate context.
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"chunked prefill needs a pure-attention cache; family "
+            f"{cfg.family!r} carries SSM state")
+    if cfg.rope_kind != "default":
+        raise ValueError("chunked prefill serves 1-D token streams "
+                         f"(rope_kind={cfg.rope_kind!r})")
+
+    def chunk_step(params, tokens, ctx, start):
+        c = tokens.shape[1]
+        positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
+        batch = {"tokens": tokens, "positions": positions}
+        logits, new_cache, _ = zoo.apply_model(
+            params, batch, cfg, mode="prefill_chunk", cache=ctx)
+        if paged:
+            return logits, new_cache
+        return logits, new_cache, zoo.quantize_cache(new_cache, kv_group)
+
+    return chunk_step
 
 
 def build_serve_step(cfg: ModelConfig, ragged: bool = False):
@@ -157,6 +201,12 @@ class ServeEngine:
     # bf16 k/v, posit8 codes, and their (..., Gs) scale tensors
     _SEQ_KEYS = frozenset(
         {"k", "v", "k_codes", "v_codes", "k_scale", "v_scale"})
+    # scale leaves pad with the pool's neutral scale 1.0, not jnp.pad's
+    # default 0.0: a zero po2 scale in a padded slot silently dequantizes
+    # ANY code written there to 0 (only the positional mask was hiding
+    # it), and the paged pool initializes scales to 1.0 -- the two
+    # planes must share one convention.
+    _SCALE_KEYS = frozenset({"k_scale", "v_scale"})
 
     def _pad_cache(self, cache, b):
         """Grow prefill-length KV buffers to max_len for decode.
@@ -169,7 +219,8 @@ class ServeEngine:
             if key in self._SEQ_KEYS and x.shape[2] < self.max_len:
                 pad_width = [(0, 0)] * x.ndim
                 pad_width[2] = (0, self.max_len - x.shape[2])
-                return jnp.pad(x, pad_width)
+                fill = 1.0 if key in self._SCALE_KEYS else 0.0
+                return jnp.pad(x, pad_width, constant_values=fill)
             return x
 
         def rec(node):
@@ -193,21 +244,45 @@ class ContinuousEngine:
     The static ``ServeEngine`` batches a fixed set of requests against a
     dense ``max_len`` cache: every request pays worst-case KV memory and
     new arrivals wait for the whole batch.  This engine keeps ONE jitted
-    decode step of shape ``max_batch`` alive and per step (a) admits
-    queued requests (FIFO, gated on free pages; each gets a per-request
-    prefill whose quantized cache scatters into its pages), (b) runs one
-    batched paged decode for every running request at its OWN position,
-    and (c) retires finished requests, returning their pages -- with
-    LIFO preemption (free the youngest's pages, requeue it) when the
-    pool runs dry.  See ``serve/scheduler.py`` for the policy and
-    ``serve/paged_kv.py`` for the page layout.
+    decode step of shape ``max_batch`` alive and per step (a) ensures
+    page capacity for the requests already running, (b) admits queued
+    requests (FIFO, gated on unclaimed free pages), (c) prefills
+    admitted requests in page-aligned CHUNKS inside a per-step token
+    budget, (d) runs one batched paged decode for every running request
+    at its OWN position, and (e) retires finished requests, returning
+    their pages -- with LIFO preemption (free the youngest's pages,
+    requeue it) when the pool runs dry.  See ``serve/scheduler.py`` for
+    the policy and ``serve/paged_kv.py`` for the page layout and the
+    chunk/page contract.
+
+    Chunked paged prefill: ``prefill_chunk_tokens`` (a multiple of
+    ``page_size`` that divides ``max_len``) bounds the prefill tokens
+    one engine step may process, so a long-prompt arrival costs a chain
+    of chunk-sized steps interleaved with decode instead of stalling
+    every running request for a full prefill -- p99 DECODE-step latency
+    is bounded by the chunk, not the longest prompt.  ``None`` (the
+    default) prefills each admission in one whole-prefix chunk through
+    the same code path (the PR 3 monolithic behavior).  The chunk's
+    attention context is selected by ``prefill_context``:
+
+      * ``"carry"`` (default): the already-prefilled prefix rides as a
+        transient bf16 KV carry, so chunk logits -- and therefore
+        temperature-0 tokens -- are BITWISE those of a monolithic
+        prefill; the carry is dropped the moment prefill completes.
+      * ``"pages"``: the chunk re-reads the prefix from its posit8
+        pages (``attention.paged_prefill_blocked`` / the fused kernel
+        under ``decode_impl='flash'``): zero extra residency, but the
+        context is dequantized, so prompt logits carry quantization
+        error and exact static parity is not guaranteed.
 
     The KV plane is ALWAYS the posit8 paged pool (that is the point);
     weights pack per ``policy`` exactly like the static engine.  At
     temperature 0 with ``page_size == default_kv_block(max_len)`` of a
-    static engine, outputs match per-request ``ServeEngine.generate``
-    token for token (the paged and contiguous block partitions --
-    and therefore the online-softmax accumulation order -- coincide).
+    static engine (and ``prefill_context="carry"``), outputs match
+    per-request ``ServeEngine.generate`` token for token (the paged and
+    contiguous block partitions -- and therefore the online-softmax
+    accumulation order -- coincide, and chunked prefill replays the
+    monolithic logits bitwise).
     """
 
     cfg: ModelConfig
@@ -220,6 +295,8 @@ class ContinuousEngine:
     temperature: float = 0.0
     eos_id: Optional[int] = None
     seed: int = 0
+    prefill_chunk_tokens: Optional[int] = None
+    prefill_context: str = "carry"
 
     def __post_init__(self):
         from ..kernels.flash_decode import default_kv_block
@@ -238,13 +315,30 @@ class ContinuousEngine:
         assert self.max_len % self.page_size == 0, \
             (self.max_len, self.page_size)
         self.max_pages_per_req = self.max_len // self.page_size
+        if self.prefill_chunk_tokens is not None:
+            c = self.prefill_chunk_tokens
+            if c <= 0 or c % self.page_size or self.max_len % c:
+                raise ValueError(
+                    f"prefill_chunk_tokens={c} must be a positive "
+                    f"multiple of page_size={self.page_size} that "
+                    f"divides max_len={self.max_len} (the chunk/page "
+                    f"contract of serve/paged_kv.py)")
+        if self.prefill_context not in ("carry", "pages"):
+            raise ValueError(self.prefill_context)
         pool = PagedKVPool(self.cfg, self.n_pages, self.page_size, kv_group)
         self.scheduler = Scheduler(pool, self.max_batch)
-        # per-request prefill: FULL logits (the request's last real token
-        # sits at len-1 of its page-aligned bucket, not at -1)
-        self._prefill = jax.jit(build_prefill_step(
-            self.cfg, last_logit_only=False,
-            quantized_kv=True, kv_group=kv_group))
+        # chunk prefill steps: FULL chunk logits (the request's last real
+        # token may sit anywhere inside the final chunk)
+        self._chunk_step = jax.jit(
+            build_prefill_chunk_step(self.cfg, kv_group))
+        self._chunk_step_paged = jax.jit(
+            build_prefill_chunk_step(self.cfg, kv_group, paged=True),
+            donate_argnums=(2,))
+        # per-request bf16 KV carries of requests mid-prefill (rid ->
+        # {"k","v"} stacked (L,1,T,Kh,Dh)); dropped on completion or
+        # preemption.  Bounded by the prefix of the few PREFILLING
+        # requests -- the same transient a monolithic prefill held.
+        self._prefill_ctx: Dict[int, Any] = {}
 
         def step(params, tokens, cache):
             # pos operand is dead on the paged path: positions ride in
@@ -258,6 +352,9 @@ class ContinuousEngine:
         # retired within the step included) -- the per-step KV-traffic
         # ground truth benchmarks read; [] when the step decoded nothing
         self.last_positions: List[int] = []
+        # rids admitted by the LAST step (regression hook: a rid must
+        # never show up in scheduler.preempted_log during the same step)
+        self.last_admitted: List[int] = []
 
     @property
     def pool(self):
@@ -291,34 +388,110 @@ class ContinuousEngine:
 
     # -- one engine step ----------------------------------------------------
 
-    def _prefill_request(self, req) -> None:
-        """Prefill a newly admitted request's prefix (page-aligned
-        right-padded bucket; causal attention keeps pad columns out of
-        real logits) and scatter its quantized cache into its pages."""
+    def _empty_ctx(self):
+        hd = self.cfg.resolved_head_dim
+        z = jnp.zeros((self.cfg.n_layers, 1, 0, self.cfg.n_kv_heads, hd),
+                      jnp.bfloat16)
+        return {"k": z, "v": z}
+
+    def _prefill_chunk(self, req) -> int:
+        """Run at most ONE prefill chunk for ``req``: allocate the pages
+        the chunk's slots land in (lazy, can preempt younger requests),
+        forward the chunk against the request's prefilled context, and
+        scatter its quantized KV into pages.  Completes prefill (samples
+        the first token, PREFILLING -> RUNNING) when the chunk covers
+        the prefix's last real token.  Returns the prefill tokens spent
+        (the padded chunk width; 0 if ``req`` was preempted before any
+        compute)."""
+        sched = self.scheduler
         prefix = req.prefix
         ln = prefix.size
-        bucket = self.pool.pages_for(ln) * self.page_size
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :ln] = prefix
-        logits, cache_q = self._prefill(self.params,
-                                        {"tokens": jnp.asarray(toks)})
-        self.pool.write_prefill(cache_q, req.pages)
-        nxt = self._sample(np.asarray(logits[0, ln - 1]))
-        req.generated.append(nxt)
-        req.next_token = nxt
+        start = req.prefilled
+        if self.prefill_chunk_tokens is None:
+            c = self.pool.pages_for(ln) * self.page_size   # monolithic
+        else:
+            c = self.prefill_chunk_tokens
+        real = min(c, ln - start)
+        if not sched.ensure_prefill_capacity(req, start + real):
+            return 0                     # self-preempted: pool too dry
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :real] = prefix[start:start + real]
+        start_arr = jnp.full((1,), start, jnp.int32)
+        if self.prefill_context == "pages":
+            L = self.cfg.n_layers
+            pt = np.zeros((1, self.max_pages_per_req), np.int32)
+            pt[0, :len(req.pages)] = req.pages
+            cache = self.pool.device_state()
+            cache["page_table"] = jnp.tile(jnp.asarray(pt)[None], (L, 1, 1))
+            logits, new_cache = self._chunk_step_paged(
+                self.params, jnp.asarray(toks), cache, start_arr)
+            self.pool.set_device_state(
+                {key: new_cache[key] for key in
+                 ("k_codes", "v_codes", "k_scale", "v_scale")})
+        else:
+            ctx = self._prefill_ctx.get(req.rid)
+            if start == 0 or ctx is None:
+                ctx = self._empty_ctx()
+            logits, kv, chunk_q = self._chunk_step(
+                self.params, jnp.asarray(toks), ctx, start_arr)
+            self.pool.write_chunk(chunk_q, req.pages, start)
+            if start + real < ln:        # full chunk: extend the carry
+                self._prefill_ctx[req.rid] = {
+                    "k": jnp.concatenate([ctx["k"], kv["k"]], axis=2),
+                    "v": jnp.concatenate([ctx["v"], kv["v"]], axis=2)}
+        req.prefilled = start + real
+        if req.prefilled == ln:
+            self._prefill_ctx.pop(req.rid, None)
+            nxt = self._sample(np.asarray(logits[0, real - 1]))
+            req.generated.append(nxt)
+            req.next_token = nxt
+            sched.prefill_complete(req)
+        return c
 
     def step(self) -> int:
-        """Admit + prefill arrivals, one batched decode for everyone
-        running, retire finishers.  Returns decoded request count."""
+        """One engine step: capacity for the running batch FIRST, then
+        admission, chunked prefill within the token budget, one batched
+        decode for everyone running, retirement.  Returns decoded
+        request count.
+
+        The ordering is load-bearing: PR 3 admitted (and fully
+        prefilled) newcomers BEFORE ensuring capacity for the running
+        batch, so under pool pressure the newcomer took the last free
+        page, was immediately preempted as the youngest victim, and its
+        whole prefill was wasted -- every step while the pressure
+        lasted.  Capacity-first means a newcomer is only admitted
+        against pages the running batch did not need this step."""
         sched = self.scheduler
-        for req in sched.admit():
-            self._prefill_request(req)
-            if req.done:
-                sched.retire(req)
+        # (1) grow the already-running requests' page tables
         for req in list(sched.running):
-            if req.status == "running":      # a victim may drop mid-loop
+            if req.status == RUNNING:    # a victim may drop mid-loop
                 sched.ensure_capacity(req)
-        running = list(sched.running)
+        # (2) admit against the unclaimed remainder
+        self.last_admitted = [r.rid for r in sched.admit()]
+        # (3) chunked prefill, oldest first, inside the token budget:
+        # at most prefill_chunk_tokens prefill tokens per step (None =
+        # whole prefixes, the monolithic behavior)
+        budget = self.prefill_chunk_tokens
+        spent = 0
+        for req in [r for r in sched.running if r.status == PREFILLING]:
+            while req.status == PREFILLING and \
+                    (budget is None or spent < budget):
+                spent += self._prefill_chunk(req)
+            if req.status == RUNNING and req.done:
+                sched.retire(req)        # budget of 1 / instant EOS
+        # drop carries of requests no longer mid-prefill (preempted or
+        # completed); they re-prefill from chunk 0 on re-admission
+        live = {r.rid for r in sched.running if r.status == PREFILLING}
+        for rid in [r for r in self._prefill_ctx if r not in live]:
+            del self._prefill_ctx[rid]
+        # (4) one batched decode for everyone RUNNING (newly promoted
+        # requests may still need the page their first decode write
+        # lands in -- their admission gate already reserved budget for
+        # it, so this never preempts a same-step admission)
+        running = []
+        for req in list(sched.running):
+            if req.status == RUNNING and sched.ensure_capacity(req):
+                running.append(req)
         self.last_positions = [req.position for req in running]
         if not running:
             return 0

@@ -21,10 +21,27 @@ never read through a live mask -- padded batch rows in the fixed-shape
 decode step write their garbage there, and page-table rows are padded
 with it so dead gathers stay in bounds.
 
-Alloc/free is host-side (a free list, LIFO for locality); the device
-arrays move only through ``write_prefill`` (batched scatter of a
-quantized prefill cache into pages) and the decode step itself (the
+Alloc/free is host-side (a free list, LIFO for locality, backed by an
+allocated-page set so the double-free guard is O(1) per page); the
+device arrays move only through ``write_prefill``/``write_chunk``
+(batched scatter of a quantized prefill cache / chunk into pages), the
+in-jit chunk scatter of paged chunk prefill
+(``attention._attn_prefill_paged``) and the decode step itself (the
 per-token scatter in ``attention._attn_decode_paged``).
+
+Chunk/page contract (chunked paged prefill)
+-------------------------------------------
+Prefill proceeds in fixed-size CHUNKS that are whole pages:
+``chunk == k * page_size`` and chunks start at page boundaries, so a
+chunk's tokens land in ``chunk / page_size`` consecutive page-table
+slots and ``write_chunk`` is a pure page scatter -- no page is ever
+written by two different chunks, and a half-prefilled request can be
+preempted by freeing its pages with no partial-page state to unwind.
+The engine additionally requires ``chunk | max_len`` so the last chunk
+of a ``max_len``-long prefix never indexes past the page table.  The
+final chunk of a prefix may cover fewer real tokens than ``chunk``;
+its pad slots scatter garbage that decode never reads (the live mask
+is positional), exactly like the monolithic prefill bucket did.
 """
 
 from __future__ import annotations
@@ -86,8 +103,12 @@ class PagedKVPool:
         self.v_codes = jnp.zeros(code_shape, jnp.uint8)
         self.k_scale = jnp.ones(scale_shape, jnp.bfloat16)
         self.v_scale = jnp.ones(scale_shape, jnp.bfloat16)
-        # LIFO free list: recently-freed pages are re-used first
+        # LIFO free list: recently-freed pages are re-used first.  The
+        # allocated-page set mirrors it so alloc/free can assert their
+        # invariants in O(1) per page (the old ``pg not in self._free``
+        # guard was a linear scan -- O(P^2) to retire a long request).
         self._free: List[int] = list(range(P - 1, 0, -1))
+        self._allocated: set = set()
         self.alloc_peak = 0
 
     # -- accounting ---------------------------------------------------------
@@ -116,13 +137,17 @@ class PagedKVPool:
         if n > len(self._free):
             return None
         got = [self._free.pop() for _ in range(n)]
+        for pg in got:
+            assert pg not in self._allocated, f"page {pg} double-allocated"
+            self._allocated.add(pg)
         self.alloc_peak = max(self.alloc_peak, self.used_pages)
         return got
 
     def free(self, pages: List[int]) -> None:
         for pg in pages:
             assert 0 < pg <= self.n_pages, pg
-            assert pg not in self._free, f"double free of page {pg}"
+            assert pg in self._allocated, f"double free of page {pg}"
+            self._allocated.remove(pg)
             self._free.append(pg)
 
     # -- device state -------------------------------------------------------
@@ -158,15 +183,33 @@ class PagedKVPool:
         whose seq length is a multiple of ``page_size`` -- leaves
         (L, 1, S, Kh, X).  The first S/page_size entries of ``pages``
         receive the S tokens in logical order."""
+        self.write_chunk(cache_q, pages, 0)
+
+    def write_chunk(self, cache_q, pages: List[int], start: int) -> None:
+        """Scatter one quantized prefill CHUNK into a request's pages --
+        the partial form of :func:`write_prefill` (``start=0`` with a
+        whole-prefix chunk IS write_prefill).
+
+        ``cache_q``: quantized B=1 chunk, leaves (L, 1, C, Kh, X) with
+        C a multiple of ``page_size``.  ``start`` is the chunk's first
+        token slot within the request; it must be page-aligned (the
+        chunk/page contract above), so the chunk occupies page-table
+        slots ``start/page_size ..`` and the scatter stays whole-page.
+        A final chunk padded past the request's live prefix may own
+        fewer pages than C/page_size: only ``pages[start/page_size:]``
+        are written and the trailing pad pages are dropped."""
         leaf = cache_q["k_codes"]
-        L, b, s = leaf.shape[:3]
+        L, b, c = leaf.shape[:3]
         assert b == 1, "prefill writes are per-request (B=1)"
-        assert s % self.page_size == 0, (s, self.page_size)
-        nblk = s // self.page_size
-        assert nblk <= len(pages), (nblk, len(pages))
-        idx = jnp.asarray(pages[:nblk], jnp.int32)
+        assert c % self.page_size == 0, (c, self.page_size)
+        assert start % self.page_size == 0, (start, self.page_size)
+        first = start // self.page_size
+        nblk = min(c // self.page_size, len(pages) - first)
+        assert nblk > 0, (start, c, len(pages))
+        idx = jnp.asarray(pages[first:first + nblk], jnp.int32)
+        s = nblk * self.page_size
         for key in _POOL_KEYS:
-            src = cache_q[key][:, 0]                     # (L, S, Kh, X)
+            src = cache_q[key][:, 0, :s]                 # (L, S, Kh, X)
             src = src.reshape(L, nblk, self.page_size, *src.shape[2:])
             setattr(self, key, _scatter_pages(getattr(self, key), src, idx))
 

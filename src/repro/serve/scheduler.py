@@ -5,21 +5,41 @@ The scheduler owns the REQUEST state machine and the page accounting;
 it never touches the model.  The engine drives it:
 
   submit()          WAITING, queued FIFO.
-  admit()           WAITING -> RUNNING while a batch slot is open and the
-                    pool can page the request's whole prefix plus one
-                    decode slot.  Strict FIFO: a too-big head blocks the
-                    queue (deterministic, no starvation).
+  admit()           WAITING -> PREFILLING while a batch slot is open and
+                    the pool's UNCLAIMED free pages can cover the
+                    request's whole prefix plus one decode slot.  Strict
+                    FIFO: a too-big head blocks the queue
+                    (deterministic, no starvation).  Pages are NOT
+                    allocated here -- they are claimed lazily, chunk by
+                    chunk, as the engine prefills
+                    (``ensure_prefill_capacity``); the claim accounting
+                    keeps co-admitted requests from fighting over the
+                    same free pages.
+  ensure_prefill_capacity()
+                    called before each prefill chunk: allocates the
+                    pages the chunk's slots land in, preempting younger
+                    requests if the pool is dry.  PREFILLING -> RUNNING
+                    via ``prefill_complete`` once the engine has paged
+                    the whole prefix and sampled the first token.
   ensure_capacity() called before every decode step for each running
                     request: allocates the next page when the request's
                     position crosses a page boundary.  On pool
-                    exhaustion the YOUNGEST running request is preempted
-                    (its pages freed, its request re-queued at the
-                    FRONT) -- the victim loses no tokens: its prefix
-                    (prompt + generated so far) re-prefills on
-                    re-admission and greedy decoding resumes exactly
-                    where it stopped.
+                    exhaustion the YOUNGEST request is preempted (its
+                    pages freed, its request re-queued at the FRONT) --
+                    a RUNNING victim loses no tokens (its prefix
+                    re-prefills on re-admission and greedy decoding
+                    resumes exactly where it stopped); a PREFILLING
+                    victim restarts its prefill from chunk 0.
   retire()          RUNNING -> FINISHED (EOS hit or token budget spent);
                     pages return to the pool the same step.
+
+ORDERING CONTRACT: the engine must run ``ensure_capacity`` for the
+already-running batch BEFORE ``admit``.  The PR 3 engine admitted (and
+fully prefilled) newcomers first; under pool pressure the newcomer took
+the last free page, ``ensure_capacity`` then preempted it as the
+youngest victim, and its entire prefill was thrown away -- every step,
+for as long as the pressure lasted.  ``wasted_prefill_tokens`` counts
+the prefill work preemption discards, so that regression is measurable.
 """
 
 from __future__ import annotations
@@ -33,9 +53,10 @@ import numpy as np
 from .paged_kv import PagedKVPool
 
 __all__ = ["Request", "Scheduler",
-           "WAITING", "RUNNING", "FINISHED"]
+           "WAITING", "PREFILLING", "RUNNING", "FINISHED"]
 
 WAITING = "waiting"
+PREFILLING = "prefilling"
 RUNNING = "running"
 FINISHED = "finished"
 
@@ -53,6 +74,7 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     next_token: int = -1                # fed to the next decode step
     preemptions: int = 0
+    prefilled: int = 0                  # chunk cursor: prefix tokens paged in
 
     @property
     def prefix(self) -> np.ndarray:
@@ -89,6 +111,9 @@ class Scheduler:
         self.finished: Dict[int, Request] = {}
         self._next_rid = 0
         self.preemption_count = 0
+        self.prefill_preemptions = 0          # victims dropped mid-prefill
+        self.wasted_prefill_tokens = 0        # prefix KV tossed by preemption
+        self.preempted_log: List[int] = []    # rids, in preemption order
 
     # -- queue --------------------------------------------------------------
 
@@ -113,31 +138,46 @@ class Scheduler:
     # -- admission ----------------------------------------------------------
 
     def admit(self) -> List[Request]:
-        """Move FIFO-head requests to RUNNING while a batch slot is open
-        and the pool can page prefix + 1 decode slot.  Pages are
-        allocated here; the engine prefills the returned requests."""
+        """Move FIFO-head requests to PREFILLING while a batch slot is
+        open and the UNCLAIMED free pages cover prefix + 1 decode slot.
+
+        Pages are allocated lazily per chunk, so already-admitted
+        PREFILLING requests hold outstanding claims (their full need
+        minus what they have allocated); admission budgets against
+        free pages minus those claims, keeping co-admitted prefills
+        from racing each other to the same pages."""
+        budget = self.pool.free_pages
+        for r in self.running:
+            if r.status == PREFILLING:
+                claim = self.pool.pages_for(len(r.prefix) + 1) - len(r.pages)
+                budget -= max(claim, 0)
         admitted = []
         while self.waiting and len(self.running) < self.max_batch:
             head = self.waiting[0]
             need = self.pool.pages_for(len(head.prefix) + 1)
-            pages = self.pool.alloc(need)
-            if pages is None:
+            if need > budget:
                 break                    # head-of-line blocks: strict FIFO
+            budget -= need
             self.waiting.popleft()
-            head.pages = pages
-            head.status = RUNNING
+            head.status = PREFILLING
+            head.prefilled = 0
             self.running.append(head)
             admitted.append(head)
         return admitted
 
+    def prefill_complete(self, req: Request) -> None:
+        """PREFILLING -> RUNNING: the whole prefix is paged in and the
+        engine has sampled the request's next token."""
+        assert req.status == PREFILLING, req.status
+        req.status = RUNNING
+
     # -- capacity / preemption ----------------------------------------------
 
-    def ensure_capacity(self, req: Request) -> bool:
-        """Make sure ``req`` owns the page its next write lands in,
-        preempting younger requests if the pool is dry.  False if ``req``
-        itself was preempted (it is no longer running)."""
-        need_idx = req.position // self.pool.page_size
-        while need_idx >= len(req.pages):
+    def _grow(self, req: Request, need_pages: int) -> bool:
+        """Grow ``req``'s page list to ``need_pages``, preempting the
+        youngest request while the pool is dry.  False if ``req`` itself
+        was preempted (it is no longer running)."""
+        while need_pages > len(req.pages):
             got = self.pool.alloc(1)
             if got is not None:
                 req.pages.extend(got)
@@ -148,16 +188,35 @@ class Scheduler:
                 return False
         return True
 
+    def ensure_capacity(self, req: Request) -> bool:
+        """Make sure ``req`` owns the page its next decode write lands
+        in.  False if ``req`` itself was preempted."""
+        return self._grow(req, req.position // self.pool.page_size + 1)
+
+    def ensure_prefill_capacity(self, req: Request, upto: int) -> bool:
+        """Make sure ``req`` owns every page for prefix slots
+        [0, upto) -- called per chunk (lazy page alloc).  False if
+        ``req`` itself was preempted."""
+        return self._grow(req, self.pool.pages_for(upto))
+
     def preempt(self, req: Request) -> None:
         """Free the victim's pages and put it back at the FRONT of the
-        queue; its generated tokens stay (resume = re-prefill prefix)."""
-        assert req.status == RUNNING
+        queue.  A RUNNING victim keeps its generated tokens (resume =
+        re-prefill prefix); a PREFILLING victim restarts from chunk 0."""
+        assert req.status in (RUNNING, PREFILLING), req.status
+        if req.status == PREFILLING:
+            self.prefill_preemptions += 1
+            self.wasted_prefill_tokens += req.prefilled
+        else:
+            self.wasted_prefill_tokens += req.position + 1
         self.pool.free(req.pages)
         req.pages = []
+        req.prefilled = 0
         req.status = WAITING
         req.next_token = -1
         req.preemptions += 1
         self.preemption_count += 1
+        self.preempted_log.append(req.rid)
         self.running.remove(req)
         self.waiting.appendleft(req)
 

@@ -12,7 +12,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import transformer as T
 from repro.serve import ContinuousEngine, PagedKVPool, Scheduler, ServeEngine
-from repro.serve.scheduler import FINISHED, RUNNING, WAITING
+from repro.serve.scheduler import FINISHED, PREFILLING, RUNNING, WAITING
 
 CFG = get_config("qwen2-0.5b").reduced()
 RNG = np.random.default_rng(0)
@@ -30,20 +30,35 @@ def _prompt(n):
     return np.arange(1, n + 1, dtype=np.int32)
 
 
+def _page_in(s, req):
+    """Drive a PREFILLING request's page side to completion (what the
+    engine's chunk loop does, minus the model)."""
+    assert s.ensure_prefill_capacity(req, len(req.prefix))
+    req.prefilled = len(req.prefix)
+    s.prefill_complete(req)
+
+
 # ---------------------------------------------------------------------------
 # scheduler unit tests (no model involved)
 # ---------------------------------------------------------------------------
 
-def test_admission_fifo_order_and_page_gating():
+def test_admission_fifo_order_and_claim_gating():
     s = _sched(n_pages=5, page_size=4, max_batch=8)
-    r0 = s.submit(_prompt(7), 4)    # needs pages_for(8) = 2
+    r0 = s.submit(_prompt(7), 4)    # claims pages_for(8) = 2
     r1 = s.submit(_prompt(7), 4)    # 2
     r2 = s.submit(_prompt(3), 2)    # 1
-    r3 = s.submit(_prompt(3), 2)    # 1, but pool will be dry
+    r3 = s.submit(_prompt(3), 2)    # 1, but the claims sum to the pool
     admitted = s.admit()
     assert [r.rid for r in admitted] == [r0, r1, r2]
-    assert s.pool.free_pages == 0
+    assert all(r.status == PREFILLING for r in admitted)
+    # pages are allocated lazily per chunk, NOT at admission -- but the
+    # admitted requests' outstanding claims still gate the queue head
+    assert s.pool.free_pages == 5
     assert [r.rid for r in s.waiting] == [r3]       # head-of-line gated
+    assert s.admit() == []                          # claims unchanged
+    for r in admitted:                              # prefill allocates
+        _page_in(s, r)
+    assert s.pool.free_pages == 0                   # 2 + 2 + 1
     # retiring returns pages and the next admit picks up the queue head
     s.retire(s.running[0])
     assert [r.rid for r in s.admit()] == [r3]
@@ -52,8 +67,9 @@ def test_admission_fifo_order_and_page_gating():
 def test_admission_strict_fifo_blocks_on_big_head():
     """A too-big head must NOT be overtaken by a small later request."""
     s = _sched(n_pages=4, page_size=4, max_batch=8)
-    holder = s.submit(_prompt(6), 2)  # admits with 2 pages -> 2 free
-    assert len(s.admit()) == 1
+    holder = s.submit(_prompt(6), 2)  # claims 2 pages -> 2 unclaimed
+    (h,) = s.admit()
+    _page_in(s, h)
     big = s.submit(_prompt(9), 3)     # needs 3 free pages now, has 2
     small = s.submit(_prompt(2), 1)   # would fit, but FIFO
     assert s.admit() == []
@@ -71,7 +87,9 @@ def test_preemption_frees_youngest_and_requeues_front():
     r0 = s.submit(_prompt(6), 8)     # 2 pages
     r1 = s.submit(_prompt(6), 8)     # 2 pages
     a, b = s.admit()
-    a.generated, b.generated = [9], [9]          # "prefilled"
+    _page_in(s, a)
+    _page_in(s, b)
+    a.generated, b.generated = [9], [9]          # decoding
     # a's next write crosses into page 2 (position 6 -> idx 1 owned);
     # simulate growth to the boundary
     a.generated = [9, 9, 9]                      # position 8 -> page idx 2
@@ -79,6 +97,8 @@ def test_preemption_frees_youngest_and_requeues_front():
     assert b.status == WAITING and b.pages == [] and b.preemptions == 1
     assert s.waiting[0] is b                     # requeued at the FRONT
     assert b.generated == [9]                    # resume keeps its tokens
+    assert b.prefilled == 0                      # resume re-prefills
+    assert s.wasted_prefill_tokens == 7          # b's prefix KV tossed
     assert a.status == RUNNING and len(a.pages) == 3
     # the victim re-admits once pages free up again
     s.retire(a)
@@ -86,10 +106,33 @@ def test_preemption_frees_youngest_and_requeues_front():
     assert s.running[0].rid == r1 and r0 in s.finished
 
 
+def test_preemption_drops_half_prefilled_request():
+    """A PREFILLING victim is preemptable mid-prefill: its pages return,
+    its chunk cursor resets, and the waste is counted."""
+    s = _sched(n_pages=3, page_size=4, max_batch=4)
+    r0 = s.submit(_prompt(6), 4)                 # claims 2
+    (a,) = s.admit()
+    _page_in(s, a)
+    a.generated = [9]
+    r1 = s.submit(_prompt(9), 3)                 # claims 3 > 1 free...
+    assert s.admit() == []
+    s.retire(a)                                  # ...until a retires
+    (b,) = s.admit()
+    assert s.ensure_prefill_capacity(b, 4)       # chunk 1 paged in
+    b.prefilled = 4
+    assert b.status == PREFILLING and len(b.pages) == 1
+    s.preempt(b)
+    assert b.status == WAITING and b.pages == [] and b.prefilled == 0
+    assert s.prefill_preemptions == 1
+    assert s.wasted_prefill_tokens == 4          # one chunk thrown away
+    assert s.pool.used_pages == 0
+
+
 def test_preemption_self_when_youngest():
     s = _sched(n_pages=2, page_size=4, max_batch=4)
     r0 = s.submit(_prompt(6), 2)
     (a,) = s.admit()
+    _page_in(s, a)
     a.generated = [9, 9, 9]                      # needs a 3rd page, pool dry
     assert s.ensure_capacity(a) is False
     assert a.status == WAITING and s.running == [] and s.pool.free_pages == 2
@@ -99,6 +142,7 @@ def test_retire_on_eos_returns_pages():
     s = _sched(n_pages=4, page_size=4)
     rid = s.submit(_prompt(3), 8, eos_id=7)
     (req,) = s.admit()
+    _page_in(s, req)
     used = s.pool.used_pages
     assert used > 0
     req.generated = [5, 7]                       # EOS sampled
@@ -239,6 +283,146 @@ def test_continuous_flash_impl_matches_blocked():
         return [out[r] for r in rids]
 
     for a, b in zip(run(cfg), run(CFG)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_no_same_step_admit_then_preempt_thrash():
+    """REGRESSION (PR 4): admission must come AFTER capacity for the
+    running batch.  The PR 3 step() admitted (and fully prefilled) a
+    newcomer first; when a running request needed its next page in the
+    same step, the newcomer -- youngest -- was preempted and its whole
+    prefill thrown away, every step while pool pressure lasted.  Now a
+    just-admitted request is never preempted in the same step and no
+    prefill work is wasted in this scenario."""
+    params = _params()
+    eng = ContinuousEngine(CFG, params, n_pages=4, page_size=16,
+                           max_batch=4, max_len=64)
+    p0 = RNG.integers(0, CFG.vocab, (14,)).astype(np.int32)
+    p1 = RNG.integers(0, CFG.vocab, (17,)).astype(np.int32)
+    r0 = eng.submit(p0, 20)          # grows to 3 pages over its life
+    for _ in range(18):              # drive to the page-boundary step:
+        eng.step()                   # r0 is about to take a 3rd page
+    assert eng.pool.free_pages == 2
+    r1 = eng.submit(p1, 4)           # needs 2 pages -- exactly what's free
+    seen = 0
+    while eng.scheduler.has_work:
+        eng.step()
+        new_preempted = set(eng.scheduler.preempted_log[seen:])
+        seen = len(eng.scheduler.preempted_log)
+        # the regression: admitted and preempted in one step
+        assert not (set(eng.last_admitted) & new_preempted)
+    # capacity-first defers r1 instead of thrashing it: zero preemptions,
+    # zero wasted prefill work, and both requests complete
+    assert eng.scheduler.preemption_count == 0
+    assert eng.scheduler.wasted_prefill_tokens == 0
+    assert {r0, r1} <= set(eng.scheduler.finished)
+    assert eng.pool.used_pages == 0
+
+
+def test_chunked_prefill_matches_static():
+    """Chunked paged prefill (the tentpole): multi-chunk prompts match
+    per-request static generate token for token at temperature 0 --
+    the bf16 carry makes chunk logits bitwise those of a monolithic
+    prefill."""
+    params = _params()
+    reqs = [(RNG.integers(0, CFG.vocab, (ln,)).astype(np.int32), gn)
+            for ln, gn in [(24, 6), (17, 8), (33, 5), (9, 10), (40, 4)]]
+    eng = ContinuousEngine(CFG, params, n_pages=40, page_size=16,
+                           max_batch=8, max_len=48,
+                           prefill_chunk_tokens=16)
+    rids = [eng.submit(p, g) for p, g in reqs]
+    out = eng.run()
+    static = ServeEngine(CFG, params, max_len=48, quantized_kv=True)
+    for rid, (p, g) in zip(rids, reqs):
+        want = static.generate(jnp.asarray(p)[None], steps=g)[0]
+        np.testing.assert_array_equal(out[rid], want)
+    assert eng.pool.used_pages == 0
+
+
+def test_chunk_budget_bounds_prefill_per_step():
+    """One engine step processes at most prefill_chunk_tokens prefill
+    tokens: a 40-token prompt takes ceil(40/16) chunk steps, decoding
+    only once the final chunk lands."""
+    params = _params()
+    eng = ContinuousEngine(CFG, params, n_pages=8, page_size=16,
+                           max_batch=2, max_len=48,
+                           prefill_chunk_tokens=16)
+    eng.submit(RNG.integers(0, CFG.vocab, (40,)).astype(np.int32), 3)
+    assert eng.step() == 0           # chunk 1: nothing decoded
+    (req,) = eng.scheduler.running
+    assert req.status == PREFILLING and req.prefilled == 16
+    assert eng.step() == 0           # chunk 2
+    assert req.prefilled == 32
+    assert eng.step() == 1           # final chunk + first decode
+    assert req.prefilled == 40 and req.status == RUNNING
+
+
+def test_chunked_mid_prefill_preemption_exact():
+    """A starved pool preempts a request MID-PREFILL (chunk cursor
+    reset, pages returned); because the victim had not started decoding
+    and the non-victim is never preempted, resume is EXACTLY the
+    monolithic logits -- full static parity survives the preemption.
+    Also deterministic across runs."""
+    params = _params()
+    p0 = RNG.integers(0, CFG.vocab, (15,)).astype(np.int32)
+    p1 = RNG.integers(0, CFG.vocab, (40,)).astype(np.int32)
+
+    def run():
+        eng = ContinuousEngine(CFG, params, n_pages=4, page_size=16,
+                               max_batch=4, max_len=48,
+                               prefill_chunk_tokens=16)
+        rids = [eng.submit(p0, 20), eng.submit(p1, 4)]
+        out = eng.run()
+        return [out[r] for r in rids], eng
+
+    (a0, a1), eng = run()
+    (b0, b1), _ = run()
+    assert eng.scheduler.prefill_preemptions >= 1   # really hit mid-prefill
+    assert eng.scheduler.wasted_prefill_tokens > 0
+    assert eng.pool.used_pages == 0
+    np.testing.assert_array_equal(a0, b0)           # deterministic
+    np.testing.assert_array_equal(a1, b1)
+    static = ServeEngine(CFG, params, max_len=48, quantized_kv=True)
+    np.testing.assert_array_equal(
+        a0, static.generate(jnp.asarray(p0)[None], steps=20)[0])
+    np.testing.assert_array_equal(
+        a1, static.generate(jnp.asarray(p1)[None], steps=4)[0])
+
+
+def test_chunked_prefill_pages_context():
+    """prefill_context='pages' re-reads the prefix from its posit8 pages
+    (zero extra residency): deterministic, drains the pool, and stays
+    within quantization error of the exact carry path -- and the fused
+    paged-prefill kernel (decode_impl='flash', interpret on CPU)
+    reproduces the XLA fallback's tokens."""
+    params = _params()
+    reqs = [(RNG.integers(0, CFG.vocab, (33,)).astype(np.int32), 6),
+            (RNG.integers(0, CFG.vocab, (7,)).astype(np.int32), 8)]
+
+    def run(ctx, cfg=CFG):
+        eng = ContinuousEngine(cfg, params, n_pages=12, page_size=16,
+                               max_batch=2, max_len=48,
+                               prefill_chunk_tokens=16,
+                               prefill_context=ctx)
+        rids = [eng.submit(p, g) for p, g in reqs]
+        out = eng.run()
+        assert eng.pool.used_pages == 0
+        return [out[r] for r in rids]
+
+    pages = run("pages")
+    for a, b in zip(pages, run("pages")):            # deterministic
+        np.testing.assert_array_equal(a, b)
+    carry = run("carry")
+    for (p, _), a, b in zip(reqs, pages, carry):
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(a[:p.size], b[:p.size])  # prompt kept
+    # the dequantized context may flip a greedy argmax (after which the
+    # streams legitimately diverge), but most tokens still agree
+    agree = sum(int((a == b).sum()) for a, b in zip(pages, carry))
+    total = sum(a.size for a in pages)
+    assert agree / total > 0.7, (agree, total)
+    flash_cfg = dataclasses.replace(CFG, decode_impl="flash")
+    for a, b in zip(pages, run("pages", flash_cfg)):
         np.testing.assert_array_equal(a, b)
 
 

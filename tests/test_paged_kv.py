@@ -9,7 +9,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.kernels import ref
-from repro.kernels.flash_decode import paged_flash_decode_pallas
+from repro.kernels.flash_decode import (paged_flash_decode_pallas,
+                                        paged_flash_prefill_pallas)
 from repro.models import attention as A
 from repro.models import transformer as T
 from repro.serve import PagedKVPool, ServeEngine, paged_kv_bytes_per_step
@@ -100,6 +101,49 @@ def test_paged_matches_contiguous_bitwise():
 
 
 # ---------------------------------------------------------------------------
+# paged chunk-PREFILL kernel / fallback vs the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("start", [[0, 0, 0], [16, 0, 32], [32, 16, 48]])
+@pytest.mark.parametrize("softcap", [0.0, 20.0])
+@pytest.mark.parametrize("group", [None, 8])
+def test_paged_prefill_kernel_vs_oracle(start, softcap, group):
+    """The paged chunk-prefill kernel (interpret on CPU) and the XLA
+    fallback both reproduce the gather-then-causal-softmax oracle for
+    chunks starting anywhere in the page table."""
+    cache, pt = _paged_setup(group=group)
+    c = 16
+    q = jnp.asarray(RNG.normal(size=(3, c, 2, 2, 32)).astype(np.float32))
+    st = jnp.asarray(start, jnp.int32)
+    want = ref.paged_prefill_ref(
+        q, cache["k_codes"], cache["k_scale"], cache["v_codes"],
+        cache["v_scale"], pt, st, softcap)
+    got = paged_flash_prefill_pallas(
+        q, cache["k_codes"], cache["k_scale"], cache["v_codes"],
+        cache["v_scale"], pt, st, softcap=softcap, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    blocked = jax.jit(A.paged_prefill_blocked,
+                      static_argnames=("softcap",))(
+        q, cache, pt, st, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_prefill_chunk_rows_match_decode():
+    """A chunk row at position p computes the same attention as a
+    single decoded query at position p (the C=1 degenerate case closes
+    the loop between the prefill and decode paged paths)."""
+    cache, pt = _paged_setup()
+    q = jnp.asarray(RNG.normal(size=(3, 1, 2, 2, 32)).astype(np.float32))
+    pos = jnp.asarray([5, 33, 60], jnp.int32)
+    chunk = A.paged_prefill_blocked(q, cache, pt, pos)          # C=1
+    dec = A.paged_decode_blocked(q[:, 0], cache, pt, pos)
+    np.testing.assert_allclose(np.asarray(chunk[:, 0]), np.asarray(dec),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # pool bookkeeping
 # ---------------------------------------------------------------------------
 
@@ -147,6 +191,84 @@ def test_pool_prefill_roundtrip():
     for key in cache_q:
         np.testing.assert_array_equal(np.asarray(back[key]),
                                       np.asarray(cache_q[key]))
+
+
+def test_pool_free_guard_stays_consistent_under_churn():
+    """Alloc/free churn against a shadow model: the allocated-page set
+    (the O(1) replacement of the old O(P) ``pg not in free`` scan) and
+    the free list must partition the pool at every step, and the
+    double-free guard must keep firing."""
+    pool = PagedKVPool(CFG, n_pages=128, page_size=16)
+    rng = np.random.default_rng(7)
+    held = []
+    for _ in range(300):
+        if held and rng.random() < 0.45:
+            pages = held.pop(rng.integers(0, len(held)))
+            pool.free(pages)
+        else:
+            got = pool.alloc(int(rng.integers(1, 9)))
+            if got is not None:
+                held.append(got)
+        live = [pg for pages in held for pg in pages]
+        assert len(live) == len(set(live)) == pool.used_pages
+        assert pool.free_pages + pool.used_pages == pool.n_pages
+        assert set(live) == pool._allocated
+    for pages in held:
+        pool.free(pages)
+    assert pool.used_pages == 0
+    got = pool.alloc(2)
+    with pytest.raises(AssertionError):
+        pool.free([got[0], got[0]])              # double free still fires
+
+
+def _random_cache_q(L, s, kh, dh):
+    out = {}
+    for key, cols in (("k_codes", dh), ("v_codes", dh),
+                      ("k_scale", 1), ("v_scale", 1)):
+        x = RNG.integers(0, 255, (L, 1, s, kh, cols))
+        out[key] = (jnp.asarray(x).astype(jnp.uint8) if "codes" in key
+                    else jnp.asarray(x).astype(jnp.bfloat16))
+    return out
+
+
+def test_write_chunk_matches_write_prefill():
+    """Writing a prefill chunk by chunk (the chunked-prefill data path)
+    lands bit-identical pool state to one whole-prefix write_prefill."""
+    L, kh, dh = CFG.n_layers, CFG.n_kv_heads, CFG.resolved_head_dim
+    cache_q = _random_cache_q(L, 32, kh, dh)
+    whole = PagedKVPool(CFG, n_pages=6, page_size=8)
+    pages = whole.alloc(4)
+    whole.write_prefill(cache_q, pages)
+    chunked = PagedKVPool(CFG, n_pages=6, page_size=8)
+    pages_c = chunked.alloc(4)
+    assert pages_c == pages                      # same LIFO order
+    for start in (0, 16):                        # two 16-token chunks
+        chunk = {k: v[:, :, start:start + 16] for k, v in cache_q.items()}
+        chunked.write_chunk(chunk, pages_c, start)
+    for key in cache_q:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(whole, key)), np.asarray(getattr(chunked, key)))
+
+
+def test_write_chunk_drops_pad_pages_past_allocation():
+    """A final chunk padded past the live prefix only writes the pages
+    the request owns; the pad blocks are dropped, not scattered into
+    somebody else's pages."""
+    L, kh, dh = CFG.n_layers, CFG.n_kv_heads, CFG.resolved_head_dim
+    pool = PagedKVPool(CFG, n_pages=6, page_size=8)
+    other = pool.alloc(3)                        # a neighbor's pages
+    mine = pool.alloc(2)
+    before = {k: np.asarray(getattr(pool, k)) for k in
+              ("k_codes", "v_codes", "k_scale", "v_scale")}
+    chunk = _random_cache_q(L, 16, kh, dh)       # 2 blocks...
+    pool.write_chunk(chunk, mine, 8)             # ...but only 1 page left
+    for key in before:
+        now = np.asarray(getattr(pool, key))
+        np.testing.assert_array_equal(            # the owned page got data
+            now[:, mine[1]], np.asarray(chunk[key][:, 0, :8]))
+        np.testing.assert_array_equal(            # nobody else was touched
+            now[:, other], before[key][:, other])
+        np.testing.assert_array_equal(now[:, 0], before[key][:, 0])
 
 
 def test_paged_kv_bytes_scale_with_live_pages():

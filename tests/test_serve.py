@@ -90,3 +90,32 @@ def test_engine_packed_policy():
     toks = jnp.zeros((1, 4), jnp.int32)
     out = eng.generate(toks, steps=3)
     assert out.shape == (1, 7)
+
+
+def test_pad_cache_pads_scales_with_one():
+    """_pad_cache must pad k_scale/v_scale with the neutral scale 1.0
+    (the paged pool's convention), not jnp.pad's default 0.0: a zero
+    po2 scale silently dequantizes any code written into a padded slot
+    to 0, and only the positional mask was hiding it."""
+    params = _params()
+    eng = ServeEngine(CFG, params, max_len=32, quantized_kv=True)
+    cache = T.init_cache(CFG, 2, 12, quantized_kv=True)
+    padded = eng._pad_cache(cache, 2)
+
+    def leaves(node, path=""):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                yield from leaves(v, k)
+        else:
+            yield path, node
+
+    seen_scale = 0
+    for key, x in leaves(padded):
+        if key in ("k_scale", "v_scale"):
+            assert x.shape[2] == 32
+            tail = np.asarray(x[:, :, 12:], np.float32)
+            np.testing.assert_array_equal(tail, np.ones_like(tail))
+            seen_scale += 1
+        elif key in ("k_codes", "v_codes"):
+            assert not np.asarray(x[:, :, 12:]).any()
+    assert seen_scale == 2
