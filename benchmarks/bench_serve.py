@@ -26,7 +26,14 @@ reports:
     chunked prefill (every step pays at most one chunk).  Chunked p99
     must come in below monolithic AND both engines' temperature-0
     outputs must match per-request static ``ServeEngine.generate``
-    token for token (asserted -- the chunked-prefill acceptance claim).
+    token for token (asserted -- the chunked-prefill acceptance claim);
+  * PREFIX CACHING shared-preamble arrivals: every request opens with
+    the same scene preamble (the XR traffic shape); prefill tokens
+    computed and time-to-first-token p50/p99 with the copy-on-write
+    prefix cache on vs off.  Asserted: temperature-0 outputs match the
+    cache-off engine token for token, and requests after the first
+    sharer re-prefill at most HALF their prompt (>= 2x fewer prefill
+    tokens -- the prefix-caching acceptance claim).
 
 Results go to stdout as the usual ``name,us_per_call,derived`` CSV and
 to BENCH_serve.json at the repo root (CI refreshes it via ``--smoke``).
@@ -72,10 +79,13 @@ def _serve_continuous(cfg, params, trace, n_pages, page_size, max_batch,
     eng = ContinuousEngine(cfg, params, n_pages=n_pages,
                            page_size=page_size, max_batch=max_batch,
                            max_len=max_len)
-    # warm the jits (prefill bucket + decode step) off the clock
+    # warm the jits (prefill bucket + decode step) off the clock, then
+    # RESET the counters: the warm request's pages/steps/preemptions
+    # used to leak into the reported peak_pages / engine_steps baseline
     warm = eng.submit(trace[0][1], 2)
     eng.run()
     eng.scheduler.finished.pop(warm)
+    eng.reset_counters()
 
     pending = sorted(trace, key=lambda t: t[0])
     arrive, finish = {}, {}
@@ -83,6 +93,7 @@ def _serve_continuous(cfg, params, trace, n_pages, page_size, max_batch,
     t0 = time.perf_counter()
     rids = {}
     i = 0
+    n_retired = 0
     while pending or eng.scheduler.has_work:
         while pending and pending[0][0] <= i:
             _, prompt, gen = pending.pop(0)
@@ -94,8 +105,12 @@ def _serve_continuous(cfg, params, trace, n_pages, page_size, max_batch,
         # including requests that retired within the step
         positions_per_step.append(list(eng.last_positions))
         util.append(eng.pool.utilization)
-        for rid_, req in eng.scheduler.finished.items():
-            finish.setdefault(rid_, time.perf_counter())
+        # only the rids retired THIS step (the old finished-dict rescan
+        # re-stamped every finished request every step: O(n^2))
+        log = eng.scheduler.retired_log
+        for rid_ in log[n_retired:]:
+            finish[rid_] = time.perf_counter()
+        n_retired = len(log)
         i += 1
     dt = time.perf_counter() - t0
     toks = sum(len(eng.scheduler.finished[r].generated) for r in rids)
@@ -155,6 +170,79 @@ def _serve_long_prompt(cfg, params, page_size, max_len, chunk):
     p99 = float(np.percentile(med, 99))
     outs = {r: eng.scheduler.finished[r].output for r in rids}
     return rids, outs, p99
+
+
+def _preamble_trace(cfg, rng, n_req, pre_tokens, arrival_gap):
+    """(arrival_step, prompt, gen) per request: every prompt opens with
+    the SAME ``pre_tokens``-long preamble (the XR scene/system prompt
+    ahead of every VIO / gaze query) followed by a short unique tail.
+    ``arrival_gap`` steps separate arrivals -- at least the first
+    sharer's chunked-prefill step count, so its preamble pages are
+    published before the next request is admitted and every request
+    after the first is a cache hit."""
+    pre = rng.integers(0, cfg.vocab, (pre_tokens,)).astype(np.int32)
+    out = []
+    for i in range(n_req):
+        tail = rng.integers(0, cfg.vocab,
+                            (int(rng.integers(2, 6)),)).astype(np.int32)
+        out.append((i * arrival_gap, np.concatenate([pre, tail]),
+                    int(rng.integers(4, 10))))
+    return out
+
+
+def _serve_shared_preamble(cfg, params, trace, n_pages, page_size,
+                           max_batch, max_len, prefix_cache):
+    """Serve the shared-preamble trace; returns per-rid outputs + stats.
+
+    BOTH the cache-on and the cache-off engine run
+    ``prefill_context='pages'``: a hit's remaining chunks attend to the
+    preamble through the same posit8 page reads a cold run performs,
+    and the shared pages hold bitwise the codes the cold run would have
+    written -- that is what makes temperature-0 parity exact."""
+    eng = ContinuousEngine(cfg, params, n_pages=n_pages,
+                           page_size=page_size, max_batch=max_batch,
+                           max_len=max_len, prefill_chunk_tokens=page_size,
+                           prefill_context="pages",
+                           prefix_cache=prefix_cache)
+    # warm the jits with a SUB-PAGE prompt: it completes no whole prompt
+    # page, so the warm request seeds no reusable prefix either way
+    warm = eng.submit(trace[0][1][:3], 2)
+    eng.run()
+    eng.scheduler.finished.pop(warm)
+    eng.reset_counters()
+
+    pending = sorted(trace, key=lambda t: t[0])
+    arrive, first_tok, rids = {}, {}, {}
+    i = n_retired = 0
+    while pending or eng.scheduler.has_work:
+        while pending and pending[0][0] <= i:
+            _, prompt, gen = pending.pop(0)
+            rid = eng.submit(prompt, gen)
+            rids[rid] = (prompt, gen)
+            arrive[rid] = time.perf_counter()
+        eng.step()
+        now = time.perf_counter()
+        for req in eng.scheduler.running:
+            if req.generated and req.rid not in first_tok:
+                first_tok[req.rid] = now
+        log = eng.scheduler.retired_log
+        for rid_ in log[n_retired:]:
+            first_tok.setdefault(rid_, now)
+        n_retired = len(log)
+        i += 1
+    ttft = np.asarray([first_tok[r] - arrive[r] for r in rids]) * 1e3
+    sched = eng.scheduler
+    outs = {r: sched.finished[r].output for r in rids}
+    return outs, dict(
+        engine_steps=i,
+        prefill_tokens_computed=eng.prefill_tokens_computed,
+        prefix_hits=sched.prefix.hits if sched.prefix else 0,
+        prefix_hit_tokens=sched.prefix.hit_tokens if sched.prefix else 0,
+        ttft_p50_ms=float(np.percentile(ttft, 50)),
+        ttft_p99_ms=float(np.percentile(ttft, 99)),
+        peak_pages=eng.pool.alloc_peak,
+        preemptions=sched.preemption_count,
+    )
 
 
 def _serve_static(cfg, params, trace, max_len):
@@ -285,6 +373,62 @@ def run(smoke: bool = False) -> None:
          f"chunked_p99_ms={p99_chunk:.2f};mono_p99_ms={p99_mono:.2f};"
          f"stall_reduction={p99_mono / max(p99_chunk, 1e-9):.2f}x;"
          f"static_parity=1")
+
+    # --- prefix caching: shared-preamble arrivals, cache on vs off
+    pre_pages = 2
+    pre_trace = _preamble_trace(cfg, np.random.default_rng(5), 6,
+                                pre_pages * page_size,
+                                arrival_gap=pre_pages + 1)
+    outs_off, off = _serve_shared_preamble(
+        cfg, params, pre_trace, 32, page_size, 4, max_len,
+        prefix_cache=False)
+    outs_on, on = _serve_shared_preamble(
+        cfg, params, pre_trace, 32, page_size, 4, max_len,
+        prefix_cache=True)
+    for rid in outs_off:
+        assert np.array_equal(outs_on[rid], outs_off[rid]), (
+            "prefix-cache hits must stay token-for-token identical to "
+            f"the cache-off engine (rid {rid}): the shared pages hold "
+            "bitwise the codes a cold prefill writes")
+    # hits/hit_tokens count per ADMISSION; the pool is sized so nothing
+    # is preempted and the counters map 1:1 onto requests -- keep that
+    # explicit or the arithmetic below silently changes meaning
+    assert on["preemptions"] == 0 and off["preemptions"] == 0, (on, off)
+    assert on["prefix_hits"] == len(pre_trace) - 1, on
+    # every request AFTER the first sharer must re-prefill at most half
+    # its prompt (it skips the matched preamble pages)
+    later_prompt = sum(t[1].size for t in pre_trace[1:])
+    later_computed = later_prompt - on["prefix_hit_tokens"]
+    assert later_prompt >= 2 * later_computed, (
+        "prefix caching must at least halve the prefill tokens of "
+        f"requests after the first sharer ({later_computed} computed "
+        f"of {later_prompt})")
+    results["prefix_cache"] = {
+        "preamble_tokens": pre_pages * page_size,
+        "n_req": len(pre_trace),
+        "prefill_tokens_computed_off": off["prefill_tokens_computed"],
+        "prefill_tokens_computed_on": on["prefill_tokens_computed"],
+        "prefill_tokens_saved": on["prefix_hit_tokens"],
+        "later_req_prefill_reduction":
+            later_prompt / max(later_computed, 1),
+        "prefix_hits": on["prefix_hits"],
+        "ttft_p50_ms_off": off["ttft_p50_ms"],
+        "ttft_p50_ms_on": on["ttft_p50_ms"],
+        "ttft_p99_ms_off": off["ttft_p99_ms"],
+        "ttft_p99_ms_on": on["ttft_p99_ms"],
+        "parity": True,
+    }
+    emit("serve/prefix_cache_ttft_p50", on["ttft_p50_ms"] * 1e3,
+         f"on_p50_ms={on['ttft_p50_ms']:.2f};"
+         f"off_p50_ms={off['ttft_p50_ms']:.2f};"
+         f"on_p99_ms={on['ttft_p99_ms']:.2f};"
+         f"off_p99_ms={off['ttft_p99_ms']:.2f}")
+    emit("serve/prefix_cache_prefill_tokens", 0.0,
+         f"computed_on={on['prefill_tokens_computed']};"
+         f"computed_off={off['prefill_tokens_computed']};"
+         f"saved={on['prefix_hit_tokens']};"
+         f"later_req_reduction="
+         f"{later_prompt / max(later_computed, 1):.1f}x;parity=1")
 
     # --- slot waste: reserved slots vs live tokens
     reserved = bsz * max_len

@@ -9,10 +9,13 @@ FIFO admission against a page pool, one batched decode step for all
 live requests (see serve/__init__ for the page-table layout).
 ``--prefill-chunk N`` turns on chunked paged prefill: one step pays at
 most N prefill tokens, so a long prompt no longer stalls the running
-decode batch for a full prefill.
+decode batch for a full prefill.  ``--prefix-cache`` shares the request
+mix's common preamble through the pool's copy-on-write prefix cache:
+every request after the first sharer skips re-prefilling the matched
+whole pages.
 
   ... --continuous --batch 8 --n-pages 48 [--page-size 16]
-      [--prefill-chunk 16]
+      [--prefill-chunk 16] [--prefix-cache]
 """
 
 from __future__ import annotations
@@ -49,24 +52,46 @@ def _continuous(args, cfg, params, policy) -> None:
     rng = np.random.default_rng(0)
     max_len = args.prompt_len + args.steps + 8
     page_size = args.page_size
-    if args.prefill_chunk:
-        if max_len % args.prefill_chunk:
-            # chunk | max_len is the page-table contract; round up
-            max_len += args.prefill_chunk - max_len % args.prefill_chunk
+    if args.prefill_chunk and page_size is None:
+        page_size = args.prefill_chunk       # chunk == k * page, k = 1
+    if args.prefix_cache:
+        # the shared preamble rides ON TOP of the nominal prompt
+        # length: size the page table for it too, or the longest
+        # requests would have no token budget left
         if page_size is None:
-            page_size = args.prefill_chunk   # chunk == k * page, k = 1
+            from ..kernels.flash_decode import default_kv_block
+            page_size = default_kv_block(max_len)
+        max_len += page_size
+    if args.prefill_chunk and max_len % args.prefill_chunk:
+        # chunk | max_len is the page-table contract; round up
+        max_len += args.prefill_chunk - max_len % args.prefill_chunk
+    if page_size is not None and max_len % page_size:
+        # the page table maps whole pages; round up exactly like the
+        # chunk branch (an explicit --page-size used to crash the
+        # engine's divisibility check here)
+        max_len += page_size - max_len % page_size
     eng = ContinuousEngine(
         cfg, params, n_pages=args.n_pages, page_size=page_size,
         max_batch=args.batch, max_len=max_len, policy=policy,
         temperature=args.temperature,
-        prefill_chunk_tokens=args.prefill_chunk)
-    # ragged request mix around the CLI's nominal prompt/step counts
+        prefill_chunk_tokens=args.prefill_chunk,
+        prefix_cache=args.prefix_cache)
+    # ragged request mix around the CLI's nominal prompt/step counts;
+    # under --prefix-cache every prompt opens with one shared page-sized
+    # preamble (the XR scene/system prompt ahead of every query), so
+    # request 2.. re-prefills only its unique tail
+    preamble = rng.integers(0, cfg.vocab, (eng.pool.page_size,)) \
+        if args.prefix_cache else None
     n_req = 2 * args.batch
     rids = []
     for i in range(n_req):
         plen = max(1, args.prompt_len - int(rng.integers(0, 4)))
         steps = max(1, args.steps - int(rng.integers(0, args.steps // 2 + 1)))
-        rids.append(eng.submit(rng.integers(0, cfg.vocab, (plen,)), steps))
+        prompt = rng.integers(0, cfg.vocab, (plen,))
+        if preamble is not None:
+            prompt = np.concatenate([preamble, prompt])
+            steps = max(1, min(steps, max_len - prompt.size))
+        rids.append(eng.submit(prompt, steps))
     t0 = time.time()
     out = eng.run()
     dt = time.time() - t0
@@ -79,7 +104,13 @@ def _continuous(args, cfg, params, policy) -> None:
           f"(mid-prefill {eng.scheduler.prefill_preemptions}, "
           f"wasted prefill tokens {eng.scheduler.wasted_prefill_tokens})")
     print(f"prefill: "
-          f"{'chunked, %d tokens/step' % eng.prefill_chunk_tokens if eng.prefill_chunk_tokens else 'monolithic'}")
+          f"{'chunked, %d tokens/step' % eng.prefill_chunk_tokens if eng.prefill_chunk_tokens else 'monolithic'}, "
+          f"{eng.prefill_tokens_computed} tokens computed")
+    if args.prefix_cache:
+        px = eng.scheduler.prefix
+        print(f"prefix cache: {px.hits} hits, {px.hit_tokens} prefill "
+              f"tokens served from shared pages, {len(px)} pages cached, "
+              f"{px.evictions} evictions")
     for r in rids[:2]:
         print(f"  req {r}: {np.asarray(eng.scheduler.finished[r].generated)}")
 
@@ -104,6 +135,10 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked paged prefill: max prefill tokens one "
                          "engine step may process (default: monolithic)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share whole common-preamble pages between "
+                         "requests (copy-on-write prefix caching); the "
+                         "demo mix gets a one-page shared preamble")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -49,10 +49,27 @@ prefill wasted, every step, while pool pressure lasted.  The token
 budget bounds p99 decode-step latency by the chunk, not the longest
 prompt: a long-prompt arrival costs a chain of chunk steps interleaved
 with decode instead of one monolithic stall.
+
+Prefix caching (copy-on-write)
+------------------------------
+``ContinuousEngine(prefix_cache=True)``: whole prompt-prefix pages of
+completed prefills are published in the scheduler's ``PrefixIndex``
+(a digest chain over whole-page token blocks, verified against the
+exact stored block so collisions degrade to misses) and SHARED
+read-only with later requests whose prompt opens with the same blocks.
+The pool counts holders per page (``free`` is a decref), admission
+budgets -- and prefill computes -- only the NEW pages a hit still
+needs, and when the free list runs dry, unreferenced cached pages are
+evicted LRU (leaf-first) before anyone is preempted.  Hits force
+``prefill_context="pages"`` so the remaining chunks attend to the
+prefix through the same posit8 page reads a cold run performs; the
+shared pages hold bitwise the codes that cold run would write, so
+temperature-0 outputs match a cache-off engine token for token.  See
+``serve/paged_kv.py`` for the share/refcount/copy-on-write contract.
 """
 
 from .engine import (ServeEngine, ContinuousEngine,  # noqa: F401
                      build_prefill_step, build_prefill_chunk_step,
                      build_serve_step)
 from .paged_kv import PagedKVPool, paged_kv_bytes_per_step  # noqa: F401
-from .scheduler import Request, Scheduler  # noqa: F401
+from .scheduler import PrefixIndex, Request, Scheduler  # noqa: F401

@@ -275,6 +275,22 @@ class ContinuousEngine:
         context is dequantized, so prompt logits carry quantization
         error and exact static parity is not guaranteed.
 
+    Prefix caching (``prefix_cache=True``): whole prompt-prefix pages
+    of completed prefills stay cached in the scheduler's
+    ``PrefixIndex`` after retirement; a later request whose prompt
+    starts with the same token blocks attaches them READ-ONLY and its
+    chunk cursor starts past the match, so it computes -- and the
+    admission gate budgets -- only the new pages (see the share/
+    copy-on-write contract in ``serve/paged_kv.py``).  This implies
+    ``prefill_context="pages"`` (the default under prefix caching):
+    the remaining chunks must attend to the prefix THROUGH the shared
+    posit8 pages, which hold bitwise the codes a cold run would write
+    -- so temperature-0 outputs match a cache-off engine (also on the
+    pages context) token for token.  The bf16 carry context cannot
+    reproduce a prefix this request never forwarded, so
+    ``prefill_context="carry"`` with ``prefix_cache=True`` is
+    rejected.
+
     The KV plane is ALWAYS the posit8 paged pool (that is the point);
     weights pack per ``policy`` exactly like the static engine.  At
     temperature 0 with ``page_size == default_kv_block(max_len)`` of a
@@ -296,7 +312,11 @@ class ContinuousEngine:
     eos_id: Optional[int] = None
     seed: int = 0
     prefill_chunk_tokens: Optional[int] = None
-    prefill_context: str = "carry"
+    # None resolves to "carry" (bitwise static parity), or to "pages"
+    # under prefix_cache (shared pages are only readable through the
+    # page table)
+    prefill_context: Optional[str] = None
+    prefix_cache: bool = False
 
     def __post_init__(self):
         from ..kernels.flash_decode import default_kv_block
@@ -312,8 +332,15 @@ class ContinuousEngine:
         kv_group = self.policy.group_size if self.policy else None
         if self.page_size is None:
             self.page_size = default_kv_block(self.max_len)
-        assert self.max_len % self.page_size == 0, \
-            (self.max_len, self.page_size)
+        if self.max_len % self.page_size:
+            rounded = -(-self.max_len // self.page_size) * self.page_size
+            raise ValueError(
+                f"max_len={self.max_len} must be a multiple of "
+                f"page_size={self.page_size}: the page-table row maps "
+                f"whole pages, so a partial final page cannot be "
+                f"addressed -- round max_len up to {rounded} (what "
+                f"launch/serve.py does) or pick a page size that "
+                f"divides it")
         self.max_pages_per_req = self.max_len // self.page_size
         if self.prefill_chunk_tokens is not None:
             c = self.prefill_chunk_tokens
@@ -323,10 +350,21 @@ class ContinuousEngine:
                     f"multiple of page_size={self.page_size} that "
                     f"divides max_len={self.max_len} (the chunk/page "
                     f"contract of serve/paged_kv.py)")
+        if self.prefill_context is None:
+            self.prefill_context = "pages" if self.prefix_cache else "carry"
         if self.prefill_context not in ("carry", "pages"):
             raise ValueError(self.prefill_context)
+        if self.prefix_cache and self.prefill_context == "carry":
+            raise ValueError(
+                "prefix_cache shares posit8 pages a hit request never "
+                "forwarded itself, so its chunks can only attend to the "
+                "prefix THROUGH the page table: use "
+                "prefill_context='pages' (the default when prefix_cache "
+                "is set)")
         pool = PagedKVPool(self.cfg, self.n_pages, self.page_size, kv_group)
-        self.scheduler = Scheduler(pool, self.max_batch)
+        self.scheduler = Scheduler(pool, self.max_batch,
+                                   max_pages_per_req=self.max_pages_per_req,
+                                   prefix_cache=self.prefix_cache)
         # chunk prefill steps: FULL chunk logits (the request's last real
         # token may sit anywhere inside the final chunk)
         self._chunk_step = jax.jit(
@@ -348,6 +386,8 @@ class ContinuousEngine:
         self._step = jax.jit(step, donate_argnums=(2,))
         self._key = jax.random.PRNGKey(self.seed)
         self.steps_run = 0
+        self.prefill_tokens_computed = 0     # real tokens forwarded (cache
+        #                                      hits skip their matched prefix)
         # positions the LAST decode step actually served (requests that
         # retired within the step included) -- the per-step KV-traffic
         # ground truth benchmarks read; [] when the step decoded nothing
@@ -365,12 +405,9 @@ class ContinuousEngine:
     def submit(self, prompt, max_new_tokens: int,
                eos_id: Optional[int] = None) -> int:
         """Queue one request; returns its id.  Total length must fit the
-        per-request page-table width (``max_len`` slots)."""
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
-        total = prompt.size + int(max_new_tokens)
-        if total > self.max_len:
-            raise ValueError(f"prompt+new = {total} exceeds "
-                             f"max_len={self.max_len}")
+        per-request page-table width (``max_len`` slots) -- validated by
+        the scheduler, which knows the row width, so a direct scheduler
+        user gets the same rejection at the same point."""
         return self.scheduler.submit(
             prompt, max_new_tokens,
             eos_id if eos_id is not None else self.eos_id)
@@ -406,9 +443,13 @@ class ContinuousEngine:
         sched = self.scheduler
         prefix = req.prefix
         ln = prefix.size
+        # the cursor starts past the matched shared pages of a prefix-
+        # cache hit (page-aligned by construction), so a hit computes
+        # only its un-cached remainder
         start = req.prefilled
         if self.prefill_chunk_tokens is None:
-            c = self.pool.pages_for(ln) * self.page_size   # monolithic
+            # monolithic: one chunk covering every remaining page slot
+            c = self.pool.pages_for(ln) * self.page_size - start
         else:
             c = self.prefill_chunk_tokens
         real = min(c, ln - start)
@@ -440,6 +481,7 @@ class ContinuousEngine:
                     "k": jnp.concatenate([ctx["k"], kv["k"]], axis=2),
                     "v": jnp.concatenate([ctx["v"], kv["v"]], axis=2)}
         req.prefilled = start + real
+        self.prefill_tokens_computed += real
         if req.prefilled == ln:
             self._prefill_ctx.pop(req.rid, None)
             nxt = self._sample(np.asarray(logits[0, real - 1]))
@@ -520,6 +562,27 @@ class ContinuousEngine:
                 sched.retire(req)
         self.steps_run += 1
         return len(running)
+
+    # -- counters -----------------------------------------------------------
+
+    def reset_counters(self) -> None:
+        """Zero every run counter (bench warm-up hygiene: a warm request
+        must not leak its pages/steps/preemptions into the measured
+        run).  The pool's CURRENT allocation -- e.g. prefix pages the
+        warm-up left cached -- becomes the new peak baseline."""
+        self.steps_run = 0
+        self.prefill_tokens_computed = 0
+        self.pool.alloc_peak = self.pool.used_pages
+        sched = self.scheduler
+        sched.preemption_count = 0
+        sched.prefill_preemptions = 0
+        sched.wasted_prefill_tokens = 0
+        sched.preempted_log.clear()
+        sched.retired_log.clear()
+        if sched.prefix is not None:
+            sched.prefix.hits = 0
+            sched.prefix.hit_tokens = 0
+            sched.prefix.evictions = 0
 
     # -- drive to completion ------------------------------------------------
 

@@ -42,6 +42,30 @@ of a ``max_len``-long prefix never indexes past the page table.  The
 final chunk of a prefix may cover fewer real tokens than ``chunk``;
 its pad slots scatter garbage that decode never reads (the live mask
 is positional), exactly like the monolithic prefill bucket did.
+
+Share / refcount / copy-on-write contract (prefix caching)
+----------------------------------------------------------
+A page may appear in MORE than one request's page table: the
+scheduler's prefix index shares whole PROMPT-prefix pages between
+requests with a common preamble.  The pool therefore counts references
+per page -- ``alloc`` hands out pages at refcount 1, ``incref`` adds a
+holder (a sharing request, or the prefix index itself), and ``free`` is
+a DECREF: a page only returns to the free list when its last holder
+drops it.  The old ``_allocated``-set invariants become refcount
+invariants -- ``_allocated`` is exactly the pages with refcount >= 1,
+and decref of an unallocated page is the double-free bug it always was.
+
+The copy-on-write discipline is that only whole prompt-prefix pages
+are ever shared, and shared pages are READ-ONLY by construction rather
+than by trap: the prefix match is capped so the page holding the
+prompt's LAST token is always recomputed privately, a hit request's
+chunk cursor starts past the matched pages (so the chunk-prefill
+scatter of ``attention._attn_prefill_paged`` / ``write_chunk`` only
+ever lands in its private pages), and the decode scatter of
+``attention._attn_decode_paged`` writes at ``position >= len(prompt)``
+-- past every shared slot.  No write path can reach a shared page, so
+sharing needs no copy and the pages reproduce the cold path's KV
+bitwise (same tokens, same params, same chunk computation).
 """
 
 from __future__ import annotations
@@ -104,10 +128,13 @@ class PagedKVPool:
         self.k_scale = jnp.ones(scale_shape, jnp.bfloat16)
         self.v_scale = jnp.ones(scale_shape, jnp.bfloat16)
         # LIFO free list: recently-freed pages are re-used first.  The
-        # allocated-page set mirrors it so alloc/free can assert their
+        # refcount map mirrors it so alloc/free can assert their
         # invariants in O(1) per page (the old ``pg not in self._free``
-        # guard was a linear scan -- O(P^2) to retire a long request).
+        # guard was a linear scan -- O(P^2) to retire a long request);
+        # ``_allocated`` == the pages with refcount >= 1 (prefix-shared
+        # pages carry one count per holder, see the module contract).
         self._free: List[int] = list(range(P - 1, 0, -1))
+        self._ref: Dict[int, int] = {}
         self._allocated: set = set()
         self.alloc_peak = 0
 
@@ -132,23 +159,42 @@ class PagedKVPool:
     # -- alloc / free -------------------------------------------------------
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` pages off the free list; None (and no change) if the
-        pool cannot satisfy the request."""
+        """Pop ``n`` pages off the free list at refcount 1; None (and no
+        change) if the pool cannot satisfy the request."""
         if n > len(self._free):
             return None
         got = [self._free.pop() for _ in range(n)]
         for pg in got:
             assert pg not in self._allocated, f"page {pg} double-allocated"
             self._allocated.add(pg)
+            self._ref[pg] = 1
         self.alloc_peak = max(self.alloc_peak, self.used_pages)
         return got
 
+    def incref(self, pages: List[int]) -> None:
+        """Add one holder to already-allocated pages (prefix sharing:
+        a request attaching cached prompt-prefix pages, or the prefix
+        index registering a freshly prefilled prefix)."""
+        for pg in pages:
+            assert pg in self._allocated, f"incref of unallocated page {pg}"
+            self._ref[pg] += 1
+
     def free(self, pages: List[int]) -> None:
+        """Drop ONE reference per page; a page returns to the free list
+        only when its last holder lets go (decref -- the refcount form
+        of the old free, which is the refcount == 1 special case)."""
         for pg in pages:
             assert 0 < pg <= self.n_pages, pg
             assert pg in self._allocated, f"double free of page {pg}"
-            self._allocated.remove(pg)
-            self._free.append(pg)
+            self._ref[pg] -= 1
+            if self._ref[pg] == 0:
+                del self._ref[pg]
+                self._allocated.remove(pg)
+                self._free.append(pg)
+
+    def refcount(self, pg: int) -> int:
+        """Current holder count of a page (0 = free)."""
+        return self._ref.get(pg, 0)
 
     # -- device state -------------------------------------------------------
 

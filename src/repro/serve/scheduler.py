@@ -40,19 +40,34 @@ the last free page, ``ensure_capacity`` then preempted it as the
 youngest victim, and its entire prefill was thrown away -- every step,
 for as long as the pressure lasted.  ``wasted_prefill_tokens`` counts
 the prefill work preemption discards, so that regression is measurable.
+
+PREFIX CACHING (``Scheduler(prefix_cache=True)``): whole prompt-prefix
+pages of completed prefills are registered in a page-aligned
+``PrefixIndex`` and SHARED with later requests whose prompt starts with
+the same token blocks (XR traffic repeats the same scene/system
+preamble ahead of every query).  On admission the queue head's prompt
+is matched block by block against the index; matched pages attach to
+the request read-only (``PagedKVPool.incref``) and its chunk cursor
+starts past them, so admission budgets -- and prefill computes -- only
+the NEW pages the request still needs.  Retiring decrefs shared pages
+back to the index's own reference; when the free list runs dry,
+unreferenced cached pages are evicted LRU (leaf-first along the prefix
+chains) BEFORE any request is preempted.  See ``serve/paged_kv.py`` for
+the refcount / copy-on-write contract that keeps shared pages
+read-only.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Deque, Dict, List, Optional
+from collections import OrderedDict, deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .paged_kv import PagedKVPool
 
-__all__ = ["Request", "Scheduler",
+__all__ = ["Request", "Scheduler", "PrefixIndex",
            "WAITING", "PREFILLING", "RUNNING", "FINISHED"]
 
 WAITING = "waiting"
@@ -75,6 +90,7 @@ class Request:
     next_token: int = -1                # fed to the next decode step
     preemptions: int = 0
     prefilled: int = 0                  # chunk cursor: prefix tokens paged in
+    cached_tokens: int = 0              # leading tokens served by shared pages
 
     @property
     def prefix(self) -> np.ndarray:
@@ -100,12 +116,176 @@ class Request:
         return self.prefix
 
 
+@dataclasses.dataclass
+class _PrefixEntry:
+    """One cached whole-page prompt block: its pool page, its parent
+    digest in the prefix chain, the EXACT tokens of its block (the
+    digest-collision guard), its chain depth (in blocks) and how many
+    cached children extend it (eviction is leaf-first)."""
+
+    page: int
+    parent: Optional[int]
+    block: Tuple[int, ...]
+    depth: int
+    children: int = 0
+
+
+class PrefixIndex:
+    """Page-aligned prefix cache: whole-page prompt token blocks ->
+    shared pool pages, with LRU leaf-first eviction.
+
+    Keys are a DIGEST CHAIN ``key_i = hash((key_{i-1}, block_i))`` (the
+    first block's parent is ``None``), so walking a prompt costs O(page)
+    per block instead of re-hashing the whole nested prefix at every
+    depth.  A digest is never trusted alone: every entry stores its
+    exact ``(parent, block)`` and a lookup verifies both, so a hash
+    collision degrades to a cache MISS (or an uncacheable block on
+    insert), never to attaching the wrong pages.  The index holds its
+    OWN reference on every cached page (``pool.incref`` on insert,
+    ``pool.free`` on evict); a cached page at refcount 1 is referenced
+    by nobody but the cache and is the only kind eviction may take.
+    Eviction is leaf-first along the chains so a surviving entry is
+    always reachable by a future lookup (evicting a middle block would
+    strand its cached descendants as dead weight).
+
+    ``hits``/``hit_tokens`` count per ADMISSION: a preempted sharer
+    that re-hits its cached prefix on resume counts again, because its
+    re-prefill is skipped again (the scheduler's
+    ``wasted_prefill_tokens`` likewise never charges cached tokens).
+    """
+
+    def __init__(self, pool: PagedKVPool):
+        self.pool = pool
+        self._entries: "OrderedDict[int, _PrefixEntry]" = OrderedDict()
+        self.hits = 0
+        self.hit_tokens = 0                  # prefill tokens served cached
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def cached_pages(self) -> List[int]:
+        return [e.page for e in self._entries.values()]
+
+    @staticmethod
+    def _blocks(prompt: np.ndarray, psize: int, n: int):
+        """The first ``n`` whole-page token blocks of ``prompt`` as the
+        digest-chain walk ``(key, parent_key, block_tokens, index)``."""
+        key = None
+        for i in range(n):
+            blk = tuple(int(t) for t in prompt[i * psize:(i + 1) * psize])
+            parent, key = key, hash((key, blk))
+            yield key, parent, blk, i
+
+    def _lookup(self, key: int, parent: Optional[int],
+                blk: Tuple[int, ...]) -> Optional[_PrefixEntry]:
+        """The entry for this exact (parent, block) pair, or None --
+        a digest hit with mismatched contents is a collision, not a
+        match."""
+        entry = self._entries.get(key)
+        if entry is not None and entry.parent == parent \
+                and entry.block == blk:
+            return entry
+        return None
+
+    def match(self, prompt: np.ndarray) -> List[int]:
+        """Keys of the longest cached chain of whole prompt pages.  The
+        match is CAPPED at the page strictly before the one holding the
+        prompt's last token, so a hit request always recomputes at least
+        one prompt token -- the logits that sample its first output (and
+        the page its first decode write may land in stays private)."""
+        psize = self.pool.page_size
+        keys = []
+        for key, parent, blk, _ in self._blocks(
+                prompt, psize, (len(prompt) - 1) // psize):
+            if self._lookup(key, parent, blk) is None:
+                break
+            keys.append(key)
+        return keys
+
+    def acquire(self, prompt: np.ndarray) -> List[int]:
+        """Attach the matched prefix: one new reference per shared page
+        (the caller's), entries bumped to MRU.  Returns the pages in
+        logical block order; release by ``pool.free`` (decref)."""
+        keys = self.match(prompt)
+        pages = [self._entries[k].page for k in keys]
+        self.pool.incref(pages)
+        for k in keys:
+            self._entries.move_to_end(k)
+        return pages
+
+    def insert(self, prompt: np.ndarray, pages: List[int]) -> None:
+        """Register every whole prompt page of a completed prefill.
+        Blocks already cached (including the request's own attached
+        shared pages) are bumped to MRU, not duplicated -- when two
+        requests with the same preamble prefill concurrently, the first
+        insertion wins and the loser's private copy simply retires with
+        it.  A digest collision (the slot holds a DIFFERENT block) ends
+        the chain: that prefix is uncacheable, never mis-cached."""
+        psize = self.pool.page_size
+        for key, parent, blk, i in self._blocks(prompt, psize,
+                                                len(prompt) // psize):
+            entry = self._entries.get(key)
+            if entry is None:
+                self.pool.incref([pages[i]])
+                self._entries[key] = _PrefixEntry(pages[i], parent, blk,
+                                                  i + 1)
+                if parent is not None:
+                    self._entries[parent].children += 1
+            elif entry.parent != parent or entry.block != blk:
+                break
+            self._entries.move_to_end(key)
+
+    def evict(self, n: int) -> int:
+        """Free up to ``n`` cached pages nobody references (refcount 1,
+        the index's own), LRU order among current LEAVES of the prefix
+        chains.  Returns how many pages went back to the free list."""
+        freed = 0
+        while freed < n:
+            victim = next(
+                (key for key, e in self._entries.items()
+                 if e.children == 0 and self.pool.refcount(e.page) == 1),
+                None)
+            if victim is None:
+                break
+            entry = self._entries.pop(victim)
+            if entry.parent is not None:
+                self._entries[entry.parent].children -= 1
+            self.pool.free([entry.page])
+            self.evictions += 1
+            freed += 1
+        return freed
+
+    def reclaimable_pages(self) -> int:
+        """How many cached pages eviction COULD hand back right now: a
+        page is reclaimable iff nothing but the cache references it and
+        every cached child is itself reclaimable (leaf-first eviction
+        can only reach a parent once its subtree is gone)."""
+        blocked = {key: 0 for key in self._entries}
+        n = 0
+        for key in sorted(self._entries,
+                          key=lambda k: -self._entries[k].depth):
+            e = self._entries[key]
+            if self.pool.refcount(e.page) == 1 and blocked[key] == 0:
+                n += 1
+            elif e.parent is not None:
+                blocked[e.parent] += 1
+        return n
+
+
 class Scheduler:
     """FIFO admission + LIFO preemption over a shared ``PagedKVPool``."""
 
-    def __init__(self, pool: PagedKVPool, max_batch: int):
+    def __init__(self, pool: PagedKVPool, max_batch: int,
+                 max_pages_per_req: Optional[int] = None,
+                 prefix_cache: bool = False):
         self.pool = pool
         self.max_batch = int(max_batch)
+        # widest page-table row the engine's fixed-shape decode step can
+        # build; None = unbounded (pool capacity is the only limit)
+        self.max_pages_per_req = max_pages_per_req
+        self.prefix = PrefixIndex(pool) if prefix_cache else None
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []      # admission order
         self.finished: Dict[int, Request] = {}
@@ -114,6 +294,7 @@ class Scheduler:
         self.prefill_preemptions = 0          # victims dropped mid-prefill
         self.wasted_prefill_tokens = 0        # prefix KV tossed by preemption
         self.preempted_log: List[int] = []    # rids, in preemption order
+        self.retired_log: List[int] = []      # rids, in retirement order
 
     # -- queue --------------------------------------------------------------
 
@@ -121,11 +302,22 @@ class Scheduler:
                eos_id: Optional[int] = None) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size > 0 and max_new_tokens >= 1
-        need = self.pool.pages_for(prompt.size + max_new_tokens)
+        total = prompt.size + int(max_new_tokens)
+        need = self.pool.pages_for(total)
         if need > self.pool.n_pages:
             raise ValueError(
                 f"request needs {need} pages but the pool only has "
                 f"{self.pool.n_pages}: raise n_pages or shorten the request")
+        if self.max_pages_per_req is not None \
+                and need > self.max_pages_per_req:
+            # the same rejection the engine gives: a page list longer
+            # than the fixed (B, NP) page-table row of the batched
+            # decode step can never be served, however big the pool is
+            raise ValueError(
+                f"prompt+new = {total} exceeds max_len="
+                f"{self.max_pages_per_req * self.pool.page_size} "
+                f"({need} pages > the {self.max_pages_per_req}-page "
+                f"table row of the engine's decode step)")
         req = Request(self._next_rid, prompt, int(max_new_tokens), eos_id)
         self._next_rid += 1
         self.waiting.append(req)
@@ -137,50 +329,76 @@ class Scheduler:
 
     # -- admission ----------------------------------------------------------
 
-    def admit(self) -> List[Request]:
-        """Move FIFO-head requests to PREFILLING while a batch slot is
-        open and the UNCLAIMED free pages cover prefix + 1 decode slot.
-
-        Pages are allocated lazily per chunk, so already-admitted
-        PREFILLING requests hold outstanding claims (their full need
-        minus what they have allocated); admission budgets against
-        free pages minus those claims, keeping co-admitted prefills
-        from racing each other to the same pages."""
+    def _admission_budget(self) -> int:
+        """Pages admission may promise: free pages, plus what prefix-
+        cache eviction could reclaim, minus the outstanding claims of
+        already-admitted PREFILLING requests (their full need minus what
+        they have allocated OR attached shared) -- co-admitted prefills
+        must never race each other to the same pages."""
         budget = self.pool.free_pages
+        if self.prefix is not None:
+            budget += self.prefix.reclaimable_pages()
         for r in self.running:
             if r.status == PREFILLING:
                 claim = self.pool.pages_for(len(r.prefix) + 1) - len(r.pages)
                 budget -= max(claim, 0)
+        return budget
+
+    def admit(self) -> List[Request]:
+        """Move FIFO-head requests to PREFILLING while a batch slot is
+        open and the admission budget covers the NEW pages the head
+        still needs: under prefix caching the head's prompt is matched
+        against the index first, the cached prefix pages attach to it
+        read-only, and only the remainder is budgeted (and later
+        computed -- the chunk cursor starts past the match)."""
         admitted = []
         while self.waiting and len(self.running) < self.max_batch:
             head = self.waiting[0]
-            need = self.pool.pages_for(len(head.prefix) + 1)
-            if need > budget:
+            shared = self.prefix.acquire(head.prompt) \
+                if self.prefix is not None else []
+            # budget AFTER the attach: the shared pages are pinned at
+            # refcount >= 2 now, so reclaimable_pages no longer counts
+            # them, and prior same-call admissions show up as claims
+            need = self.pool.pages_for(len(head.prefix) + 1) - len(shared)
+            if need > self._admission_budget():
+                if shared:
+                    self.pool.free(shared)   # detach: head stays queued
                 break                    # head-of-line blocks: strict FIFO
-            budget -= need
             self.waiting.popleft()
             head.status = PREFILLING
-            head.prefilled = 0
+            head.pages = list(shared)
+            head.cached_tokens = len(shared) * self.pool.page_size
+            head.prefilled = head.cached_tokens
+            if shared:
+                self.prefix.hits += 1
+                self.prefix.hit_tokens += head.cached_tokens
             self.running.append(head)
             admitted.append(head)
         return admitted
 
     def prefill_complete(self, req: Request) -> None:
         """PREFILLING -> RUNNING: the whole prefix is paged in and the
-        engine has sampled the request's next token."""
+        engine has sampled the request's next token.  Under prefix
+        caching this is also the publication point: the request's whole
+        prompt pages register in the index and become shareable."""
         assert req.status == PREFILLING, req.status
         req.status = RUNNING
+        if self.prefix is not None:
+            self.prefix.insert(req.prompt, req.pages)
 
     # -- capacity / preemption ----------------------------------------------
 
     def _grow(self, req: Request, need_pages: int) -> bool:
-        """Grow ``req``'s page list to ``need_pages``, preempting the
-        youngest request while the pool is dry.  False if ``req`` itself
-        was preempted (it is no longer running)."""
+        """Grow ``req``'s page list to ``need_pages``: free list first,
+        then LRU eviction of unreferenced prefix-cache pages, and only
+        when the cache is bone-dry preempt the youngest request.  False
+        if ``req`` itself was preempted (it is no longer running)."""
         while need_pages > len(req.pages):
             got = self.pool.alloc(1)
             if got is not None:
                 req.pages.extend(got)
+                continue
+            if self.prefix is not None and self.prefix.evict(1):
                 continue
             victim = self.running[-1]    # youngest admitted
             self.preempt(victim)
@@ -204,14 +422,21 @@ class Scheduler:
         queue.  A RUNNING victim keeps its generated tokens (resume =
         re-prefill prefix); a PREFILLING victim restarts from chunk 0."""
         assert req.status in (RUNNING, PREFILLING), req.status
+        # tokens served off shared cached pages were never computed by
+        # this request, so preemption does not waste them -- and the
+        # pages themselves survive in the index (the decref below drops
+        # only the request's reference), ready to re-hit on resume
         if req.status == PREFILLING:
             self.prefill_preemptions += 1
-            self.wasted_prefill_tokens += req.prefilled
+            self.wasted_prefill_tokens += max(
+                req.prefilled - req.cached_tokens, 0)
         else:
-            self.wasted_prefill_tokens += req.position + 1
+            self.wasted_prefill_tokens += max(
+                req.position + 1 - req.cached_tokens, 0)
         self.pool.free(req.pages)
         req.pages = []
         req.prefilled = 0
+        req.cached_tokens = 0
         req.status = WAITING
         req.next_token = -1
         req.preemptions += 1
@@ -223,9 +448,14 @@ class Scheduler:
     # -- retirement ---------------------------------------------------------
 
     def retire(self, req: Request) -> None:
+        """RUNNING -> FINISHED.  ``free`` is a decref: the request's
+        private pages return to the pool, while its prompt-prefix pages
+        -- published by ``prefill_complete`` -- stay cached under the
+        prefix index's own reference, shareable until evicted."""
         assert req.status == RUNNING
         self.pool.free(req.pages)
         req.pages = []
         req.status = FINISHED
         self.running.remove(req)
         self.finished[req.rid] = req
+        self.retired_log.append(req.rid)

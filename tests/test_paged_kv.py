@@ -221,6 +221,60 @@ def test_pool_free_guard_stays_consistent_under_churn():
         pool.free([got[0], got[0]])              # double free still fires
 
 
+def test_pool_refcount_share_and_decref():
+    """Prefix-sharing refcounts: incref adds a holder, free is a decref
+    that only returns the page once the last holder lets go, and the
+    double-free / incref-of-free guards still fire."""
+    pool = PagedKVPool(CFG, n_pages=4, page_size=8)
+    (pg,) = pool.alloc(1)
+    assert pool.refcount(pg) == 1
+    pool.incref([pg])                          # a sharer attaches
+    assert pool.refcount(pg) == 2
+    pool.free([pg])                            # decref: still allocated
+    assert pool.refcount(pg) == 1 and pool.used_pages == 1
+    pool.free([pg])                            # last holder: really freed
+    assert pool.refcount(pg) == 0 and pool.used_pages == 0
+    with pytest.raises(AssertionError):
+        pool.free([pg])                        # double free still a bug
+    with pytest.raises(AssertionError):
+        pool.incref([pg])                      # can't share a free page
+
+
+def test_pool_refcount_churn_invariants():
+    """Alloc/incref/decref churn against a shadow refcount model: the
+    allocated set must stay exactly the pages with refcount >= 1, and
+    the free list + allocated set must partition the pool throughout."""
+    pool = PagedKVPool(CFG, n_pages=64, page_size=16)
+    rng = np.random.default_rng(11)
+    ref = {}                                   # shadow refcounts
+    for _ in range(400):
+        r = rng.random()
+        live = sorted(ref)
+        if live and r < 0.3:
+            pg = live[rng.integers(0, len(live))]
+            pool.incref([pg])
+            ref[pg] += 1
+        elif live and r < 0.65:
+            pg = live[rng.integers(0, len(live))]
+            pool.free([pg])
+            ref[pg] -= 1
+            if ref[pg] == 0:
+                del ref[pg]
+        else:
+            got = pool.alloc(int(rng.integers(1, 5)))
+            if got is not None:
+                for pg in got:
+                    ref[pg] = 1
+        assert pool.used_pages == len(ref)
+        assert pool.free_pages + pool.used_pages == pool.n_pages
+        assert all(pool.refcount(pg) == n for pg, n in ref.items())
+        assert pool._allocated == set(ref)
+    for pg, n in list(ref.items()):
+        for _ in range(n):
+            pool.free([pg])
+    assert pool.used_pages == 0
+
+
 def _random_cache_q(L, s, kh, dh):
     out = {}
     for key, cols in (("k_codes", dh), ("v_codes", dh),

@@ -1,0 +1,282 @@
+"""Copy-on-write prefix caching over the paged KV pool: PrefixIndex
+bookkeeping (capped matching, refcount pinning, LRU leaf-first
+eviction), hit-aware admission budgeting, eviction-before-preemption,
+and ContinuousEngine cache-hit parity / logical-KV oracle checks."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve import ContinuousEngine, PagedKVPool, Scheduler
+from repro.serve.scheduler import PrefixIndex
+
+CFG = get_config("qwen2-0.5b").reduced()
+RNG = np.random.default_rng(0)
+
+
+def _params():
+    return T.lm_init(jax.random.PRNGKey(0), CFG)
+
+
+def _sched(n_pages=8, page_size=4, max_batch=4, **kw):
+    return Scheduler(PagedKVPool(CFG, n_pages, page_size), max_batch, **kw)
+
+
+def _prompt(n):
+    return np.arange(1, n + 1, dtype=np.int32)
+
+
+def _page_in(s, req):
+    """Drive a PREFILLING request's page side to completion (what the
+    engine's chunk loop does, minus the model)."""
+    assert s.ensure_prefill_capacity(req, len(req.prefix))
+    req.prefilled = len(req.prefix)
+    s.prefill_complete(req)
+
+
+def _shared(n_tail, pre):
+    """A prompt opening with the shared preamble ``pre``."""
+    return np.concatenate(
+        [pre, RNG.integers(0, CFG.vocab, (n_tail,)).astype(np.int32)])
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex unit tests (no model involved)
+# ---------------------------------------------------------------------------
+
+def test_index_match_is_capped_and_chained():
+    pool = PagedKVPool(CFG, n_pages=8, page_size=4)
+    idx = PrefixIndex(pool)
+    prompt = _prompt(12)                       # 3 whole pages
+    pages = pool.alloc(3)
+    idx.insert(prompt, pages)
+    assert len(idx) == 3
+    # page-aligned prompt: the LAST page never matches -- its tokens
+    # are recomputed so the hit still produces first-sample logits (and
+    # the page its decode may write stays private)
+    keys = idx.match(prompt)
+    assert [idx._entries[k].page for k in keys] == pages[:2]
+    # one more token and all 3 cached blocks are strictly before the
+    # last-token page: full 3-block match
+    assert len(idx.match(_prompt(13))) == 3
+    # a diverging second block stops the chain after one page
+    other = _prompt(13)
+    other[5] = 9999
+    assert len(idx.match(other)) == 1
+    # no whole page in common with a 3-token prompt
+    assert idx.match(_prompt(3)) == []
+    # re-inserting is a no-op (no duplicate entries, no double incref)
+    idx.insert(prompt, pages)
+    assert len(idx) == 3
+    assert [pool.refcount(p) for p in pages] == [2, 2, 2]
+
+
+def test_index_acquire_pins_and_eviction_is_leaf_first():
+    pool = PagedKVPool(CFG, n_pages=8, page_size=4)
+    idx = PrefixIndex(pool)
+    pages = pool.alloc(3)
+    idx.insert(_prompt(12), pages)
+    pool.free(pages)                           # the prefiller retires
+    assert pool.used_pages == 3                # ...but the cache holds on
+    assert [pool.refcount(p) for p in pages] == [1, 1, 1]
+    assert idx.reclaimable_pages() == 3
+    shared = idx.acquire(_prompt(12))          # capped hit: 2 of 3 blocks
+    assert shared == pages[:2]
+    assert [pool.refcount(p) for p in pages] == [2, 2, 1]
+    # pinned pages are not reclaimable, and neither is an unpinned
+    # parent below a pinned child -- only the true leaf is
+    assert idx.reclaimable_pages() == 1
+    assert idx.evict(3) == 1                   # pinned chain survives
+    assert pool.used_pages == 2 and len(idx) == 2
+    pool.free(shared)                          # the sharer lets go
+    assert idx.reclaimable_pages() == 2
+    assert idx.evict(5) == 2                   # leaf first, then its parent
+    assert pool.used_pages == 0 and len(idx) == 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler: hit-aware admission, eviction before preemption, submit guard
+# ---------------------------------------------------------------------------
+
+def test_admission_attaches_hit_and_budgets_only_new_pages():
+    s = _sched(n_pages=3, page_size=4, prefix_cache=True)
+    r0 = s.submit(_prompt(9), 3)               # 3 pages, 2 whole-prompt
+    (a,) = s.admit()
+    _page_in(s, a)
+    cached = list(a.pages[:2])
+    a.generated = [7]
+    s.retire(a)
+    assert s.pool.used_pages == 2              # prompt pages stay cached
+    assert s.pool.free_pages == 1
+    # the same prompt again: needs pages_for(10) = 3, but 2 arrive
+    # shared, so the single free page covers the whole remaining need
+    s.submit(_prompt(9), 3)
+    (b,) = s.admit()
+    assert b.pages == cached                   # attached in block order
+    assert b.prefilled == 8 and b.cached_tokens == 8
+    assert s.prefix.hits == 1 and s.prefix.hit_tokens == 8
+    assert [s.pool.refcount(p) for p in b.pages] == [2, 2]
+    assert s.ensure_prefill_capacity(b, 9)     # 3rd page: the free one
+    assert s.preemption_count == 0
+
+
+def test_grow_evicts_cache_before_preempting():
+    s = _sched(n_pages=3, page_size=4, max_batch=2, prefix_cache=True)
+    s.submit(_prompt(9), 3)
+    (a,) = s.admit()
+    _page_in(s, a)
+    a.generated = [7]
+    s.retire(a)
+    assert s.pool.free_pages == 1              # 2 cached, 1 free
+    # an UNRELATED request needing the whole pool: admission counts the
+    # reclaimable cached pages, and prefill growth EVICTS them (LRU)
+    # instead of preempting anybody
+    s.submit(np.full(9, 50, np.int32), 3)
+    (b,) = s.admit()
+    assert b.pages == [] and b.cached_tokens == 0      # a miss
+    assert s.ensure_prefill_capacity(b, 9)
+    assert len(b.pages) == 3
+    assert s.prefix.evictions == 2
+    assert s.preemption_count == 0 and len(s.waiting) == 0
+
+
+def test_submit_rejects_page_table_overflow():
+    """A direct scheduler user gets the engine's rejection at submit:
+    a page list wider than the engine's fixed (B, NP) page-table row
+    can never be decoded, however big the pool is."""
+    s = _sched(n_pages=8, page_size=4, max_pages_per_req=2)
+    s.submit(_prompt(5), 3)                    # 2 pages: fits the row
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        s.submit(_prompt(5), 4)                # 3 pages > 2-page row
+
+
+# ---------------------------------------------------------------------------
+# ContinuousEngine end-to-end
+# ---------------------------------------------------------------------------
+
+def test_engine_prefix_hit_parity_and_hit_accounting():
+    """Cache-hit requests produce temperature-0 outputs token-for-token
+    identical to the cache-off engine (both on the pages context: the
+    shared pages hold bitwise the codes a cold prefill writes), and the
+    hit counters record exactly the skipped preamble."""
+    params = _params()
+    pre = RNG.integers(0, CFG.vocab, (32,)).astype(np.int32)
+    reqs = [(_shared(n, pre), g) for n, g in [(3, 6), (5, 4), (2, 7)]]
+
+    def run(prefix_cache):
+        eng = ContinuousEngine(CFG, params, n_pages=24, page_size=16,
+                               max_batch=2, max_len=48,
+                               prefill_context="pages",
+                               prefix_cache=prefix_cache)
+        outs = []
+        for p, g in reqs:                      # sequential: each request
+            rid = eng.submit(p, g)             # retires before the next
+            outs.append(eng.run()[rid])        # arrives, so its prefix is
+        return outs, eng                       # published for the next
+
+    cold, _ = run(False)
+    hot, eng = run(True)
+    assert eng.scheduler.prefix.hits == len(reqs) - 1
+    assert eng.scheduler.prefix.hit_tokens == 32 * (len(reqs) - 1)
+    assert eng.prefill_tokens_computed \
+        == sum(p.size for p, _ in reqs) - 32 * (len(reqs) - 1)
+    for a, b in zip(cold, hot):
+        np.testing.assert_array_equal(a, b)
+    hot2, _ = run(True)                        # and the hit path is
+    for a, b in zip(hot, hot2):                # deterministic
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_hit_logical_kv_matches_cold_path():
+    """gather_request oracle: after the same number of generated
+    tokens, a hit request's logical KV -- its pages read back in
+    page-table order -- is BITWISE the cold path's.  (Preamble rows
+    attend only to preamble slots, so the shared pages a previous
+    request wrote are exactly the pages this prompt would have
+    written.)"""
+    params = _params()
+    pre = RNG.integers(0, CFG.vocab, (32,)).astype(np.int32)
+    prompt = _shared(4, pre)
+
+    def kv_after(prefix_cache, publish_first):
+        eng = ContinuousEngine(CFG, params, n_pages=24, page_size=16,
+                               max_batch=2, max_len=48,
+                               prefill_context="pages",
+                               prefix_cache=prefix_cache)
+        if publish_first:                      # cache the preamble pages
+            eng.submit(np.concatenate([pre, np.full(2, 9, np.int32)]), 3)
+            eng.run()
+        rid = eng.submit(prompt, 6)
+        while True:
+            eng.step()
+            req = next(r for r in eng.scheduler.running if r.rid == rid)
+            if len(req.generated) == 5:        # stop mid-flight, pages live
+                break
+        n = req.position + 1                   # live KV slots
+        gathered = eng.pool.gather_request(req.pages)
+        return ({k: np.asarray(v[:, :, :n]) for k, v in gathered.items()},
+                req)
+
+    hot, req = kv_after(True, True)
+    assert req.cached_tokens == 32             # really served off a hit
+    cold, _ = kv_after(False, False)
+    for key in cold:
+        np.testing.assert_array_equal(hot[key], cold[key])
+
+
+def test_engine_prefix_churn_no_leaks_and_deterministic():
+    """A starved pool under shared-preamble traffic: sharing, eviction
+    and preemption interleave.  The run must stay deterministic, the
+    refcount asserts must never fire, and after draining, the pool must
+    hold EXACTLY the index's cached pages (each at refcount 1) -- no
+    page leaked, none freed twice."""
+    params = _params()
+    pre = RNG.integers(0, CFG.vocab, (16,)).astype(np.int32)
+    reqs = [(_shared(n, pre), g)
+            for n, g in [(6, 10), (9, 8), (4, 12), (11, 6)]]
+
+    def run():
+        eng = ContinuousEngine(CFG, params, n_pages=5, page_size=8,
+                               max_batch=4, max_len=40,
+                               prefill_chunk_tokens=8, prefix_cache=True)
+        rids = [eng.submit(p, g) for p, g in reqs]
+        out = eng.run()
+        return [out[r] for r in rids], eng
+
+    a, eng = run()
+    b, _ = run()
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    sched = eng.scheduler
+    assert sched.preemption_count + sched.prefix.evictions > 0
+    assert eng.pool.used_pages == len(sched.prefix)
+    assert sorted(sched.prefix.cached_pages) == sorted(eng.pool._allocated)
+    assert all(eng.pool.refcount(p) == 1
+               for p in sched.prefix.cached_pages)
+    n = len(sched.prefix)
+    assert sched.prefix.evict(n + 5) == n      # only refcount-0... -1 left
+    assert eng.pool.used_pages == 0            # everything accounted for
+
+
+def test_engine_prefix_cache_requires_pages_context():
+    params = _params()
+    with pytest.raises(ValueError, match="pages"):
+        ContinuousEngine(CFG, params, n_pages=8, page_size=16,
+                         max_batch=2, max_len=32,
+                         prefill_context="carry", prefix_cache=True)
+    eng = ContinuousEngine(CFG, params, n_pages=8, page_size=16,
+                           max_batch=2, max_len=32, prefix_cache=True)
+    assert eng.prefill_context == "pages"      # the prefix-cache default
+
+
+def test_engine_unaligned_max_len_is_actionable_value_error():
+    """REGRESSION: launch/serve.py --continuous --page-size 16 with the
+    default --prompt-len/--steps used to die on a bare assert here
+    (max_len 56 % 16 != 0); now it is a ValueError that says what to
+    do (and the CLI rounds max_len up before it ever gets here)."""
+    params = _params()
+    with pytest.raises(ValueError, match="round max_len up to 64"):
+        ContinuousEngine(CFG, params, n_pages=8, page_size=16,
+                         max_batch=2, max_len=56)
