@@ -245,6 +245,43 @@ def _serve_shared_preamble(cfg, params, trace, n_pages, page_size,
     )
 
 
+def _serve_decode_loop(cfg, params, page_size, max_batch, max_len,
+                       n_pages, gen, k_steps):
+    """One full-batch cohort decoded with ``decode_steps=k_steps``.
+
+    Every request has the same 4-token prompt length, the same ``gen``
+    budget and no EOS, so the whole batch moves in lockstep and the
+    dispatch count has a closed form: prefill samples token 1 on the
+    host, then each engine step drives ONE jitted dispatch of K fused
+    decode+sample iterations -- ``(gen - 1) / K`` dispatches total."""
+    eng = ContinuousEngine(cfg, params, n_pages=n_pages,
+                           page_size=page_size, max_batch=max_batch,
+                           max_len=max_len, decode_steps=k_steps)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab, (4,)).astype(np.int32)
+               for _ in range(max_batch)]
+    warm = eng.submit(prompts[0], 2)       # warm prefill + decode jits
+    eng.run()
+    eng.scheduler.finished.pop(warm)
+    eng.reset_counters()
+
+    rids = [eng.submit(p, gen) for p in prompts]
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(eng.scheduler.finished[r].generated) for r in rids)
+    outs = [np.asarray(eng.scheduler.finished[r].generated) for r in rids]
+    return outs, dict(
+        decode_steps=k_steps,
+        tokens=toks, wall_s=dt, tokens_per_s=toks / dt,
+        decode_dispatches=eng.decode_dispatches,
+        dispatches_per_token=eng.decode_dispatches / (toks - len(rids)),
+        page_table_uploads=eng.page_table_uploads,
+        token_host_bytes=eng.token_host_bytes,
+        logits_host_bytes=eng.logits_host_bytes,
+    )
+
+
 def _serve_static(cfg, params, trace, max_len):
     """The static plan: wait for every arrival, left-pad one batch,
     decode until the longest request's budget."""
@@ -429,6 +466,45 @@ def run(smoke: bool = False) -> None:
          f"saved={on['prefix_hit_tokens']};"
          f"later_req_reduction="
          f"{later_prompt / max(later_computed, 1):.1f}x;parity=1")
+
+    # --- device-resident decode loop: K fused decode+sample steps per
+    # dispatch; the host syncs one (B, K) int32 buffer and ZERO logits
+    gen = 17                       # 1 prefill-sampled + 16 decoded:
+    #                                16 is divisible by every K below
+    dl_results = {}
+    base_out = None
+    for k_steps in (1, 4, 8):
+        outs, stats = _serve_decode_loop(
+            cfg, params, page_size, max_batch, max_len, n_pages,
+            gen, k_steps)
+        # closed-form dispatch model: lockstep cohort, (gen-1)/K
+        # dispatches, one (max_batch, K) int32 sync each, no logits
+        want = (gen - 1) // k_steps
+        assert stats["decode_dispatches"] == want, (k_steps, stats)
+        assert stats["logits_host_bytes"] == 0, stats
+        assert stats["token_host_bytes"] == want * max_batch * \
+            k_steps * 4, (k_steps, stats)
+        # temperature-0 parity: every K must emit the same tokens
+        if base_out is None:
+            base_out = outs
+        for a, b_ in zip(base_out, outs):
+            assert np.array_equal(a, b_), \
+                f"decode_steps={k_steps} changed temperature-0 output"
+        dl_results[f"K{k_steps}"] = stats
+        emit(f"serve/decode_loop_K{k_steps}",
+             1e6 / max(stats["tokens_per_s"], 1e-9),
+             f"tokens_per_s={stats['tokens_per_s']:.1f};"
+             f"dispatches={stats['decode_dispatches']};"
+             f"dispatches_per_token="
+             f"{stats['dispatches_per_token']:.3f};"
+             f"pt_uploads={stats['page_table_uploads']};"
+             f"token_bytes={stats['token_host_bytes']};"
+             f"logits_bytes=0")
+    # what the pre-fusion loop moved: one (B, vocab) f32 logits pull
+    # per decoded token, now zero
+    dl_results["logits_bytes_removed_per_run"] = \
+        (gen - 1) * max_batch * cfg.vocab * 4
+    results["decode_loop"] = dl_results
 
     # --- slot waste: reserved slots vs live tokens
     reserved = bsz * max_len

@@ -36,6 +36,11 @@ ARGS = argparse.ArgumentParser()
 ARGS.add_argument("--continuous", action="store_true",
                   help="also serve staggered LM streams through the "
                        "paged-KV ContinuousEngine")
+ARGS.add_argument("--decode-steps", type=int, default=2,
+                  help="decode iterations per jitted dispatch of the "
+                       "--continuous demo: one host round trip drives K "
+                       "on-device decode+sample steps (temperature-0 "
+                       "tokens are identical for every K)")
 ARGS = ARGS.parse_args()
 
 stream = VIOStream(batch=64)
@@ -99,10 +104,15 @@ if ARGS.continuous:
     # (the XR pattern -- one system/scene prompt ahead of every VIO /
     # gaze / narration query), so only the first sharer pays its
     # prefill; later streams attach the cached pages copy-on-write.
+    # decode_steps: each engine step drives K decode+sample iterations
+    # in ONE jitted dispatch (device-resident sampling; streams that
+    # finish mid-scan park on page 0) -- the XR frame loop polls the
+    # engine K tokens at a time instead of once per token.
     eng = ContinuousEngine(cfg, lm, n_pages=32, page_size=16,
                            max_batch=4, max_len=64,
                            policy=PrecisionPolicy.uniform("posit8_0"),
-                           prefill_chunk_tokens=16, prefix_cache=True)
+                           prefill_chunk_tokens=16, prefix_cache=True,
+                           decode_steps=ARGS.decode_steps)
     rng = np.random.default_rng(0)
     scene = rng.integers(0, cfg.vocab, (16,))   # shared scene preamble
     arrivals = [(s, int(rng.integers(3, 12)), int(rng.integers(4, 16)))
@@ -127,4 +137,8 @@ if ARGS.continuous:
           f"preemptions {eng.scheduler.preemption_count}; "
           f"prefix cache {px.hits} hits "
           f"({px.hit_tokens} prefill tokens skipped)")
+    print(f"decode loop: K={eng.decode_steps}, "
+          f"{eng.decode_dispatches} dispatches, "
+          f"{eng.page_table_uploads} page-table uploads, "
+          f"{eng.logits_host_bytes} logits bytes to host")
 print("OK")

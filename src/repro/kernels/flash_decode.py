@@ -89,7 +89,8 @@ def _dequant_block(codes_ref, scale_ref, dh: int, gs: int) -> jax.Array:
 
 def _online_softmax_step(pos_last, qpos, q2, kc_ref, ks_ref, vc_ref, vs_ref,
                          write_out, acc_ref, m_ref, l_ref, *,
-                         blk: int, softcap: float, scale: float):
+                         blk: int, softcap: float, scale: float,
+                         pad_lo=None):
     """One grid step of the online-softmax accumulation: init scratch at
     t=0, accumulate the current KV block while any query row is live for
     it, emit the normalized output through ``write_out`` at the last
@@ -104,6 +105,10 @@ def _online_softmax_step(pos_last, qpos, q2, kc_ref, ks_ref, vc_ref, vs_ref,
                  (R, blk) (decode: the scalar ``pos``; prefill:
                  ``start + row // G`` as an (R, 1) column).
       pos_last : scalar max of ``qpos`` -- gates dead grid steps off.
+      pad_lo   : optional low key-visibility bound (ragged LEFT-padded
+                 batches: slots below the request's pad width are dead).
+                 ``None`` (the paged kernels, where rows have no pad)
+                 compiles the exact pre-pad mask -- bitwise unchanged.
     """
     t = pl.program_id(2)
     nt = pl.num_programs(2)
@@ -127,6 +132,8 @@ def _online_softmax_step(pos_last, qpos, q2, kc_ref, ks_ref, vc_ref, vs_ref,
             s = jnp.tanh(s / softcap) * softcap
         kpos = t * blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(kpos <= qpos, s, _NEG_INF)
+        if pad_lo is not None:
+            s = jnp.where(kpos >= pad_lo, s, _NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -142,10 +149,13 @@ def _online_softmax_step(pos_last, qpos, q2, kc_ref, ks_ref, vc_ref, vs_ref,
         write_out(acc_ref[...] / l_ref[...])
 
 
-def flash_decode_kernel(pos_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
-                        o_ref, acc_ref, m_ref, l_ref, *,
+def flash_decode_kernel(pos_ref, pad_ref, q_ref, kc_ref, ks_ref, vc_ref,
+                        vs_ref, o_ref, acc_ref, m_ref, l_ref, *,
                         blk: int, softcap: float, scale: float):
-    """One (B, Kh) cell; online-softmax accumulation over live KV blocks."""
+    """One (B, Kh) cell; online-softmax accumulation over live KV blocks.
+    ``pad_ref`` holds per-request left-pad widths ((B,), zeros for a
+    non-ragged batch): slots below ``pad_ref[i]`` are masked dead, the
+    left-padded twin of the causal mask."""
     pos = pos_ref[0]
 
     def write_out(out):
@@ -153,7 +163,8 @@ def flash_decode_kernel(pos_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
 
     _online_softmax_step(pos, pos, q_ref[0, 0], kc_ref, ks_ref, vc_ref,
                          vs_ref, write_out, acc_ref, m_ref, l_ref,
-                         blk=blk, softcap=softcap, scale=scale)
+                         blk=blk, softcap=softcap, scale=scale,
+                         pad_lo=pad_ref[pl.program_id(0)])
 
 
 def paged_flash_decode_kernel(pt_ref, pos_ref, q_ref, kc_ref, ks_ref,
@@ -176,7 +187,8 @@ def paged_flash_decode_kernel(pt_ref, pos_ref, q_ref, kc_ref, ks_ref,
                    static_argnames=("blk", "softcap", "interpret"))
 def flash_decode_pallas(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
                         v_codes: jax.Array, v_scale: jax.Array,
-                        pos: jax.Array, *, blk: Optional[int] = None,
+                        pos: jax.Array, *, pad: Optional[jax.Array] = None,
+                        blk: Optional[int] = None,
                         softcap: float = 0.0,
                         interpret: bool = False) -> jax.Array:
     """GQA decode attention straight from posit8 KV codes.
@@ -188,6 +200,13 @@ def flash_decode_pallas(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
                        ``quant.group_scales`` layout: Gs = Dh/group
                        (Gs = 1 is per-(token, head), the group=Dh case).
     pos              : scalar int32 -- attends to cache slots [0, pos].
+    pad              : optional (B,) int32 left-pad widths of a ragged
+                       batch -- request i additionally masks slots below
+                       ``pad[i]`` (None == an all-zeros pad: the dense
+                       static-batch case).  Blocks fully below the pad
+                       still DMA (the live horizon is what the index
+                       map clamps on); their scores mask to -inf, so
+                       they contribute exact zeros.
 
     Returns (B, Kh, G, Dh) f32 attention output.
     """
@@ -199,16 +218,16 @@ def flash_decode_pallas(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
     assert t % blk == 0, (t, blk)
     nt = t // blk
 
-    def q_im(i, h, tt, pos_ref):
+    def q_im(i, h, tt, pos_ref, pad_ref):
         return (i, h, 0, 0)
 
-    def kv_im(i, h, tt, pos_ref):
+    def kv_im(i, h, tt, pos_ref, pad_ref):
         # clamp dead blocks onto the last live one: the block index stops
         # changing, so Pallas re-uses the resident copy (no DMA)
         return (i, jnp.minimum(tt, pos_ref[0] // blk), h, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(b, kh, nt),
         in_specs=[
             pl.BlockSpec((1, 1, g, dh), q_im),
@@ -228,6 +247,8 @@ def flash_decode_pallas(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
                                softcap=float(softcap),
                                scale=1.0 / math.sqrt(dh))
     pos_arr = jnp.asarray(pos, jnp.int32).reshape((1,))
+    pad_arr = jnp.zeros((b,), jnp.int32) if pad is None \
+        else jnp.asarray(pad, jnp.int32).reshape((b,))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -235,7 +256,7 @@ def flash_decode_pallas(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(pos_arr, q, k_codes, k_scale, v_codes, v_scale)
+    )(pos_arr, pad_arr, q, k_codes, k_scale, v_codes, v_scale)
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "interpret"))

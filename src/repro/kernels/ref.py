@@ -56,9 +56,11 @@ def _dequant_kv_ref(codes: jax.Array, scale: jax.Array) -> jax.Array:
 
 def flash_decode_ref(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
                      v_codes: jax.Array, v_scale: jax.Array, pos,
-                     softcap: float = 0.0) -> jax.Array:
+                     softcap: float = 0.0, pad=None) -> jax.Array:
     """Naive full-softmax oracle for the fused flash-decode kernel:
     dequantize the WHOLE cache, one masked softmax over all of T.
+    ``pad``: optional (B,) left-pad widths -- request b also masks
+    slots below ``pad[b]`` (the ragged static-batch case).
     Shapes match :func:`..flash_decode.flash_decode_pallas`."""
     b, kh, g, dh = q.shape
     k = _dequant_kv_ref(k_codes, k_scale)                # (B, T, Kh, Dh)
@@ -68,7 +70,11 @@ def flash_decode_ref(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
     if softcap > 0.0:
         s = jnp.tanh(s / softcap) * softcap
     tpos = jnp.arange(k_codes.shape[1])
-    s = jnp.where(tpos[None, None, None, :] <= pos, s, -1e30)
+    live = tpos[None, None, None, :] <= pos
+    if pad is not None:
+        live = live & (tpos[None, None, None, :] >=
+                       jnp.asarray(pad)[:, None, None, None])
+    s = jnp.where(live, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bkgt,btkd->bkgd", p, v)
 

@@ -14,8 +14,14 @@ mix's common preamble through the pool's copy-on-write prefix cache:
 every request after the first sharer skips re-prefilling the matched
 whole pages.
 
+``--decode-steps K`` makes the decode loop device-resident: one jitted
+dispatch runs K fused decode+sample iterations (positions bump on
+device, EOS/budget rows park mid-scan) and the host syncs one (B, K)
+token buffer -- K host round trips become one, and the (B, vocab)
+logits never leave the device.
+
   ... --continuous --batch 8 --n-pages 48 [--page-size 16]
-      [--prefill-chunk 16] [--prefix-cache]
+      [--prefill-chunk 16] [--prefix-cache] [--decode-steps 4]
 """
 
 from __future__ import annotations
@@ -75,7 +81,8 @@ def _continuous(args, cfg, params, policy) -> None:
         max_batch=args.batch, max_len=max_len, policy=policy,
         temperature=args.temperature,
         prefill_chunk_tokens=args.prefill_chunk,
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache,
+        decode_steps=args.decode_steps)
     # ragged request mix around the CLI's nominal prompt/step counts;
     # under --prefix-cache every prompt opens with one shared page-sized
     # preamble (the XR scene/system prompt ahead of every query), so
@@ -98,6 +105,10 @@ def _continuous(args, cfg, params, policy) -> None:
     toks = sum(len(eng.scheduler.finished[r].generated) for r in rids)
     print(f"served {n_req} requests / {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s) over {eng.steps_run} engine steps")
+    print(f"decode loop: K={eng.decode_steps}, {eng.decode_dispatches} "
+          f"dispatches, {eng.page_table_uploads} page-table uploads, "
+          f"{eng.token_host_bytes} token bytes to host "
+          f"(logits bytes: {eng.logits_host_bytes})")
     print(f"pool: {eng.pool.n_pages} pages x {eng.pool.page_size} slots, "
           f"peak used {eng.pool.alloc_peak}, "
           f"preemptions {eng.scheduler.preemption_count} "
@@ -139,6 +150,11 @@ def main() -> None:
                     help="share whole common-preamble pages between "
                          "requests (copy-on-write prefix caching); the "
                          "demo mix gets a one-page shared preamble")
+    ap.add_argument("--decode-steps", type=int, default=1,
+                    help="decode iterations per jitted dispatch: one "
+                         "host round trip drives K on-device "
+                         "decode+sample steps (temperature-0 output is "
+                         "identical for every K)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -53,10 +53,12 @@ def paged_cache_specs(cfg: ModelConfig, b: int, max_len: int,
 
     The pool holds ``pool_frac`` of the worst-case ``b * max_len`` token
     capacity (continuous batching's bet: live tokens << max_len); the
-    page table still spans the full ``max_len`` per request.  Leaves
-    carry the leading layer-scan axis exactly as the engine builds them,
-    so ``build_serve_step`` lowers unchanged -- the paged dispatch is
-    cache-structure-driven."""
+    page table still spans the full ``max_len`` per request.  Pool
+    leaves carry the leading layer-scan axis exactly as the engine
+    builds them; ``page_table (B, NP)`` / ``positions (B,)`` sit once
+    at the top level (uploaded once, broadcast inside the layer scan --
+    never tiled L x), so ``build_serve_step`` lowers unchanged -- the
+    paged dispatch is cache-structure-driven."""
     from ..kernels.flash_decode import default_kv_block
     from ..serve.paged_kv import PagedKVPool
     PagedKVPool.validate_family(cfg)
@@ -69,9 +71,8 @@ def paged_cache_specs(cfg: ModelConfig, b: int, max_len: int,
     npp = max_len // psize
     n_pages = max(int(pool_frac * b * npp), npp)
     specs = PagedKVPool.device_specs(cfg, n_pages, psize, kv_group)
-    L = cfg.n_layers
-    specs["page_table"] = _sds((L, b, npp), jnp.int32)
-    specs["positions"] = _sds((L, b), jnp.int32)
+    specs["page_table"] = _sds((b, npp), jnp.int32)
+    specs["positions"] = _sds((b,), jnp.int32)
     return specs
 
 

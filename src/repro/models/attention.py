@@ -504,7 +504,20 @@ def attn_prefill_chunk(p, x, cfg, positions, ctx):
     t = ctx["k"].shape[1]
     kk = jnp.concatenate([ctx["k"].astype(k.dtype), k], axis=1) if t else k
     vv = jnp.concatenate([ctx["v"].astype(v.dtype), v], axis=1) if t else v
-    out = _attend_block(q5, kk, vv, _causal_bias(c, t + c, t),
+    bias = _causal_bias(c, t + c, t)
+    if t:
+        # the carry may be PREALLOCATED at the prompt's page-rounded
+        # length (the engine dynamic-update-slices chunks in instead of
+        # re-concatenating the whole prefix every chunk): only slots
+        # below the chunk's start position hold live context, the rest
+        # are zeros and must not attend.  Live slots add exactly 0.0,
+        # so an exact-width carry (t == start) keeps bitwise parity
+        # with monolithic prefill.
+        kidx = jnp.arange(t + c)
+        ctx_live = (kidx[None] < positions[:, :1]) | (kidx[None] >= t)
+        bias = bias + jnp.where(ctx_live, 0.0,
+                                -1e30)[:, None, None, None, :]
+    out = _attend_block(q5, kk, vv, bias,
                         getattr(cfg, "attn_scores_f32", True))
     out = out.reshape(b, c, cfg.n_heads * hd)
     out = shard(out, "batch", "seq", "heads")
@@ -587,17 +600,15 @@ def attn_decode(p, x, cfg, layer_cache, pos, pad=None):
     hd = q.shape[-1]
     if "k" not in layer_cache:
         q4 = q.reshape(b, cfg.n_kv_heads, g, hd)
-        if pad is None and getattr(cfg, "decode_impl", "blocked") == "flash":
+        if getattr(cfg, "decode_impl", "blocked") == "flash":
             from ..kernels.flash_decode import flash_decode_pallas
             from ..kernels.ops import should_interpret
             out4 = flash_decode_pallas(
                 q4, layer_cache["k_codes"], layer_cache["k_scale"],
                 layer_cache["v_codes"], layer_cache["v_scale"], pos,
-                softcap=cfg.attn_logit_softcap,
+                pad=pad, softcap=cfg.attn_logit_softcap,
                 interpret=should_interpret())
         else:
-            # ragged batches take the XLA path (the fused kernel carries
-            # no pad operand; pad=None is the common serving case)
             out4 = decode_quantized_blocks(q4, layer_cache, pos,
                                            cfg.attn_logit_softcap, pad=pad)
         out = out4.astype(x.dtype).reshape(b, 1, cfg.n_heads * hd)

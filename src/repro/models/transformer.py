@@ -229,6 +229,26 @@ def _scan_or_unroll(body, carry, xs, cfg):
     return carry, ys
 
 
+def _pop_paged_meta(cache):
+    """Split a paged cache into (pool leaves, broadcast meta).
+
+    The paged serving cache carries ONE ``page_table (B, NP)`` (and, for
+    decode, ``positions (B,)``) at the TOP level of the cache dict, next
+    to the L-stacked pool leaves.  The layer scan must not slice these
+    (they have no layer axis), so callers pop them here, inject them
+    into each per-layer cache inside the scan-body closure (a broadcast:
+    every layer reads the same device-resident table), strip them from
+    the per-layer results (or scan would stack them L x into ys), and
+    re-attach them to the output cache so the pytree structure
+    round-trips -- jit donation and the dry-run's ``out_shardings``
+    both key on that structure."""
+    if not (isinstance(cache, dict) and "page_table" in cache):
+        return cache, None
+    meta = {k: cache[k] for k in ("page_table", "positions") if k in cache}
+    rest = {k: v for k, v in cache.items() if k not in meta}
+    return rest, meta
+
+
 def _maybe_remat(fn, cfg):
     if cfg.remat == "none":
         return fn
@@ -256,6 +276,7 @@ def lm_apply(p, batch, cfg, mode: str = "train", cache=None, policy=None):
     x = shard(x, "batch", "seq", "embed")
     mixer = _family_mixer(cfg)
     aux_total = jnp.zeros((), jnp.float32)
+    cache, paged_meta = _pop_paged_meta(cache)
 
     if mixer == "group":
         def body(carry, xs):
@@ -274,13 +295,19 @@ def lm_apply(p, batch, cfg, mode: str = "train", cache=None, policy=None):
         def body(carry, xs):
             x, aux = carry
             lp, lc = xs
+            if paged_meta is not None:
+                lc = dict(lc, **paged_meta)
             lp = quantize_tree(lp, policy, "layers")
             x, c, a = _block_apply(lp, x, cfg, mixer, use_moe, positions,
                                    lc, mode=mode, kv_mask=kv_mask)
+            if paged_meta is not None:
+                c = {k: v for k, v in c.items() if k not in paged_meta}
             return (x, aux + a), c
         body = _maybe_remat(body, cfg)
         (x, aux_total), new_cache = _scan_or_unroll(
             body, (x, aux_total), (p["layers"], cache), cfg)
+    if paged_meta is not None:
+        new_cache = dict(new_cache, **paged_meta)
 
     x = L.rmsnorm(p["final_norm"], x)
     if "lm_head" in p:
@@ -295,9 +322,13 @@ def lm_decode(p, tokens, cfg, cache, pos, pad=None):
     """One decode step: tokens (B, 1) -> (logits (B,1,V), new_cache).
 
     ``pad``: optional (B,) left-pad widths of a ragged batch (threaded to
-    the attention mixers).  A PAGED cache (leaves carry
-    ``page_table``/``positions``) ignores ``pos`` entirely -- each
-    request decodes at its own position."""
+    the attention mixers).  A PAGED cache carries a single top-level
+    ``page_table (B, NP)`` / ``positions (B,)`` pair next to the
+    L-stacked pool leaves; both broadcast into every layer through the
+    scan-body closure (never tiled L x) and ride back out on the
+    returned cache so the pytree structure round-trips for donation /
+    sharding.  Paged decode ignores ``pos`` entirely -- each request
+    decodes at its own position."""
     dtype = jnp.dtype(cfg.dtype)
     if cfg.frontend == "audio":
         # autoregressive over audio codes: embed via lm_head weights^T
@@ -309,6 +340,7 @@ def lm_decode(p, tokens, cfg, cache, pos, pad=None):
     else:
         x = L.embed(p["embed"], tokens, dtype)
     mixer = _family_mixer(cfg)
+    cache, paged_meta = _pop_paged_meta(cache)
 
     if mixer == "group":
         def body(x, xs):
@@ -322,10 +354,16 @@ def lm_decode(p, tokens, cfg, cache, pos, pad=None):
 
         def body(x, xs):
             lp, lc = xs
+            if paged_meta is not None:
+                lc = dict(lc, **paged_meta)
             x, c, _ = _block_apply(lp, x, cfg, mixer, use_moe, None,
                                    lc, pos, mode="decode", pad=pad)
+            if paged_meta is not None:
+                c = {k: v for k, v in c.items() if k not in paged_meta}
             return x, c
         x, new_cache = _scan_or_unroll(body, x, (p["layers"], cache), cfg)
+    if paged_meta is not None:
+        new_cache = dict(new_cache, **paged_meta)
 
     x = L.rmsnorm(p["final_norm"], x)
     if "lm_head" in p:

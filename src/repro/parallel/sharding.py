@@ -308,10 +308,12 @@ def paged_cache_pspec(mesh: Mesh, path: str, shape: Sequence[int]) -> P:
     nd = len(shape)
     specs: list = [None] * nd
     if key in ("page_table", "positions"):
-        got = _fit_axes(shape, axes, 1,
-                        [x for x in DATA_AXES if x in axes]) if nd > 1 else []
+        # (B, NP) / (B,): one top-level copy, batch leads (the layer
+        # scan broadcasts it; there is no layer axis to skip anymore)
+        got = _fit_axes(shape, axes, 0,
+                        [x for x in DATA_AXES if x in axes])
         if got:
-            specs[1] = tuple(got) if len(got) > 1 else got[0]
+            specs[0] = tuple(got) if len(got) > 1 else got[0]
         return P(*specs)
     if "model" in axes:
         for i in reversed(range(min(3, nd - 1), nd)):

@@ -39,10 +39,17 @@ stopped; a PREFILLING victim restarts its prefill from chunk 0),
 retire-on-finish (EOS or token budget) returns pages the same step.
 
 The engine turns that policy into batched steps with a load-bearing
-ORDER: capacity for the running batch first, then admission, then
-chunked prefill inside a per-step token budget
-(``prefill_chunk_tokens``), then one fixed-shape batched decode for
-everyone running, per-row sampling and retirement.  Admitting before
+ORDER: capacity for the running batch first (pre-claiming the whole
+``decode_steps`` window), then admission, then chunked prefill inside
+a per-step token budget (``prefill_chunk_tokens``), then ONE
+device-resident decode dispatch for everyone running -- ``decode_steps``
+fused decode+sample iterations under a single ``lax.scan`` (greedy
+argmax or seeded per-(request, token-index) categorical; positions
+bump on device; rows hitting EOS / budget mid-scan freeze and re-map
+their writes to the parking page) -- then retirement from the one
+``(B, K)`` token sync.  The ``(B, NP)`` page table is epoch-cached on
+device: it re-uploads only when the scheduler's mapping epoch or the
+batch row order changes.  Admitting before
 capacity (the PR 3 order) let a newcomer take the last free page only
 to be preempted as the youngest victim in the same step -- its whole
 prefill wasted, every step, while pool pressure lasted.  The token

@@ -19,6 +19,7 @@ examples while keeping the step function identical to the dry-run cell.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -105,17 +106,46 @@ def build_prefill_chunk_step(cfg: ModelConfig,
     return chunk_step
 
 
-def build_serve_step(cfg: ModelConfig, ragged: bool = False):
+def build_serve_step(cfg: ModelConfig, ragged: bool = False,
+                     sample: bool = False):
     """(params, tokens (B,1), cache, pos) -> (logits, new_cache).
 
     ``ragged=True`` adds a trailing ``pad`` operand ((B,) left-pad
     widths): RoPE positions shift per request and pad cache slots are
     masked, so a left-padded mixed-length batch decodes like its
-    unpadded per-request selves."""
+    unpadded per-request selves.
+
+    ``sample=True`` fuses sampling into the step: two more trailing
+    operands ``(key, temperature)`` and the step returns
+    ``(next_tokens (B, 1) int32, new_cache)`` instead of logits -- the
+    ``(B, vocab)`` logits never leave the device.  ``temperature`` is a
+    traced scalar (one compiled step serves both regimes;
+    ``lax.cond`` picks greedy argmax vs seeded categorical at run
+    time), and both branches keep the host sampler's exact semantics:
+    first-occurrence argmax tie-breaking, categorical over
+    ``logits / temperature`` in the logits' own dtype."""
+
+    def _next(logits, key, temperature):
+        lg = logits[:, -1]
+        return jax.lax.cond(
+            temperature > 0,
+            lambda: jax.random.categorical(
+                key, lg / temperature).astype(jnp.int32),
+            lambda: jnp.argmax(lg, -1).astype(jnp.int32))[:, None]
 
     if ragged:
-        def serve_step(params, tokens, cache, pos, pad):
-            return zoo.decode_model(params, tokens, cfg, cache, pos, pad)
+        if sample:
+            def serve_step(params, tokens, cache, pos, pad, key, temperature):
+                logits, cache = zoo.decode_model(params, tokens, cfg, cache,
+                                                 pos, pad)
+                return _next(logits, key, temperature), cache
+        else:
+            def serve_step(params, tokens, cache, pos, pad):
+                return zoo.decode_model(params, tokens, cfg, cache, pos, pad)
+    elif sample:
+        def serve_step(params, tokens, cache, pos, key, temperature):
+            logits, cache = zoo.decode_model(params, tokens, cfg, cache, pos)
+            return _next(logits, key, temperature), cache
     else:
         def serve_step(params, tokens, cache, pos):
             return zoo.decode_model(params, tokens, cfg, cache, pos)
@@ -145,6 +175,12 @@ class ServeEngine:
             quantized_kv=self.quantized_kv, kv_group=kv_group))
         self._step = jax.jit(build_serve_step(self.cfg))
         self._step_ragged = jax.jit(build_serve_step(self.cfg, ragged=True))
+        # generate() runs on the fused-sampling variants: tokens come
+        # back (B, 1) int32 and accumulate on device; the (B, vocab)
+        # logits never cross to host
+        self._gen_step = jax.jit(build_serve_step(self.cfg, sample=True))
+        self._gen_step_ragged = jax.jit(
+            build_serve_step(self.cfg, ragged=True, sample=True))
 
     def generate(self, tokens: jax.Array, steps: int,
                  temperature: float = 0.0, key=None,
@@ -177,25 +213,26 @@ class ServeEngine:
         # the last_logit_only logits feed sampling for ragged batches too.
         logits, cache = self._prefill(self.params, batch)
         cache = self._pad_cache(cache, b)
-        out = [np.asarray(tokens)]
         last = jnp.argmax(logits, -1).astype(jnp.int32)     # (B, 1)
         key = key if key is not None else jax.random.PRNGKey(0)
+        temp = jnp.float32(temperature)
+        # device-resident loop: each fused step returns the (B, 1)
+        # sampled token that feeds the next step; tokens accumulate on
+        # device and transfer ONCE at the end -- no per-step logits (or
+        # token) sync.  The key splits unconditionally (same sequence
+        # the host sampler consumed when temperature > 0; unused at 0).
+        outs = [jnp.asarray(tokens)]
         for i in range(steps):
-            out.append(np.asarray(last))
+            outs.append(last)
+            key, sub = jax.random.split(key)
             if pad is None:
-                logits, cache = self._step(self.params, last,
-                                           cache, jnp.int32(s0 + i))
+                last, cache = self._gen_step(
+                    self.params, last, cache, jnp.int32(s0 + i), sub, temp)
             else:
-                logits, cache = self._step_ragged(
-                    self.params, last, cache, jnp.int32(s0 + i), pad)
-            lg = logits[:, -1]
-            if temperature > 0:
-                key, sub = jax.random.split(key)
-                last = jax.random.categorical(
-                    sub, lg / temperature)[:, None].astype(jnp.int32)
-            else:
-                last = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
-        return np.concatenate(out, axis=1)
+                last, cache = self._gen_step_ragged(
+                    self.params, last, cache, jnp.int32(s0 + i), pad, sub,
+                    temp)
+        return np.asarray(jnp.concatenate(outs, axis=1))
 
     # cache leaves with a sequence axis, all laid out (L, B, S, H, ...):
     # bf16 k/v, posit8 codes, and their (..., Gs) scale tensors
@@ -236,6 +273,78 @@ class ServeEngine:
 # ---------------------------------------------------------------------------
 # Continuous batching over the paged posit8 KV pool
 # ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _ctx_write(buf: jax.Array, chunk: jax.Array, start) -> jax.Array:
+    """dynamic_update_slice one bf16 KV chunk (L, 1, C, Kh, Dh) into the
+    preallocated prefill carry at seq offset ``start``.  The carry is
+    donated, so XLA updates the resident buffer instead of copying the
+    whole prefix per chunk (the old per-chunk concatenate was O(T^2)
+    bytes over a T-token prefill)."""
+    return jax.lax.dynamic_update_slice(buf, chunk, (0, 0, start, 0, 0))
+
+
+def _build_decode_loop(cfg: ModelConfig, temperature: float, k_steps: int):
+    """Build the device-resident K-step decode dispatch of the
+    continuous engine.
+
+    (params, tokens (B,1), positions (B,), cache {pool leaves},
+     page_table (B,NP), done (B,) bool, budget (B,), eos (B,),
+     rids (B,), gen_idx (B,), key) -> (sampled (B, K) int32, new cache)
+
+    One jitted call runs ``k_steps`` decode+sample iterations in a
+    ``lax.scan``: fused sampling (greedy argmax / per-request seeded
+    categorical at build-time ``temperature``), device-side position
+    bumps, and an on-device done-mask.  A row finishes mid-scan when it
+    samples its ``eos`` id or exhausts its remaining token ``budget``;
+    finished (and padded) rows freeze their token/position and re-map
+    their page-table row to the parking page, so their remaining
+    iterations write page 0 at position 0 -- no-op DMAs that cannot
+    touch live pages (paged_kv.PARKING_PAGE).  The host syncs only the
+    (B, K) token buffer per dispatch; the (B, vocab) logits never leave
+    the device.
+
+    Categorical sampling draws row r's token i from the per-request
+    stream ``fold_in(fold_in(key, rids[r]), gen_idx[r] + i)`` -- a
+    function of (seed, request, token index) only, so the sampled
+    sequence is invariant to K, batching and scheduling.
+    """
+    from .paged_kv import PARKING_PAGE
+
+    def loop(params, tokens, positions, cache, page_table, done, budget,
+             eos, rids, gen_idx, key):
+        def body(carry, _):
+            tokens, positions, done, budget, gen_idx, cache = carry
+            step_cache = dict(cache)
+            step_cache["page_table"] = jnp.where(
+                done[:, None], PARKING_PAGE, page_table)
+            step_cache["positions"] = jnp.where(done, 0, positions)
+            logits, new_cache = zoo.decode_model(
+                params, tokens, cfg, step_cache, jnp.int32(0))
+            new_cache.pop("page_table")
+            new_cache.pop("positions")
+            lg = logits[:, 0].astype(jnp.float32)            # (B, V)
+            if temperature > 0:
+                sub = jax.vmap(lambda r, i: jax.random.fold_in(
+                    jax.random.fold_in(key, r), i))(rids, gen_idx)
+                nxt = jax.vmap(lambda k_, row: jax.random.categorical(
+                    k_, row / temperature))(sub, lg).astype(jnp.int32)
+            else:
+                nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            nxt = jnp.where(done, tokens[:, 0], nxt)         # freeze dead rows
+            budget = jnp.where(done, budget, budget - 1)
+            new_done = done | (nxt == eos) | (budget <= 0)
+            positions = jnp.where(done, positions, positions + 1)
+            gen_idx = jnp.where(done, gen_idx, gen_idx + 1)
+            return ((nxt[:, None], positions, new_done, budget, gen_idx,
+                     new_cache), nxt)
+        carry0 = (tokens, positions, done, budget, gen_idx, cache)
+        (_, _, _, _, _, cache), toks = jax.lax.scan(
+            body, carry0, None, length=k_steps)
+        return toks.T, cache                                 # (B, K)
+
+    return loop
+
 
 @dataclasses.dataclass
 class ContinuousEngine:
@@ -317,6 +426,13 @@ class ContinuousEngine:
     # page table)
     prefill_context: Optional[str] = None
     prefix_cache: bool = False
+    # decode iterations per jitted dispatch: one host round trip drives
+    # K on-device decode+sample steps (positions bump on device; rows
+    # that hit EOS / budget mid-scan freeze and re-map their writes to
+    # the parking page).  Temperature-0 outputs are identical for every
+    # K; K only trades host round trips against (at most K-1) wasted
+    # tail iterations per dispatch.
+    decode_steps: int = 1
 
     def __post_init__(self):
         from ..kernels.flash_decode import default_kv_block
@@ -361,6 +477,9 @@ class ContinuousEngine:
                 "prefix THROUGH the page table: use "
                 "prefill_context='pages' (the default when prefix_cache "
                 "is set)")
+        if self.decode_steps < 1:
+            raise ValueError(
+                f"decode_steps={self.decode_steps} must be >= 1")
         pool = PagedKVPool(self.cfg, self.n_pages, self.page_size, kv_group)
         self.scheduler = Scheduler(pool, self.max_batch,
                                    max_pages_per_req=self.max_pages_per_req,
@@ -378,17 +497,29 @@ class ContinuousEngine:
         # requests -- the same transient a monolithic prefill held.
         self._prefill_ctx: Dict[int, Any] = {}
 
-        def step(params, tokens, cache):
-            # pos operand is dead on the paged path: positions ride in
-            # the cache (per request), broadcast over the layer scan
-            return zoo.decode_model(params, tokens, self.cfg, cache,
-                                    jnp.int32(0))
-        self._step = jax.jit(step, donate_argnums=(2,))
-        self._key = jax.random.PRNGKey(self.seed)
+        # the device-resident K-step decode dispatch (fused sampling +
+        # lax.scan over decode_steps iterations); only the pool cache
+        # (arg 3) is donated -- the epoch-cached page table must stay
+        # resident across dispatches
+        self._decode_loop = jax.jit(
+            _build_decode_loop(self.cfg, self.temperature,
+                               self.decode_steps),
+            donate_argnums=(3,))
+        self._base_key = jax.random.PRNGKey(self.seed)
+        # epoch-cached device page table: re-uploaded only when the
+        # scheduler epoch or the running-row order changed
+        self._pt_dev = None
+        self._pt_epoch = -1
+        self._pt_rows: List[int] = []
         self.steps_run = 0
         self.prefill_tokens_computed = 0     # real tokens forwarded (cache
         #                                      hits skip their matched prefix)
-        # positions the LAST decode step actually served (requests that
+        self.decode_dispatches = 0           # jitted decode-loop calls
+        self.page_table_uploads = 0          # (B, NP) host->device uploads
+        self.logits_host_bytes = 0           # device->host logits traffic
+        #                                      (stays 0: sampling is fused)
+        self.token_host_bytes = 0            # device->host sampled-token sync
+        # positions the LAST decode dispatch started from (requests that
         # retired within the step included) -- the per-step KV-traffic
         # ground truth benchmarks read; [] when the step decoded nothing
         self.last_positions: List[int] = []
@@ -414,22 +545,38 @@ class ContinuousEngine:
 
     # -- sampling -----------------------------------------------------------
 
-    def _sample(self, lg: np.ndarray) -> int:
-        """One token from one (V,) logit row (greedy at temperature 0,
-        matching ``ServeEngine``'s argmax tie-breaking)."""
+    def _sample(self, lg: np.ndarray, req) -> int:
+        """One token from one (V,) logit row -- the HOST twin of the
+        device loop's fused sampler, used only for the first token at
+        prefill completion.  Greedy matches jnp/np argmax tie-breaking;
+        categorical draws from the same per-request stream
+        ``fold_in(fold_in(base_key, rid), token_index)`` the device
+        scan uses, so a request's sampled sequence does not depend on
+        where (host or device) or in which dispatch a token fell."""
         if self.temperature <= 0:
             return int(np.argmax(lg))
-        self._key, sub = jax.random.split(self._key)
+        sub = jax.random.fold_in(
+            jax.random.fold_in(self._base_key, req.rid), len(req.generated))
         return int(jax.random.categorical(
-            sub, jnp.asarray(lg) / self.temperature))
+            sub, jnp.asarray(lg, jnp.float32) / self.temperature))
 
     # -- one engine step ----------------------------------------------------
 
-    def _empty_ctx(self):
+    def _empty_ctx(self, width: int = 0):
         hd = self.cfg.resolved_head_dim
-        z = jnp.zeros((self.cfg.n_layers, 1, 0, self.cfg.n_kv_heads, hd),
-                      jnp.bfloat16)
-        return {"k": z, "v": z}
+        shape = (self.cfg.n_layers, 1, width, self.cfg.n_kv_heads, hd)
+        # distinct buffers: k and v are donated independently to
+        # _ctx_write, so they must not alias
+        return {"k": jnp.zeros(shape, jnp.bfloat16),
+                "v": jnp.zeros(shape, jnp.bfloat16)}
+
+    def _decode_horizon(self, req) -> int:
+        """Pages to pre-claim for: the decode slots the next dispatch
+        can write for ``req`` -- at most ``decode_steps``, capped by its
+        remaining token budget (a row past its budget freezes on the
+        parking page and writes nothing)."""
+        return min(self.decode_steps,
+                   max(req.max_new_tokens - len(req.generated), 1))
 
     def _prefill_chunk(self, req) -> int:
         """Run at most ONE prefill chunk for ``req``: allocate the pages
@@ -459,11 +606,11 @@ class ContinuousEngine:
         toks[0, :real] = prefix[start:start + real]
         start_arr = jnp.full((1,), start, jnp.int32)
         if self.prefill_context == "pages":
-            L = self.cfg.n_layers
             pt = np.zeros((1, self.max_pages_per_req), np.int32)
             pt[0, :len(req.pages)] = req.pages
             cache = self.pool.device_state()
-            cache["page_table"] = jnp.tile(jnp.asarray(pt)[None], (L, 1, 1))
+            # (1, NP), untiled: the layer scan broadcasts it
+            cache["page_table"] = jnp.asarray(pt)
             logits, new_cache = self._chunk_step_paged(
                 self.params, jnp.asarray(toks), cache, start_arr)
             self.pool.set_device_state(
@@ -477,14 +624,22 @@ class ContinuousEngine:
                 self.params, jnp.asarray(toks), ctx, start_arr)
             self.pool.write_chunk(chunk_q, req.pages, start)
             if start + real < ln:        # full chunk: extend the carry
+                if ctx["k"].shape[2] == 0:
+                    # preallocate ONCE at the prompt's page-rounded
+                    # length; later chunks dynamic-update-slice into the
+                    # donated buffer.  (The first chunk always runs on
+                    # the width-0 ctx, so single-chunk prefills never
+                    # touch -- or trace -- the preallocated shape.)
+                    width = self.pool.pages_for(ln) * self.page_size
+                    ctx = self._empty_ctx(width)
                 self._prefill_ctx[req.rid] = {
-                    "k": jnp.concatenate([ctx["k"], kv["k"]], axis=2),
-                    "v": jnp.concatenate([ctx["v"], kv["v"]], axis=2)}
+                    "k": _ctx_write(ctx["k"], kv["k"], jnp.int32(start)),
+                    "v": _ctx_write(ctx["v"], kv["v"], jnp.int32(start))}
         req.prefilled = start + real
         self.prefill_tokens_computed += real
         if req.prefilled == ln:
             self._prefill_ctx.pop(req.rid, None)
-            nxt = self._sample(np.asarray(logits[0, real - 1]))
+            nxt = self._sample(np.asarray(logits[0, real - 1]), req)
             req.generated.append(nxt)
             req.next_token = nxt
             sched.prefill_complete(req)
@@ -492,9 +647,10 @@ class ContinuousEngine:
 
     def step(self) -> int:
         """One engine step: capacity for the running batch FIRST, then
-        admission, chunked prefill within the token budget, one batched
-        decode for everyone running, retirement.  Returns decoded
-        request count.
+        admission, chunked prefill within the token budget, ONE
+        device-resident decode dispatch (``decode_steps`` fused
+        decode+sample iterations) for everyone running, retirement.
+        Returns decoded request count.
 
         The ordering is load-bearing: PR 3 admitted (and fully
         prefilled) newcomers BEFORE ensuring capacity for the running
@@ -504,10 +660,11 @@ class ContinuousEngine:
         lasted.  Capacity-first means a newcomer is only admitted
         against pages the running batch did not need this step."""
         sched = self.scheduler
-        # (1) grow the already-running requests' page tables
+        # (1) grow the already-running requests' page tables (pre-claim
+        # the whole decode_steps window: no page can be missing mid-scan)
         for req in list(sched.running):
             if req.status == RUNNING:    # a victim may drop mid-loop
-                sched.ensure_capacity(req)
+                sched.ensure_capacity(req, horizon=self._decode_horizon(req))
         # (2) admit against the unclaimed remainder
         self.last_admitted = [r.rid for r in sched.admit()]
         # (3) chunked prefill, oldest first, inside the token budget:
@@ -526,38 +683,68 @@ class ContinuousEngine:
         live = {r.rid for r in sched.running if r.status == PREFILLING}
         for rid in [r for r in self._prefill_ctx if r not in live]:
             del self._prefill_ctx[rid]
-        # (4) one batched decode for everyone RUNNING (newly promoted
-        # requests may still need the page their first decode write
-        # lands in -- their admission gate already reserved budget for
-        # it, so this never preempts a same-step admission)
+        # (4) ONE batched K-step decode dispatch for everyone RUNNING
+        # (newly promoted requests may still need pages their decode
+        # window writes -- their admission gate already reserved budget
+        # for the first write, so this never preempts a same-step
+        # admission)
+        K = self.decode_steps
         running = []
         for req in list(sched.running):
-            if req.status == RUNNING and sched.ensure_capacity(req):
+            if req.status == RUNNING and sched.ensure_capacity(
+                    req, horizon=self._decode_horizon(req)):
                 running.append(req)
         self.last_positions = [req.position for req in running]
         if not running:
             return 0
-        b, npp = self.max_batch, self.max_pages_per_req
+        b = self.max_batch
         tokens = np.zeros((b, 1), np.int32)
         positions = np.zeros((b,), np.int32)
-        page_table = np.zeros((b, npp), np.int32)   # pad rows park on page 0
+        done = np.ones((b,), bool)           # padding rows stay dead
+        budget = np.zeros((b,), np.int32)
+        eos = np.full((b,), -1, np.int32)    # -1: matches no vocab id
+        rids = np.zeros((b,), np.int32)
+        gen_idx = np.zeros((b,), np.int32)
         for row, req in enumerate(running):
             tokens[row, 0] = req.next_token
             positions[row] = req.position
-            page_table[row, :len(req.pages)] = req.pages
-        L = self.cfg.n_layers
-        cache = self.pool.device_state()
-        cache["page_table"] = jnp.tile(
-            jnp.asarray(page_table)[None], (L, 1, 1))
-        cache["positions"] = jnp.tile(jnp.asarray(positions)[None], (L, 1))
-        logits, new_cache = self._step(self.params, jnp.asarray(tokens),
-                                       cache)
+            done[row] = False
+            budget[row] = req.max_new_tokens - len(req.generated)
+            if req.eos_id is not None:
+                eos[row] = req.eos_id
+            rids[row] = req.rid
+            gen_idx[row] = len(req.generated)
+        # epoch-cached device page table: an unchanged (epoch, rows)
+        # pair means every row is bit-identical to the resident copy
+        rows = [req.rid for req in running]
+        if self._pt_dev is None or sched.epoch != self._pt_epoch \
+                or rows != self._pt_rows:
+            page_table = np.zeros((b, self.max_pages_per_req), np.int32)
+            for row, req in enumerate(running):
+                page_table[row, :len(req.pages)] = req.pages
+            self._pt_dev = jnp.asarray(page_table)
+            self._pt_epoch = sched.epoch
+            self._pt_rows = rows
+            self.page_table_uploads += 1
+        toks_dev, new_cache = self._decode_loop(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            self.pool.device_state(), self._pt_dev, jnp.asarray(done),
+            jnp.asarray(budget), jnp.asarray(eos), jnp.asarray(rids),
+            jnp.asarray(gen_idx), self._base_key)
         self.pool.set_device_state(new_cache)
-        lg = np.asarray(logits[:, 0].astype(jnp.float32))
+        self.decode_dispatches += 1
+        toks = np.asarray(toks_dev)          # the ONE (B, K) host sync
+        self.token_host_bytes += toks.nbytes
+        # replay the device done-logic on host: walk each row's tokens
+        # until its budget or EOS froze it (later slots are frozen
+        # copies the scan never wrote anywhere live)
         for row, req in enumerate(running):
-            nxt = self._sample(lg[row])
-            req.generated.append(nxt)
-            req.next_token = nxt
+            for j in range(min(K, int(budget[row]))):
+                nxt = int(toks[row, j])
+                req.generated.append(nxt)
+                req.next_token = nxt
+                if req.done:
+                    break
             if req.done:
                 sched.retire(req)
         self.steps_run += 1
@@ -572,6 +759,10 @@ class ContinuousEngine:
         warm-up left cached -- becomes the new peak baseline."""
         self.steps_run = 0
         self.prefill_tokens_computed = 0
+        self.decode_dispatches = 0
+        self.page_table_uploads = 0
+        self.logits_host_bytes = 0
+        self.token_host_bytes = 0
         self.pool.alloc_peak = self.pool.used_pages
         sched = self.scheduler
         sched.preemption_count = 0

@@ -80,9 +80,17 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models.attention import kv_scale_cols
 
-__all__ = ["PagedKVPool", "paged_kv_bytes_per_step"]
+__all__ = ["PARKING_PAGE", "PagedKVPool", "paged_kv_bytes_per_step"]
 
 _POOL_KEYS = ("k_codes", "v_codes", "k_scale", "v_scale")
+
+# Page 0 is never allocated: padded batch rows -- and, in the multi-step
+# decode dispatch, rows whose request finished mid-scan -- re-map their
+# writes here (page-table row of zeros, position 0), so dead decode
+# iterations are no-op DMAs against one scratch page instead of
+# corrupting live pages.  Its scales initialize to the neutral 1.0, so
+# even a masked read through it dequantizes to finite values.
+PARKING_PAGE = 0
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))

@@ -295,6 +295,16 @@ class Scheduler:
         self.wasted_prefill_tokens = 0        # prefix KV tossed by preemption
         self.preempted_log: List[int] = []    # rids, in preemption order
         self.retired_log: List[int] = []      # rids, in retirement order
+        # batch epoch: bumped on every transition that can change any
+        # request's page-table row (admission, prefill completion, page
+        # growth, preemption, retirement).  The engine keys its device-
+        # resident page-table upload on this: an unchanged epoch + an
+        # unchanged running set means every row is bit-identical, so the
+        # decode dispatch re-uses the resident (B, NP) table instead of
+        # rebuilding + re-uploading it.  Bumping liberally is safe (one
+        # redundant small upload); missing a bump would corrupt decode,
+        # so every pages-touching mutation above bumps it.
+        self.epoch = 0
 
     # -- queue --------------------------------------------------------------
 
@@ -374,6 +384,8 @@ class Scheduler:
                 self.prefix.hit_tokens += head.cached_tokens
             self.running.append(head)
             admitted.append(head)
+        if admitted:
+            self.epoch += 1
         return admitted
 
     def prefill_complete(self, req: Request) -> None:
@@ -383,6 +395,7 @@ class Scheduler:
         prompt pages register in the index and become shareable."""
         assert req.status == PREFILLING, req.status
         req.status = RUNNING
+        self.epoch += 1
         if self.prefix is not None:
             self.prefix.insert(req.prompt, req.pages)
 
@@ -393,10 +406,12 @@ class Scheduler:
         then LRU eviction of unreferenced prefix-cache pages, and only
         when the cache is bone-dry preempt the youngest request.  False
         if ``req`` itself was preempted (it is no longer running)."""
+        grew = False
         while need_pages > len(req.pages):
             got = self.pool.alloc(1)
             if got is not None:
                 req.pages.extend(got)
+                grew = True
                 continue
             if self.prefix is not None and self.prefix.evict(1):
                 continue
@@ -404,12 +419,18 @@ class Scheduler:
             self.preempt(victim)
             if victim is req:
                 return False
+        if grew:
+            self.epoch += 1
         return True
 
-    def ensure_capacity(self, req: Request) -> bool:
-        """Make sure ``req`` owns the page its next decode write lands
-        in.  False if ``req`` itself was preempted."""
-        return self._grow(req, req.position // self.pool.page_size + 1)
+    def ensure_capacity(self, req: Request, horizon: int = 1) -> bool:
+        """Make sure ``req`` owns every page the next ``horizon`` decode
+        writes land in (slots ``position .. position+horizon-1``) --
+        the multi-step decode dispatch pre-claims its whole window up
+        front, so no page can be missing mid-scan (``horizon=1`` is the
+        single-step behavior).  False if ``req`` itself was preempted."""
+        last = req.position + max(int(horizon), 1) - 1
+        return self._grow(req, last // self.pool.page_size + 1)
 
     def ensure_prefill_capacity(self, req: Request, upto: int) -> bool:
         """Make sure ``req`` owns every page for prefix slots
@@ -444,6 +465,7 @@ class Scheduler:
         self.preempted_log.append(req.rid)
         self.running.remove(req)
         self.waiting.appendleft(req)
+        self.epoch += 1
 
     # -- retirement ---------------------------------------------------------
 
@@ -459,3 +481,4 @@ class Scheduler:
         self.running.remove(req)
         self.finished[req.rid] = req
         self.retired_log.append(req.rid)
+        self.epoch += 1

@@ -1,0 +1,234 @@
+"""Device-resident decode loop (PR 6): K fused decode+sample iterations
+per jitted dispatch.  Temperature-0 output must be IDENTICAL for every
+``decode_steps`` -- against the static per-request oracle, through
+mid-scan EOS, preemption pressure and prefix-cache sharing -- and the
+epoch-cached page table must only re-upload when the mapping changed."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve import ContinuousEngine, PagedKVPool, Scheduler, ServeEngine
+
+CFG = get_config("qwen2-0.5b").reduced()
+RNG = np.random.default_rng(7)
+
+
+def _params():
+    return T.lm_init(jax.random.PRNGKey(0), CFG)
+
+
+PARAMS = _params()
+
+
+def _reqs(spec):
+    return [(RNG.integers(0, CFG.vocab, (ln,)).astype(np.int32), gn)
+            for ln, gn in spec]
+
+
+def _run(reqs, k_steps, **kw):
+    kw.setdefault("n_pages", 40)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("max_len", 48)
+    eng = ContinuousEngine(CFG, PARAMS, decode_steps=k_steps, **kw)
+    rids = [eng.submit(p, g) for p, g in reqs]
+    out = eng.run()
+    if not kw.get("prefix_cache"):
+        # drained (prefix caching intentionally retains cached pages)
+        assert eng.pool.used_pages == 0
+    return [out[r] for r in rids], eng
+
+
+# ---------------------------------------------------------------------------
+# temperature-0 parity: the pinned invariant, for every K
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k_steps", [1, 4])
+def test_decode_loop_matches_static_per_request(k_steps):
+    """Ragged overlapping requests decoded K at a time match the static
+    per-request oracle token for token: a dead row's frozen iterations
+    (parking-page writes, position 0) must not perturb live rows."""
+    reqs = _reqs([(3, 6), (5, 12), (8, 4), (10, 20), (4, 9), (7, 15)])
+    out, _ = _run(reqs, k_steps)
+    static = ServeEngine(CFG, PARAMS, max_len=48, quantized_kv=True)
+    for got, (p, g) in zip(out, reqs):
+        want = static.generate(jnp.asarray(p)[None], steps=g)[0]
+        np.testing.assert_array_equal(got, want)
+
+
+def test_decode_loop_eos_mid_scan():
+    """An EOS landing in the MIDDLE of the K-step scan (not on a
+    dispatch boundary) retires the request at exactly the K=1 length;
+    the frozen tail iterations write only to the parking page."""
+    p = RNG.integers(0, CFG.vocab, (5,)).astype(np.int32)
+    (gen,), _ = _run([(p, 12)], 1, n_pages=12, max_batch=2)
+    gen = gen[p.size:]
+    # an unrepeated token at a stream index that is NOT -1 mod 4, so at
+    # K=4 the row really freezes mid-scan
+    k = max(i for i, v in enumerate(gen)
+            if v not in gen[:i] and i < gen.size - 1 and (i + 1) % 4)
+    eos = int(gen[k])
+    for k_steps in (1, 4):
+        (out,), eng = _run([(p, 12)], k_steps, n_pages=12, max_batch=2,
+                           eos_id=eos)
+        assert out.size == p.size + k + 1 and out[-1] == eos, k_steps
+        assert eng.pool.used_pages == 0
+
+
+def test_decode_loop_preemption_pressure():
+    """A starved pool preempts mid-run at K=4: the run stays
+    deterministic, every page returns, and requests that were never
+    preempted still match the ample-pool K=1 stream exactly."""
+    reqs = _reqs([(10, 20), (12, 18), (9, 22), (11, 16)])
+    kw = dict(page_size=8, max_batch=4, max_len=40)
+    ample, _ = _run(reqs, 1, n_pages=32, **kw)
+    starved, eng = _run(reqs, 4, n_pages=7, **kw)
+    starved2, _ = _run(reqs, 4, n_pages=7, **kw)
+    assert eng.scheduler.preemption_count > 0
+    pre = [eng.scheduler.finished[r].preemptions
+           for r in sorted(eng.scheduler.finished)]
+    for a, b in zip(starved, starved2):
+        np.testing.assert_array_equal(a, b)
+    for out_a, out_s, n_pre in zip(ample, starved, pre):
+        if n_pre == 0:
+            np.testing.assert_array_equal(out_a, out_s)
+
+
+def test_decode_loop_prefix_cache_parity():
+    """Shared-preamble requests decoded K=4 reproduce the K=1 stream:
+    copy-on-write page sharing and the epoch cache compose.  The first
+    sharer prefills ALONE so its preamble pages are published before
+    the later arrivals are admitted (else nobody hits)."""
+    pre = RNG.integers(0, CFG.vocab, (16,)).astype(np.int32)
+    reqs = [(np.concatenate([pre, t]).astype(np.int32), g)
+            for t, g in [(RNG.integers(0, CFG.vocab, (3,)), 6),
+                         (RNG.integers(0, CFG.vocab, (5,)), 8),
+                         (RNG.integers(0, CFG.vocab, (2,)), 7)]]
+
+    def run(k_steps):
+        eng = ContinuousEngine(CFG, PARAMS, decode_steps=k_steps,
+                               n_pages=40, page_size=16, max_batch=4,
+                               max_len=48, prefill_chunk_tokens=16,
+                               prefix_cache=True)
+        rids = [eng.submit(*reqs[0])]
+        for _ in range(3):               # publish the preamble pages
+            eng.step()
+        rids += [eng.submit(p, g) for p, g in reqs[1:]]
+        out = eng.run()
+        return [out[r] for r in rids], eng
+
+    base, eng1 = run(1)
+    k4, eng4 = run(4)
+    assert eng4.scheduler.prefix.hits == eng1.scheduler.prefix.hits > 0
+    for a, b in zip(base, k4):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# seeded sampling: per-(request, token-index) streams are K-invariant
+# ---------------------------------------------------------------------------
+
+def test_decode_loop_seeded_sampling_k_invariant():
+    """temperature > 0: the fused sampler folds (rid, token index) into
+    the engine seed, so the SAME seed yields the SAME stream for every
+    K, and a different seed yields a different stream."""
+    reqs = _reqs([(4, 10), (6, 8)])
+    kw = dict(max_batch=4, temperature=0.8)
+    a, _ = _run(reqs, 1, seed=3, **kw)
+    b, _ = _run(reqs, 4, seed=3, **kw)
+    c, _ = _run(reqs, 4, seed=4, **kw)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+def test_static_fused_sampling_deterministic():
+    """ServeEngine.generate samples on device: same key -> identical
+    output, different key -> different tokens, temperature 0 ignores
+    the key entirely."""
+    eng = ServeEngine(CFG, PARAMS, max_len=32, quantized_kv=True)
+    toks = jnp.asarray(RNG.integers(0, CFG.vocab, (2, 5)), jnp.int32)
+    k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+    a = eng.generate(toks, steps=8, temperature=0.7, key=k1)
+    b = eng.generate(toks, steps=8, temperature=0.7, key=k1)
+    c = eng.generate(toks, steps=8, temperature=0.7, key=k2)
+    g1 = eng.generate(toks, steps=8, temperature=0.0, key=k1)
+    g2 = eng.generate(toks, steps=8, temperature=0.0, key=k2)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    np.testing.assert_array_equal(g1, g2)
+
+
+# ---------------------------------------------------------------------------
+# page-table epoch cache
+# ---------------------------------------------------------------------------
+
+def _sched(n_pages=8, page_size=4, max_batch=4):
+    return Scheduler(PagedKVPool(CFG, n_pages, page_size), max_batch)
+
+
+def test_epoch_bumps_on_every_mapping_change():
+    """admit / prefill_complete / page growth / preempt / retire each
+    advance the scheduler epoch (a missed bump would leave a stale page
+    table resident on device: silent KV corruption)."""
+    s = _sched(n_pages=6, page_size=4, max_batch=4)
+    e = s.epoch
+    s.submit(np.arange(1, 7, dtype=np.int32), 8)
+    s.submit(np.arange(1, 7, dtype=np.int32), 8)
+    a, b = s.admit()
+    assert s.epoch > e
+    e = s.epoch
+    assert s.ensure_prefill_capacity(a, 6)
+    a.prefilled = 6
+    s.prefill_complete(a)
+    assert s.epoch > e                   # completion changes the row
+    e = s.epoch
+    a.generated = [9, 9, 9]              # position 9 -> needs a 3rd page
+    assert s.ensure_capacity(a)
+    assert s.epoch > e                   # growth remaps
+    e = s.epoch
+    assert s.ensure_capacity(a) is True  # no growth needed...
+    assert s.epoch == e                  # ...no spurious bump
+    s.preempt(a)
+    assert s.epoch > e
+    e = s.epoch
+    assert s.ensure_prefill_capacity(b, 6)
+    b.prefilled = 6
+    s.prefill_complete(b)
+    e = s.epoch
+    s.retire(b)
+    assert s.epoch > e
+
+
+def test_horizon_preclaims_whole_scan_window():
+    """ensure_capacity(horizon=K) must cover position..position+K-1: a
+    page missing mid-scan would be an unaddressable device write."""
+    s = _sched(n_pages=8, page_size=4, max_batch=2)
+    s.submit(np.arange(1, 4, dtype=np.int32), 16)
+    (r,) = s.admit()
+    assert s.ensure_prefill_capacity(r, 3)
+    r.prefilled = 3
+    s.prefill_complete(r)
+    assert len(r.pages) == 1             # position 3: one page
+    assert s.ensure_capacity(r, horizon=8)
+    assert len(r.pages) == 3             # writes reach position 10
+
+
+def test_page_table_upload_cached_across_dispatches():
+    """Steady-state decode re-uses the resident page table: uploads
+    happen only on admission and page-boundary growth, so with K=1 the
+    upload count stays far below the dispatch count."""
+    eng = ContinuousEngine(CFG, PARAMS, n_pages=12, page_size=16,
+                           max_batch=2, max_len=48)
+    rid = eng.submit(RNG.integers(0, CFG.vocab, (4,)).astype(np.int32), 20)
+    eng.run()
+    assert len(eng.scheduler.finished[rid].generated) == 20
+    assert eng.decode_dispatches == 19   # token 1 is prefill-sampled
+    # one upload at admission, one when decode crosses into page 2
+    assert eng.page_table_uploads == 2, eng.page_table_uploads
+    assert eng.logits_host_bytes == 0
+    assert eng.token_host_bytes == 19 * 2 * 1 * 4   # (B=2, K=1) int32

@@ -78,6 +78,66 @@ def test_flash_matches_blocked_with_softcap():
 
 
 # ---------------------------------------------------------------------------
+# ragged batches: the per-row pad operand
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("softcap", [0.0, 20.0])
+@pytest.mark.parametrize("group", [None, 8])
+def test_flash_kernel_pad_vs_oracle(softcap, group):
+    """Per-row left-pad widths mask cache slots below pad[b] inside the
+    kernel's online softmax -- ragged static batches need no fallback."""
+    cache = _quantized_cache(group=group)
+    q = jnp.asarray(RNG.normal(size=(2, 2, 2, 32)).astype(np.float32))
+    pad = jnp.asarray([3, 17], jnp.int32)
+    got = flash_decode_pallas(
+        q, cache["k_codes"], cache["k_scale"], cache["v_codes"],
+        cache["v_scale"], jnp.int32(41), pad=pad, blk=16,
+        softcap=softcap, interpret=True)
+    want = ref.flash_decode_ref(
+        q, cache["k_codes"], cache["k_scale"], cache["v_codes"],
+        cache["v_scale"], 41, softcap, pad=pad)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("pos", [5, 40, 63])
+def test_flash_kernel_pad_matches_blocked(pos):
+    """Kernel and XLA fallback agree on ragged batches, including a row
+    whose pad covers whole KV blocks (blocks fully below pad mask to
+    exact zeros) and a row with no padding at all."""
+    cache = _quantized_cache()
+    q = jnp.asarray(RNG.normal(size=(2, 2, 2, 32)).astype(np.float32))
+    pad = jnp.asarray([0, min(pos, 33)], jnp.int32)
+    a = flash_decode_pallas(q, cache["k_codes"], cache["k_scale"],
+                            cache["v_codes"], cache["v_scale"],
+                            jnp.int32(pos), pad=pad, blk=16,
+                            interpret=True)
+    b = A.decode_quantized_blocks(q, cache, jnp.int32(pos), blk=16,
+                                  pad=pad)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_engine_ragged_generate_flash_matches_blocked():
+    """lengths= (ragged static batch) no longer forces the blocked
+    fallback under decode_impl='flash': both paths emit the same
+    tokens."""
+    cfg = dataclasses.replace(CFG, decode_impl="flash")
+    params = T.lm_init(jax.random.PRNGKey(0), cfg)
+    toks = np.zeros((3, 9), np.int32)
+    lens = np.asarray([4, 9, 6])
+    rng = np.random.default_rng(5)
+    for i, ln in enumerate(lens):
+        toks[i, 9 - ln:] = rng.integers(0, cfg.vocab, (ln,))
+    toks = jnp.asarray(toks)
+    out_fl = ServeEngine(cfg, params, max_len=32, quantized_kv=True) \
+        .generate(toks, steps=5, lengths=lens)
+    out_bl = ServeEngine(CFG, params, max_len=32, quantized_kv=True) \
+        .generate(toks, steps=5, lengths=lens)
+    np.testing.assert_array_equal(out_fl, out_bl)
+
+
+# ---------------------------------------------------------------------------
 # unified scale layout (quant.group_scales along Dh)
 # ---------------------------------------------------------------------------
 
