@@ -41,7 +41,14 @@ ARGS.add_argument("--decode-steps", type=int, default=2,
                        "--continuous demo: one host round trip drives K "
                        "on-device decode+sample steps (temperature-0 "
                        "tokens are identical for every K)")
+ARGS.add_argument("--disagg", action="store_true",
+                  help="serve the --continuous stream mix through the "
+                       "disaggregated prefill/decode engine instead: "
+                       "prefill worker + uninterrupted decode worker "
+                       "joined by a posit8 page-handoff channel "
+                       "(implies --continuous)")
 ARGS = ARGS.parse_args()
+ARGS.continuous = ARGS.continuous or ARGS.disagg
 
 stream = VIOStream(batch=64)
 params = P.vio_init(jax.random.PRNGKey(0))
@@ -108,11 +115,23 @@ if ARGS.continuous:
     # in ONE jitted dispatch (device-resident sampling; streams that
     # finish mid-scan park on page 0) -- the XR frame loop polls the
     # engine K tokens at a time instead of once per token.
-    eng = ContinuousEngine(cfg, lm, n_pages=32, page_size=16,
-                           max_batch=4, max_len=64,
+    if ARGS.disagg:
+        # disaggregated: the decode worker's K-step loop never waits on
+        # a prefill chunk -- the long narration prompt prefills on the
+        # OTHER worker while VIO-adjacent streams keep decoding, and
+        # only its compressed posit8 pages cross the handoff channel
+        from repro.serve import DisaggEngine
+        eng = DisaggEngine(cfg, lm, prefill_pages=32, decode_pages=32,
+                           page_size=16, max_batch=4, max_len=64,
                            policy=PrecisionPolicy.uniform("posit8_0"),
                            prefill_chunk_tokens=16, prefix_cache=True,
                            decode_steps=ARGS.decode_steps)
+    else:
+        eng = ContinuousEngine(cfg, lm, n_pages=32, page_size=16,
+                               max_batch=4, max_len=64,
+                               policy=PrecisionPolicy.uniform("posit8_0"),
+                               prefill_chunk_tokens=16, prefix_cache=True,
+                               decode_steps=ARGS.decode_steps)
     rng = np.random.default_rng(0)
     scene = rng.integers(0, cfg.vocab, (16,))   # shared scene preamble
     arrivals = [(s, int(rng.integers(3, 12)), int(rng.integers(4, 16)))
@@ -121,8 +140,9 @@ if ARGS.continuous:
     #                               chunked prefill absorbs it 16 at a time
     print("\ncontinuous XR streams (arrive@step, tail, gen):", arrivals)
     pending = sorted(arrivals, key=lambda a: a[0])
+    sched = eng.prefill.scheduler if ARGS.disagg else eng.scheduler
     step = 0
-    while pending or eng.scheduler.has_work:
+    while pending or (eng.has_work if ARGS.disagg else sched.has_work):
         while pending and pending[0][0] <= step:
             _, plen, gen = pending.pop(0)
             prompt = np.concatenate(
@@ -130,13 +150,25 @@ if ARGS.continuous:
             eng.submit(prompt, gen)
         eng.step()
         step += 1
-    done = eng.scheduler.finished
-    px = eng.scheduler.prefix
-    print(f"served {len(done)} streams in {step} engine steps; "
-          f"peak pool use {eng.pool.alloc_peak}/{eng.pool.n_pages} pages, "
-          f"preemptions {eng.scheduler.preemption_count}; "
-          f"prefix cache {px.hits} hits "
-          f"({px.hit_tokens} prefill tokens skipped)")
+    done = eng.finished if ARGS.disagg else sched.finished
+    px = sched.prefix
+    if ARGS.disagg:
+        print(f"served {len(done)} streams in {step} engine steps; "
+              f"pool peaks prefill "
+              f"{eng.prefill.pool.alloc_peak}/{eng.prefill.pool.n_pages} "
+              f"decode {eng.decode.pool.alloc_peak}/"
+              f"{eng.decode.pool.n_pages} pages; "
+              f"prefix cache {px.hits} hits "
+              f"({px.hit_tokens} prefill tokens skipped)")
+        print(f"handoff: {eng.handoffs} handoffs, {eng.handoff_pages} "
+              f"posit8 pages, {eng.handoff_bytes} bytes over the "
+              f"channel, {eng.decode_bounces} decode bounces")
+    else:
+        print(f"served {len(done)} streams in {step} engine steps; "
+              f"peak pool use {eng.pool.alloc_peak}/{eng.pool.n_pages} "
+              f"pages, preemptions {sched.preemption_count}; "
+              f"prefix cache {px.hits} hits "
+              f"({px.hit_tokens} prefill tokens skipped)")
     print(f"decode loop: K={eng.decode_steps}, "
           f"{eng.decode_dispatches} dispatches, "
           f"{eng.page_table_uploads} page-table uploads, "

@@ -109,6 +109,15 @@ def _online_softmax_step(pos_last, qpos, q2, kc_ref, ks_ref, vc_ref, vs_ref,
                  batches: slots below the request's pad width are dead).
                  ``None`` (the paged kernels, where rows have no pad)
                  compiles the exact pre-pad mask -- bitwise unchanged.
+
+    With ``pad_lo`` set, blocks that sit ENTIRELY below the pad are
+    gated off like blocks past the live horizon (their index map clamps
+    them onto the first live block, so they are never fetched either).
+    Skipping them is bitwise-identical to masking them: an all-masked
+    block leaves m at -1e30 and contributes p-rows that the first live
+    block's rescale ``alpha = exp(-1e30 - m_new)`` underflows to +0.0,
+    annihilating acc and l exactly -- the gated path just starts from
+    the same (acc=0, m=-1e30, l=0) scratch state at that block.
     """
     t = pl.program_id(2)
     nt = pl.num_programs(2)
@@ -119,7 +128,13 @@ def _online_softmax_step(pos_last, qpos, q2, kc_ref, ks_ref, vc_ref, vs_ref,
         m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    @pl.when(t * blk <= pos_last)
+    live = t * blk <= pos_last
+    if pad_lo is not None:
+        # block t covers slots [t*blk, (t+1)*blk): it holds a live slot
+        # iff its last slot reaches the pad
+        live &= (t + 1) * blk > pad_lo
+
+    @pl.when(live)
     def _block():
         dh = q2.shape[-1]
         gs = ks_ref.shape[-1]
@@ -204,9 +219,16 @@ def flash_decode_pallas(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
                        batch -- request i additionally masks slots below
                        ``pad[i]`` (None == an all-zeros pad: the dense
                        static-batch case).  Blocks fully below the pad
-                       still DMA (the live horizon is what the index
-                       map clamps on); their scores mask to -inf, so
-                       they contribute exact zeros.
+                       are never fetched: the index map clamps them onto
+                       the first live block (``pad[i] // blk``) exactly
+                       like dead blocks past the horizon clamp onto the
+                       last live one, so the block index stops changing
+                       and Pallas issues no DMA; ``pl.when`` gates their
+                       compute off.  A step for row i therefore moves
+                       only its ``ceil((pos+1)/blk) - pad[i] // blk``
+                       live blocks -- and the output is bitwise the old
+                       mask-everything path's (see
+                       ``_online_softmax_step``).
 
     Returns (B, Kh, G, Dh) f32 attention output.
     """
@@ -222,9 +244,13 @@ def flash_decode_pallas(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
         return (i, h, 0, 0)
 
     def kv_im(i, h, tt, pos_ref, pad_ref):
-        # clamp dead blocks onto the last live one: the block index stops
-        # changing, so Pallas re-uses the resident copy (no DMA)
-        return (i, jnp.minimum(tt, pos_ref[0] // blk), h, 0)
+        # clamp dead blocks onto the live window: blocks past the
+        # horizon re-map to the last live block and blocks fully below
+        # the left pad to the first live one -- either side, the block
+        # index stops changing, so Pallas re-uses the resident copy
+        # (no DMA).  pad <= pos for any valid row, so lo <= hi.
+        return (i, jnp.clip(tt, pad_ref[i] // blk, pos_ref[0] // blk),
+                h, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

@@ -22,6 +22,16 @@ logits never leave the device.
 
   ... --continuous --batch 8 --n-pages 48 [--page-size 16]
       [--prefill-chunk 16] [--prefix-cache] [--decode-steps 4]
+
+``--disagg`` serves the same mix through the disaggregated
+``DisaggEngine`` instead: a prefill worker (admission + chunk budget)
+and an uninterrupted decode worker over separate page pools, joined by
+a double-buffered posit8 page-handoff channel; decode dispatches
+overlap the prefill chunks.  With more than one device the workers'
+programs are placed on distinct device slices
+(``parallel.sharding.split_devices``).
+
+  ... --disagg --batch 8 --n-pages 48 --prefill-chunk 16 --decode-steps 4
 """
 
 from __future__ import annotations
@@ -76,18 +86,34 @@ def _continuous(args, cfg, params, policy) -> None:
         # chunk branch (an explicit --page-size used to crash the
         # engine's divisibility check here)
         max_len += page_size - max_len % page_size
-    eng = ContinuousEngine(
-        cfg, params, n_pages=args.n_pages, page_size=page_size,
-        max_batch=args.batch, max_len=max_len, policy=policy,
-        temperature=args.temperature,
-        prefill_chunk_tokens=args.prefill_chunk,
-        prefix_cache=args.prefix_cache,
-        decode_steps=args.decode_steps)
+    if args.disagg:
+        from ..parallel.sharding import split_devices
+        from ..serve.disagg import DisaggEngine
+        pdev, ddev = split_devices()
+        one = pdev is ddev or pdev[0] == ddev[0]
+        eng = DisaggEngine(
+            cfg, params, prefill_pages=args.n_pages,
+            decode_pages=args.n_pages, page_size=page_size,
+            max_batch=args.batch, max_len=max_len, policy=policy,
+            temperature=args.temperature,
+            prefill_chunk_tokens=args.prefill_chunk,
+            prefix_cache=args.prefix_cache,
+            decode_steps=args.decode_steps,
+            prefill_device=None if one else pdev[0],
+            decode_device=None if one else ddev[0])
+    else:
+        eng = ContinuousEngine(
+            cfg, params, n_pages=args.n_pages, page_size=page_size,
+            max_batch=args.batch, max_len=max_len, policy=policy,
+            temperature=args.temperature,
+            prefill_chunk_tokens=args.prefill_chunk,
+            prefix_cache=args.prefix_cache,
+            decode_steps=args.decode_steps)
     # ragged request mix around the CLI's nominal prompt/step counts;
     # under --prefix-cache every prompt opens with one shared page-sized
     # preamble (the XR scene/system prompt ahead of every query), so
     # request 2.. re-prefills only its unique tail
-    preamble = rng.integers(0, cfg.vocab, (eng.pool.page_size,)) \
+    preamble = rng.integers(0, cfg.vocab, (eng.page_size,)) \
         if args.prefix_cache else None
     n_req = 2 * args.batch
     rids = []
@@ -100,30 +126,42 @@ def _continuous(args, cfg, params, policy) -> None:
             steps = max(1, min(steps, max_len - prompt.size))
         rids.append(eng.submit(prompt, steps))
     t0 = time.time()
-    out = eng.run()
+    eng.run()
     dt = time.time() - t0
-    toks = sum(len(eng.scheduler.finished[r].generated) for r in rids)
+    finished = eng.finished if args.disagg else eng.scheduler.finished
+    sched = eng.prefill.scheduler if args.disagg else eng.scheduler
+    toks = sum(len(finished[r].generated) for r in rids)
     print(f"served {n_req} requests / {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s) over {eng.steps_run} engine steps")
     print(f"decode loop: K={eng.decode_steps}, {eng.decode_dispatches} "
           f"dispatches, {eng.page_table_uploads} page-table uploads, "
           f"{eng.token_host_bytes} token bytes to host "
           f"(logits bytes: {eng.logits_host_bytes})")
-    print(f"pool: {eng.pool.n_pages} pages x {eng.pool.page_size} slots, "
-          f"peak used {eng.pool.alloc_peak}, "
-          f"preemptions {eng.scheduler.preemption_count} "
-          f"(mid-prefill {eng.scheduler.prefill_preemptions}, "
-          f"wasted prefill tokens {eng.scheduler.wasted_prefill_tokens})")
+    if args.disagg:
+        print(f"disagg: {eng.handoffs} handoffs / {eng.handoff_pages} "
+              f"pages / {eng.handoff_bytes} posit8 bytes over the "
+              f"channel (depth {eng.channel.depth}), "
+              f"{eng.decode_bounces} decode-side bounces; pools "
+              f"prefill {eng.prefill.pool.n_pages} (peak "
+              f"{eng.prefill.pool.alloc_peak}) / decode "
+              f"{eng.decode.pool.n_pages} (peak "
+              f"{eng.decode.pool.alloc_peak}) x {eng.page_size} slots")
+    else:
+        print(f"pool: {eng.pool.n_pages} pages x {eng.pool.page_size} "
+              f"slots, peak used {eng.pool.alloc_peak}, "
+              f"preemptions {sched.preemption_count} "
+              f"(mid-prefill {sched.prefill_preemptions}, "
+              f"wasted prefill tokens {sched.wasted_prefill_tokens})")
     print(f"prefill: "
           f"{'chunked, %d tokens/step' % eng.prefill_chunk_tokens if eng.prefill_chunk_tokens else 'monolithic'}, "
           f"{eng.prefill_tokens_computed} tokens computed")
     if args.prefix_cache:
-        px = eng.scheduler.prefix
+        px = sched.prefix
         print(f"prefix cache: {px.hits} hits, {px.hit_tokens} prefill "
               f"tokens served from shared pages, {len(px)} pages cached, "
               f"{px.evictions} evictions")
     for r in rids[:2]:
-        print(f"  req {r}: {np.asarray(eng.scheduler.finished[r].generated)}")
+        print(f"  req {r}: {np.asarray(finished[r].generated)}")
 
 
 def main() -> None:
@@ -138,6 +176,13 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--continuous", "--paged", action="store_true",
                     help="serve through the paged-KV ContinuousEngine")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated prefill/decode serving: split "
+                         "the paged engine into a prefill worker and an "
+                         "uninterrupted decode worker joined by a "
+                         "posit8 page-handoff channel (implies paged "
+                         "serving; each side gets its own --n-pages "
+                         "pool)")
     ap.add_argument("--n-pages", type=int, default=48,
                     help="paged pool size (allocatable pages)")
     ap.add_argument("--page-size", type=int, default=None,
@@ -165,7 +210,7 @@ def main() -> None:
     if args.policy not in ("fp32", "none"):
         policy = (PrecisionPolicy.paper_mixed() if args.policy == "mixed"
                   else PrecisionPolicy.uniform(args.policy))
-    if args.continuous:
+    if args.continuous or args.disagg:
         _continuous(args, cfg, params, policy)
     else:
         _static(args, cfg, params, policy)

@@ -18,7 +18,7 @@ from ..configs.base import ModelConfig, ShapeConfig
 from ..models import transformer as T
 
 __all__ = ["batch_specs", "cache_specs", "paged_cache_specs",
-           "chunk_prefill_specs", "input_specs"]
+           "chunk_prefill_specs", "handoff_specs", "input_specs"]
 
 
 def _sds(shape, dtype):
@@ -92,6 +92,30 @@ def chunk_prefill_specs(cfg: ModelConfig, chunk: int,
         "ctx": {"k": _sds(kv, jnp.bfloat16), "v": _sds(kv, jnp.bfloat16)},
         "start": _sds((1,), jnp.int32),
     }
+
+
+def handoff_specs(cfg: ModelConfig, n_pages: int,
+                  page_size: int, kv_group=None) -> Dict[str, Any]:
+    """Abstract page-handoff payload of disaggregated serving
+    (``serve.disagg.PageHandoffChannel``): the ``n_pages`` exported
+    pages of ONE completed prefill, in pool wire format -- posit8 codes
+    ``(L, n, page, Kh, Dh)`` uint8 + po2 group scales
+    ``(L, n, page, Kh, Gs)`` bf16 (``PagedKVPool.export_pages``).  The
+    summed ``.nbytes`` of these specs is exactly
+    ``n_pages * paged_kv.page_handoff_bytes(cfg, page_size, kv_group)``
+    for attention-only families -- what the disagg bench asserts its
+    measured channel traffic against."""
+    from ..models.attention import kv_scale_cols
+    from ..serve.paged_kv import PagedKVPool
+    PagedKVPool.validate_family(cfg)
+    hd = cfg.resolved_head_dim
+    gs = kv_scale_cols(hd, kv_group)
+    code = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, hd)
+    scale = code[:-1] + (gs,)
+    return {"k_codes": _sds(code, jnp.uint8),
+            "v_codes": _sds(code, jnp.uint8),
+            "k_scale": _sds(scale, jnp.bfloat16),
+            "v_scale": _sds(scale, jnp.bfloat16)}
 
 
 def input_specs(cfg: ModelConfig, shape: ShapeConfig,

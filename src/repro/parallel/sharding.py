@@ -37,6 +37,7 @@ __all__ = [
     "activation_rules", "use_mesh", "current_mesh", "shard", "param_pspec",
     "param_sharding_tree", "logical_pspec", "batch_pspec", "DATA_AXES",
     "cache_pspec", "paged_cache_pspec", "cache_sharding_tree",
+    "split_devices",
 ]
 
 _ctx = threading.local()
@@ -118,6 +119,25 @@ def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
         return x
     spec = logical_pspec(mesh, x.shape, logical)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def split_devices(devices=None, prefill_frac: float = 0.5):
+    """Split a device list into (prefill, decode) slices for
+    disaggregated serving (``serve/disagg.py``).
+
+    Prefill is compute-bound and decode memory-bound, so the split is a
+    roofline knob: ``prefill_frac`` of the devices go to the prefill
+    worker (at least one each side).  With a SINGLE device both workers
+    share it -- the two jitted programs still overlap through async
+    dispatch, which is the in-process default the tests run."""
+    if devices is None:
+        devices = jax.devices()
+    devices = list(devices)
+    assert devices, "no devices"
+    if len(devices) == 1:
+        return devices, devices
+    cut = min(max(int(len(devices) * prefill_frac), 1), len(devices) - 1)
+    return devices[:cut], devices[cut:]
 
 
 def batch_pspec(mesh: Mesh) -> P:

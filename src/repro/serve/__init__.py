@@ -7,6 +7,11 @@ Two engines share the model step functions:
     against.  Accepts ragged LEFT-padded prompts via
     ``generate(..., lengths=)``.
   * ``ContinuousEngine`` -- continuous batching over a ``PagedKVPool``.
+  * ``DisaggEngine`` -- disaggregated prefill/decode serving: a
+    ``PrefillWorker`` (the chunk-budget admitter) and a ``DecodeWorker``
+    (the K-step device-resident loop) over two pools, connected by a
+    double-buffered ``PageHandoffChannel`` that moves only posit8 page
+    codes + group scales (see below).
 
 Page-table layout
 -----------------
@@ -73,10 +78,34 @@ prefix through the same posit8 page reads a cold run performs; the
 shared pages hold bitwise the codes that cold run would write, so
 temperature-0 outputs match a cache-off engine token for token.  See
 ``serve/paged_kv.py`` for the share/refcount/copy-on-write contract.
+
+Disaggregated prefill/decode (page handoff)
+-------------------------------------------
+``DisaggEngine`` (serve/disagg.py) splits the interleaved engine along
+its roofline boundary: a compute-bound ``PrefillWorker`` keeps the
+whole admitter (chunk budget, prefix cache, preemption) over its own
+pool, a memory-bound ``DecodeWorker`` runs the K-step device-resident
+loop uninterrupted over another, and completed prefills cross between
+them as EXPORTED page payloads -- posit8 codes + po2 group scales, the
+wire format IS the pool format, ~4x smaller than a bf16 handoff
+(``paged_kv.page_handoff_bytes`` is the exact per-page model).  The
+decode dispatch launches async BEFORE the prefill step runs, so
+prefill chunks hide behind the decode scan; backpressure is
+structural (a parked completion holds its pages + batch slot, the
+channel is depth-bounded, a handoff waits for decode pages) and decode
+pool exhaustion BOUNCES the youngest request back to the admitter --
+the disaggregated analogue of LIFO preemption.  Temperature-0 outputs
+are token-for-token the interleaved engine's (and, on the carry
+context, the static oracle's): both sides run the same chunk /
+dispatch code and the handoff is bitwise.
 """
 
+from .disagg import (DisaggEngine, DecodeWorker,  # noqa: F401
+                     PageHandoffChannel, PrefillWorker)
 from .engine import (ServeEngine, ContinuousEngine,  # noqa: F401
                      build_prefill_step, build_prefill_chunk_step,
                      build_serve_step)
-from .paged_kv import PagedKVPool, paged_kv_bytes_per_step  # noqa: F401
-from .scheduler import PrefixIndex, Request, Scheduler  # noqa: F401
+from .paged_kv import (PagedKVPool, page_handoff_bytes,  # noqa: F401
+                       paged_kv_bytes_per_step)
+from .scheduler import (DecodeRunner, PrefixIndex,  # noqa: F401
+                        Request, Scheduler)

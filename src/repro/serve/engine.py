@@ -346,8 +346,228 @@ def _build_decode_loop(cfg: ModelConfig, temperature: float, k_steps: int):
     return loop
 
 
+def _decode_horizon(req, decode_steps: int) -> int:
+    """Pages to pre-claim for: the decode slots the next dispatch can
+    write for ``req`` -- at most ``decode_steps``, capped by its
+    remaining token budget (a row past its budget freezes on the
+    parking page and writes nothing)."""
+    return min(decode_steps,
+               max(req.max_new_tokens - len(req.generated), 1))
+
+
+class _PageTableCache:
+    """Epoch-cached device page table: ``get`` re-uploads the (B, NP)
+    table only when the scheduler epoch or the running-row order
+    changed -- an unchanged (epoch, rows) pair means every row is
+    bit-identical to the resident copy, so the cached device array is
+    reused across dispatches (and across page handoffs on the decode
+    worker, which keys on its runner's epoch the same way)."""
+
+    def __init__(self):
+        self.dev = None
+        self.epoch = -1
+        self.rows: List[int] = []
+
+    def get(self, running, epoch: int, b: int, n_pages_per_req: int):
+        """-> (device table, uploaded?) for the rid-ordered batch."""
+        rows = [req.rid for req in running]
+        if self.dev is None or epoch != self.epoch or rows != self.rows:
+            page_table = np.zeros((b, n_pages_per_req), np.int32)
+            for row, req in enumerate(running):
+                page_table[row, :len(req.pages)] = req.pages
+            self.dev = jnp.asarray(page_table)
+            self.epoch = epoch
+            self.rows = rows
+            return self.dev, True
+        return self.dev, False
+
+
+def _dispatch_decode_loop(loop, params, pool, running, b: int,
+                          pt_cache: _PageTableCache, epoch: int,
+                          n_pages_per_req: int, base_key):
+    """Launch one K-step decode dispatch for the rid-ordered ``running``
+    batch: build the (B,)-shaped host operands, fetch the epoch-cached
+    page table, call the jitted loop (donating the pool cache) and park
+    the updated leaves back on the pool.  Returns the in-flight dispatch
+    record -- the (B, K) token buffer is still a device future, so the
+    caller can overlap host work (the disaggregated engine runs a whole
+    prefill chunk here) before syncing it with ``_apply_decode_tokens``.
+    Shared by ``ContinuousEngine.step`` and the disaggregated
+    ``DecodeWorker``; the batch-array layout and replay loop living in
+    one place is what keeps their temperature-0 outputs bitwise equal."""
+    tokens = np.zeros((b, 1), np.int32)
+    positions = np.zeros((b,), np.int32)
+    done = np.ones((b,), bool)           # padding rows stay dead
+    budget = np.zeros((b,), np.int32)
+    eos = np.full((b,), -1, np.int32)    # -1: matches no vocab id
+    rids = np.zeros((b,), np.int32)
+    gen_idx = np.zeros((b,), np.int32)
+    for row, req in enumerate(running):
+        tokens[row, 0] = req.next_token
+        positions[row] = req.position
+        done[row] = False
+        budget[row] = req.max_new_tokens - len(req.generated)
+        if req.eos_id is not None:
+            eos[row] = req.eos_id
+        rids[row] = req.rid
+        gen_idx[row] = len(req.generated)
+    dev_table, uploaded = pt_cache.get(running, epoch, b, n_pages_per_req)
+    toks_dev, new_cache = loop(
+        params, jnp.asarray(tokens), jnp.asarray(positions),
+        pool.device_state(), dev_table, jnp.asarray(done),
+        jnp.asarray(budget), jnp.asarray(eos), jnp.asarray(rids),
+        jnp.asarray(gen_idx), base_key)
+    pool.set_device_state(new_cache)
+    return {"running": running, "budget": budget, "toks_dev": toks_dev,
+            "uploaded": int(uploaded)}
+
+
+def _apply_decode_tokens(disp, toks: np.ndarray, retire) -> int:
+    """Replay the device done-logic of a dispatch on host: walk each
+    row's (K,) tokens until its budget or EOS froze it (later slots are
+    frozen copies the scan never wrote anywhere live), retiring done
+    requests through ``retire``.  Returns the decoded request count."""
+    k_steps = toks.shape[1]
+    for row, req in enumerate(disp["running"]):
+        for j in range(min(k_steps, int(disp["budget"][row]))):
+            nxt = int(toks[row, j])
+            req.generated.append(nxt)
+            req.next_token = nxt
+            if req.done:
+                break
+        if req.done:
+            retire(req)
+    return len(disp["running"])
+
+
+class _ChunkPrefillMixin:
+    """Chunked paged prefill, shared verbatim by ``ContinuousEngine``
+    and the disaggregated ``PrefillWorker`` (``serve/disagg.py``).  The
+    host object provides: ``cfg``, ``params``, ``scheduler`` (and its
+    ``pool``), ``page_size``, ``max_pages_per_req``,
+    ``prefill_chunk_tokens``, ``prefill_context``, ``temperature``,
+    ``_base_key``, the jitted ``_chunk_step`` / ``_chunk_step_paged``,
+    the ``_prefill_ctx`` carry dict and a ``prefill_tokens_computed``
+    counter.  One implementation is what makes the disaggregated
+    engine's temperature-0 outputs bitwise the interleaved engine's:
+    both prefill paths run the exact same chunk code."""
+
+    def _empty_ctx(self, width: int = 0):
+        hd = self.cfg.resolved_head_dim
+        shape = (self.cfg.n_layers, 1, width, self.cfg.n_kv_heads, hd)
+        # distinct buffers: k and v are donated independently to
+        # _ctx_write, so they must not alias
+        return {"k": jnp.zeros(shape, jnp.bfloat16),
+                "v": jnp.zeros(shape, jnp.bfloat16)}
+
+    def _sample(self, lg: np.ndarray, req) -> int:
+        """One token from one (V,) logit row -- the HOST twin of the
+        device loop's fused sampler, used only for the first token at
+        prefill completion.  Greedy matches jnp/np argmax tie-breaking;
+        categorical draws from the same per-request stream
+        ``fold_in(fold_in(base_key, rid), token_index)`` the device
+        scan uses, so a request's sampled sequence does not depend on
+        where (host or device) or in which dispatch a token fell."""
+        if self.temperature <= 0:
+            return int(np.argmax(lg))
+        sub = jax.random.fold_in(
+            jax.random.fold_in(self._base_key, req.rid), len(req.generated))
+        return int(jax.random.categorical(
+            sub, jnp.asarray(lg, jnp.float32) / self.temperature))
+
+    def _prefill_chunk(self, req) -> int:
+        """Run at most ONE prefill chunk for ``req``: allocate the pages
+        the chunk's slots land in (lazy, can preempt younger requests),
+        forward the chunk against the request's prefilled context, and
+        scatter its quantized KV into pages.  Completes prefill (samples
+        the first token, PREFILLING -> RUNNING) when the chunk covers
+        the prefix's last real token.  Returns the prefill tokens spent
+        (the padded chunk width; 0 if ``req`` was preempted before any
+        compute)."""
+        sched = self.scheduler
+        prefix = req.prefix
+        ln = prefix.size
+        # the cursor starts past the matched shared pages of a prefix-
+        # cache hit (page-aligned by construction), so a hit computes
+        # only its un-cached remainder
+        start = req.prefilled
+        if self.prefill_chunk_tokens is None:
+            # monolithic: one chunk covering every remaining page slot
+            c = self.pool.pages_for(ln) * self.page_size - start
+        else:
+            c = self.prefill_chunk_tokens
+        real = min(c, ln - start)
+        if not sched.ensure_prefill_capacity(req, start + real):
+            return 0                     # self-preempted: pool too dry
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :real] = prefix[start:start + real]
+        start_arr = jnp.full((1,), start, jnp.int32)
+        if self.prefill_context == "pages":
+            pt = np.zeros((1, self.max_pages_per_req), np.int32)
+            pt[0, :len(req.pages)] = req.pages
+            cache = self.pool.device_state()
+            # (1, NP), untiled: the layer scan broadcasts it
+            cache["page_table"] = jnp.asarray(pt)
+            logits, new_cache = self._chunk_step_paged(
+                self.params, jnp.asarray(toks), cache, start_arr)
+            self.pool.set_device_state(
+                {key: new_cache[key] for key in
+                 ("k_codes", "v_codes", "k_scale", "v_scale")})
+        else:
+            ctx = self._prefill_ctx.get(req.rid)
+            if start == 0 or ctx is None:
+                ctx = self._empty_ctx()
+            logits, kv, chunk_q = self._chunk_step(
+                self.params, jnp.asarray(toks), ctx, start_arr)
+            self.pool.write_chunk(chunk_q, req.pages, start)
+            if start + real < ln:        # full chunk: extend the carry
+                if ctx["k"].shape[2] == 0:
+                    # preallocate ONCE at the prompt's page-rounded
+                    # length; later chunks dynamic-update-slice into the
+                    # donated buffer.  (The first chunk always runs on
+                    # the width-0 ctx, so single-chunk prefills never
+                    # touch -- or trace -- the preallocated shape.)
+                    width = self.pool.pages_for(ln) * self.page_size
+                    ctx = self._empty_ctx(width)
+                self._prefill_ctx[req.rid] = {
+                    "k": _ctx_write(ctx["k"], kv["k"], jnp.int32(start)),
+                    "v": _ctx_write(ctx["v"], kv["v"], jnp.int32(start))}
+        req.prefilled = start + real
+        self.prefill_tokens_computed += real
+        if req.prefilled == ln:
+            self._prefill_ctx.pop(req.rid, None)
+            nxt = self._sample(np.asarray(logits[0, real - 1]), req)
+            req.generated.append(nxt)
+            req.next_token = nxt
+            sched.prefill_complete(req)
+        return c
+
+    def _prefill_phase(self) -> List[Any]:
+        """Chunked prefill, oldest first, inside the per-step token
+        budget: at most ``prefill_chunk_tokens`` prefill tokens per step
+        (None = whole prefixes, the monolithic behavior).  Returns the
+        requests whose prefill COMPLETED this step (now RUNNING, first
+        token sampled) and drops the bf16 carries of requests no longer
+        mid-prefill (preempted or completed); a preemption victim
+        re-prefills from chunk 0 on re-admission."""
+        sched = self.scheduler
+        budget = self.prefill_chunk_tokens
+        spent = 0
+        completed = []
+        for req in [r for r in sched.running if r.status == PREFILLING]:
+            while req.status == PREFILLING and \
+                    (budget is None or spent < budget):
+                spent += self._prefill_chunk(req)
+            if req.status == RUNNING:
+                completed.append(req)
+        live = {r.rid for r in sched.running if r.status == PREFILLING}
+        for rid in [r for r in self._prefill_ctx if r not in live]:
+            del self._prefill_ctx[rid]
+        return completed
+
+
 @dataclasses.dataclass
-class ContinuousEngine:
+class ContinuousEngine(_ChunkPrefillMixin):
     """Continuous-batching serving over a paged posit8 KV pool.
 
     The static ``ServeEngine`` batches a fixed set of requests against a
@@ -434,6 +654,20 @@ class ContinuousEngine:
     # tail iterations per dispatch.
     decode_steps: int = 1
 
+    # every public run counter; ``reset_counters`` and ``__post_init__``
+    # derive from this registry, so adding a counter here is the WHOLE
+    # change (the bench warm-up reset can never miss one again)
+    _COUNTERS = (
+        "steps_run",
+        "prefill_tokens_computed",  # real tokens forwarded (cache hits
+        #                             skip their matched prefix)
+        "decode_dispatches",        # jitted decode-loop calls
+        "page_table_uploads",       # (B, NP) host->device uploads
+        "logits_host_bytes",        # device->host logits traffic
+        #                             (stays 0: sampling is fused)
+        "token_host_bytes",         # device->host sampled-token sync
+    )
+
     def __post_init__(self):
         from ..kernels.flash_decode import default_kv_block
         from .paged_kv import PagedKVPool
@@ -508,17 +742,9 @@ class ContinuousEngine:
         self._base_key = jax.random.PRNGKey(self.seed)
         # epoch-cached device page table: re-uploaded only when the
         # scheduler epoch or the running-row order changed
-        self._pt_dev = None
-        self._pt_epoch = -1
-        self._pt_rows: List[int] = []
-        self.steps_run = 0
-        self.prefill_tokens_computed = 0     # real tokens forwarded (cache
-        #                                      hits skip their matched prefix)
-        self.decode_dispatches = 0           # jitted decode-loop calls
-        self.page_table_uploads = 0          # (B, NP) host->device uploads
-        self.logits_host_bytes = 0           # device->host logits traffic
-        #                                      (stays 0: sampling is fused)
-        self.token_host_bytes = 0            # device->host sampled-token sync
+        self._pt_cache = _PageTableCache()
+        for c in self._COUNTERS:
+            setattr(self, c, 0)
         # positions the LAST decode dispatch started from (requests that
         # retired within the step included) -- the per-step KV-traffic
         # ground truth benchmarks read; [] when the step decoded nothing
@@ -543,107 +769,7 @@ class ContinuousEngine:
             prompt, max_new_tokens,
             eos_id if eos_id is not None else self.eos_id)
 
-    # -- sampling -----------------------------------------------------------
-
-    def _sample(self, lg: np.ndarray, req) -> int:
-        """One token from one (V,) logit row -- the HOST twin of the
-        device loop's fused sampler, used only for the first token at
-        prefill completion.  Greedy matches jnp/np argmax tie-breaking;
-        categorical draws from the same per-request stream
-        ``fold_in(fold_in(base_key, rid), token_index)`` the device
-        scan uses, so a request's sampled sequence does not depend on
-        where (host or device) or in which dispatch a token fell."""
-        if self.temperature <= 0:
-            return int(np.argmax(lg))
-        sub = jax.random.fold_in(
-            jax.random.fold_in(self._base_key, req.rid), len(req.generated))
-        return int(jax.random.categorical(
-            sub, jnp.asarray(lg, jnp.float32) / self.temperature))
-
     # -- one engine step ----------------------------------------------------
-
-    def _empty_ctx(self, width: int = 0):
-        hd = self.cfg.resolved_head_dim
-        shape = (self.cfg.n_layers, 1, width, self.cfg.n_kv_heads, hd)
-        # distinct buffers: k and v are donated independently to
-        # _ctx_write, so they must not alias
-        return {"k": jnp.zeros(shape, jnp.bfloat16),
-                "v": jnp.zeros(shape, jnp.bfloat16)}
-
-    def _decode_horizon(self, req) -> int:
-        """Pages to pre-claim for: the decode slots the next dispatch
-        can write for ``req`` -- at most ``decode_steps``, capped by its
-        remaining token budget (a row past its budget freezes on the
-        parking page and writes nothing)."""
-        return min(self.decode_steps,
-                   max(req.max_new_tokens - len(req.generated), 1))
-
-    def _prefill_chunk(self, req) -> int:
-        """Run at most ONE prefill chunk for ``req``: allocate the pages
-        the chunk's slots land in (lazy, can preempt younger requests),
-        forward the chunk against the request's prefilled context, and
-        scatter its quantized KV into pages.  Completes prefill (samples
-        the first token, PREFILLING -> RUNNING) when the chunk covers
-        the prefix's last real token.  Returns the prefill tokens spent
-        (the padded chunk width; 0 if ``req`` was preempted before any
-        compute)."""
-        sched = self.scheduler
-        prefix = req.prefix
-        ln = prefix.size
-        # the cursor starts past the matched shared pages of a prefix-
-        # cache hit (page-aligned by construction), so a hit computes
-        # only its un-cached remainder
-        start = req.prefilled
-        if self.prefill_chunk_tokens is None:
-            # monolithic: one chunk covering every remaining page slot
-            c = self.pool.pages_for(ln) * self.page_size - start
-        else:
-            c = self.prefill_chunk_tokens
-        real = min(c, ln - start)
-        if not sched.ensure_prefill_capacity(req, start + real):
-            return 0                     # self-preempted: pool too dry
-        toks = np.zeros((1, c), np.int32)
-        toks[0, :real] = prefix[start:start + real]
-        start_arr = jnp.full((1,), start, jnp.int32)
-        if self.prefill_context == "pages":
-            pt = np.zeros((1, self.max_pages_per_req), np.int32)
-            pt[0, :len(req.pages)] = req.pages
-            cache = self.pool.device_state()
-            # (1, NP), untiled: the layer scan broadcasts it
-            cache["page_table"] = jnp.asarray(pt)
-            logits, new_cache = self._chunk_step_paged(
-                self.params, jnp.asarray(toks), cache, start_arr)
-            self.pool.set_device_state(
-                {key: new_cache[key] for key in
-                 ("k_codes", "v_codes", "k_scale", "v_scale")})
-        else:
-            ctx = self._prefill_ctx.get(req.rid)
-            if start == 0 or ctx is None:
-                ctx = self._empty_ctx()
-            logits, kv, chunk_q = self._chunk_step(
-                self.params, jnp.asarray(toks), ctx, start_arr)
-            self.pool.write_chunk(chunk_q, req.pages, start)
-            if start + real < ln:        # full chunk: extend the carry
-                if ctx["k"].shape[2] == 0:
-                    # preallocate ONCE at the prompt's page-rounded
-                    # length; later chunks dynamic-update-slice into the
-                    # donated buffer.  (The first chunk always runs on
-                    # the width-0 ctx, so single-chunk prefills never
-                    # touch -- or trace -- the preallocated shape.)
-                    width = self.pool.pages_for(ln) * self.page_size
-                    ctx = self._empty_ctx(width)
-                self._prefill_ctx[req.rid] = {
-                    "k": _ctx_write(ctx["k"], kv["k"], jnp.int32(start)),
-                    "v": _ctx_write(ctx["v"], kv["v"], jnp.int32(start))}
-        req.prefilled = start + real
-        self.prefill_tokens_computed += real
-        if req.prefilled == ln:
-            self._prefill_ctx.pop(req.rid, None)
-            nxt = self._sample(np.asarray(logits[0, real - 1]), req)
-            req.generated.append(nxt)
-            req.next_token = nxt
-            sched.prefill_complete(req)
-        return c
 
     def step(self) -> int:
         """One engine step: capacity for the running batch FIRST, then
@@ -664,116 +790,55 @@ class ContinuousEngine:
         # the whole decode_steps window: no page can be missing mid-scan)
         for req in list(sched.running):
             if req.status == RUNNING:    # a victim may drop mid-loop
-                sched.ensure_capacity(req, horizon=self._decode_horizon(req))
+                sched.ensure_capacity(
+                    req, horizon=_decode_horizon(req, self.decode_steps))
         # (2) admit against the unclaimed remainder
         self.last_admitted = [r.rid for r in sched.admit()]
-        # (3) chunked prefill, oldest first, inside the token budget:
-        # at most prefill_chunk_tokens prefill tokens per step (None =
-        # whole prefixes, the monolithic behavior)
-        budget = self.prefill_chunk_tokens
-        spent = 0
-        for req in [r for r in sched.running if r.status == PREFILLING]:
-            while req.status == PREFILLING and \
-                    (budget is None or spent < budget):
-                spent += self._prefill_chunk(req)
-            if req.status == RUNNING and req.done:
-                sched.retire(req)        # budget of 1 / instant EOS
-        # drop carries of requests no longer mid-prefill (preempted or
-        # completed); they re-prefill from chunk 0 on re-admission
-        live = {r.rid for r in sched.running if r.status == PREFILLING}
-        for rid in [r for r in self._prefill_ctx if r not in live]:
-            del self._prefill_ctx[rid]
+        # (3) chunked prefill within the token budget; a request whose
+        # whole budget fit the prefill (budget of 1 / instant EOS)
+        # retires without ever reaching decode
+        for req in self._prefill_phase():
+            if req.done:
+                sched.retire(req)
         # (4) ONE batched K-step decode dispatch for everyone RUNNING
         # (newly promoted requests may still need pages their decode
         # window writes -- their admission gate already reserved budget
         # for the first write, so this never preempts a same-step
         # admission)
-        K = self.decode_steps
         running = []
         for req in list(sched.running):
             if req.status == RUNNING and sched.ensure_capacity(
-                    req, horizon=self._decode_horizon(req)):
+                    req, horizon=_decode_horizon(req, self.decode_steps)):
                 running.append(req)
         self.last_positions = [req.position for req in running]
         if not running:
             return 0
-        b = self.max_batch
-        tokens = np.zeros((b, 1), np.int32)
-        positions = np.zeros((b,), np.int32)
-        done = np.ones((b,), bool)           # padding rows stay dead
-        budget = np.zeros((b,), np.int32)
-        eos = np.full((b,), -1, np.int32)    # -1: matches no vocab id
-        rids = np.zeros((b,), np.int32)
-        gen_idx = np.zeros((b,), np.int32)
-        for row, req in enumerate(running):
-            tokens[row, 0] = req.next_token
-            positions[row] = req.position
-            done[row] = False
-            budget[row] = req.max_new_tokens - len(req.generated)
-            if req.eos_id is not None:
-                eos[row] = req.eos_id
-            rids[row] = req.rid
-            gen_idx[row] = len(req.generated)
-        # epoch-cached device page table: an unchanged (epoch, rows)
-        # pair means every row is bit-identical to the resident copy
-        rows = [req.rid for req in running]
-        if self._pt_dev is None or sched.epoch != self._pt_epoch \
-                or rows != self._pt_rows:
-            page_table = np.zeros((b, self.max_pages_per_req), np.int32)
-            for row, req in enumerate(running):
-                page_table[row, :len(req.pages)] = req.pages
-            self._pt_dev = jnp.asarray(page_table)
-            self._pt_epoch = sched.epoch
-            self._pt_rows = rows
-            self.page_table_uploads += 1
-        toks_dev, new_cache = self._decode_loop(
-            self.params, jnp.asarray(tokens), jnp.asarray(positions),
-            self.pool.device_state(), self._pt_dev, jnp.asarray(done),
-            jnp.asarray(budget), jnp.asarray(eos), jnp.asarray(rids),
-            jnp.asarray(gen_idx), self._base_key)
-        self.pool.set_device_state(new_cache)
+        disp = _dispatch_decode_loop(
+            self._decode_loop, self.params, self.pool, running,
+            self.max_batch, self._pt_cache, sched.epoch,
+            self.max_pages_per_req, self._base_key)
         self.decode_dispatches += 1
-        toks = np.asarray(toks_dev)          # the ONE (B, K) host sync
+        self.page_table_uploads += disp["uploaded"]
+        toks = np.asarray(disp["toks_dev"])  # the ONE (B, K) host sync
         self.token_host_bytes += toks.nbytes
-        # replay the device done-logic on host: walk each row's tokens
-        # until its budget or EOS froze it (later slots are frozen
-        # copies the scan never wrote anywhere live)
-        for row, req in enumerate(running):
-            for j in range(min(K, int(budget[row]))):
-                nxt = int(toks[row, j])
-                req.generated.append(nxt)
-                req.next_token = nxt
-                if req.done:
-                    break
-            if req.done:
-                sched.retire(req)
+        n = _apply_decode_tokens(disp, toks, sched.retire)
         self.steps_run += 1
-        return len(running)
+        return n
 
     # -- counters -----------------------------------------------------------
 
     def reset_counters(self) -> None:
         """Zero every run counter (bench warm-up hygiene: a warm request
         must not leak its pages/steps/preemptions into the measured
-        run).  The pool's CURRENT allocation -- e.g. prefix pages the
-        warm-up left cached -- becomes the new peak baseline."""
-        self.steps_run = 0
-        self.prefill_tokens_computed = 0
-        self.decode_dispatches = 0
-        self.page_table_uploads = 0
-        self.logits_host_bytes = 0
-        self.token_host_bytes = 0
+        run).  Every layer zeroes its OWN ``_COUNTERS`` registry --
+        engine, scheduler, prefix index -- so a counter added to any of
+        them resets without this method changing.  The pool's CURRENT
+        allocation -- e.g. prefix pages the warm-up left cached --
+        becomes the new peak baseline."""
+        for c in self._COUNTERS:
+            setattr(self, c, 0)
         self.pool.alloc_peak = self.pool.used_pages
-        sched = self.scheduler
-        sched.preemption_count = 0
-        sched.prefill_preemptions = 0
-        sched.wasted_prefill_tokens = 0
-        sched.preempted_log.clear()
-        sched.retired_log.clear()
-        if sched.prefix is not None:
-            sched.prefix.hits = 0
-            sched.prefix.hit_tokens = 0
-            sched.prefix.evictions = 0
+        self.scheduler.reset_counters()
 
     # -- drive to completion ------------------------------------------------
 

@@ -67,7 +67,7 @@ import numpy as np
 
 from .paged_kv import PagedKVPool
 
-__all__ = ["Request", "Scheduler", "PrefixIndex",
+__all__ = ["Request", "Scheduler", "PrefixIndex", "DecodeRunner",
            "WAITING", "PREFILLING", "RUNNING", "FINISHED"]
 
 WAITING = "waiting"
@@ -154,12 +154,21 @@ class PrefixIndex:
     ``wasted_prefill_tokens`` likewise never charges cached tokens).
     """
 
+    # every public run counter; ``reset_counters`` derives from this
+    # registry, so adding a counter here is the WHOLE change
+    _COUNTERS = ("hits",          # admissions served by cached pages
+                 "hit_tokens",    # prefill tokens served cached
+                 "evictions")
+
     def __init__(self, pool: PagedKVPool):
         self.pool = pool
         self._entries: "OrderedDict[int, _PrefixEntry]" = OrderedDict()
-        self.hits = 0
-        self.hit_tokens = 0                  # prefill tokens served cached
-        self.evictions = 0
+        for c in self._COUNTERS:
+            setattr(self, c, 0)
+
+    def reset_counters(self) -> None:
+        for c in self._COUNTERS:
+            setattr(self, c, 0)
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -277,6 +286,11 @@ class PrefixIndex:
 class Scheduler:
     """FIFO admission + LIFO preemption over a shared ``PagedKVPool``."""
 
+    # public run counters; ``reset_counters`` derives from this registry
+    _COUNTERS = ("preemption_count",
+                 "prefill_preemptions",   # victims dropped mid-prefill
+                 "wasted_prefill_tokens")  # prefix KV tossed by preemption
+
     def __init__(self, pool: PagedKVPool, max_batch: int,
                  max_pages_per_req: Optional[int] = None,
                  prefix_cache: bool = False):
@@ -290,9 +304,8 @@ class Scheduler:
         self.running: List[Request] = []      # admission order
         self.finished: Dict[int, Request] = {}
         self._next_rid = 0
-        self.preemption_count = 0
-        self.prefill_preemptions = 0          # victims dropped mid-prefill
-        self.wasted_prefill_tokens = 0        # prefix KV tossed by preemption
+        for c in self._COUNTERS:
+            setattr(self, c, 0)
         self.preempted_log: List[int] = []    # rids, in preemption order
         self.retired_log: List[int] = []      # rids, in retirement order
         # batch epoch: bumped on every transition that can change any
@@ -305,6 +318,16 @@ class Scheduler:
         # redundant small upload); missing a bump would corrupt decode,
         # so every pages-touching mutation above bumps it.
         self.epoch = 0
+
+    def reset_counters(self) -> None:
+        """Zero the run counters and logs (bench warm-up hygiene); the
+        prefix index's counters reset with them."""
+        for c in self._COUNTERS:
+            setattr(self, c, 0)
+        self.preempted_log.clear()
+        self.retired_log.clear()
+        if self.prefix is not None:
+            self.prefix.reset_counters()
 
     # -- queue --------------------------------------------------------------
 
@@ -467,6 +490,26 @@ class Scheduler:
         self.waiting.appendleft(req)
         self.epoch += 1
 
+    def reaccept(self, req: Request) -> None:
+        """Queue-front re-entry of a request BOUNCED back from a decode
+        runner (disaggregated serving) -- the twin of :meth:`preempt`
+        for a victim whose pages lived in the DECODE pool: the runner
+        already freed them (``DecodeRunner.bounce``), so only the queue
+        and waste accounting happen here.  The request keeps its
+        generated tokens and re-prefills prompt+generated on
+        re-admission, exactly like a RUNNING preemption victim."""
+        assert req.status == WAITING and not req.pages, \
+            (req.status, req.pages)
+        # its whole prefix KV (computed on the prefill side, shipped
+        # across the handoff) is gone; cached_tokens was reset by the
+        # bounce, so the full prefix counts as wasted -- matching what
+        # a RUNNING-victim preempt charges
+        self.wasted_prefill_tokens += req.position + 1
+        req.preemptions += 1
+        self.preemption_count += 1
+        self.preempted_log.append(req.rid)
+        self.waiting.appendleft(req)
+
     # -- retirement ---------------------------------------------------------
 
     def retire(self, req: Request) -> None:
@@ -475,6 +518,134 @@ class Scheduler:
         -- published by ``prefill_complete`` -- stay cached under the
         prefix index's own reference, shareable until evicted."""
         assert req.status == RUNNING
+        self.pool.free(req.pages)
+        req.pages = []
+        req.status = FINISHED
+        self.running.remove(req)
+        self.finished[req.rid] = req
+        self.retired_log.append(req.rid)
+        self.epoch += 1
+
+    # -- page handoff (disaggregated serving) -------------------------------
+
+    def release(self, req: Request) -> None:
+        """Prefill-side endpoint of a page handoff: the request's prefix
+        pages have been EXPORTED (``PagedKVPool.export_pages``), so drop
+        this side's references and remove the request from the running
+        set -- it stays RUNNING, but on the decode side now.  Under
+        prefix caching the prompt-prefix pages published by
+        ``prefill_complete`` survive in the index under its own
+        reference, shareable by later arrivals exactly as if the
+        request had retired here."""
+        assert req.status == RUNNING, req.status
+        self.pool.free(req.pages)
+        req.pages = []
+        self.running.remove(req)
+        self.epoch += 1
+
+
+class DecodeRunner:
+    """The DECODE-side scheduler half of disaggregated serving
+    (``serve/disagg.py``): owns the decode pool's accounting for
+    RUNNING requests only -- K-step horizon claims, retirement on
+    EOS/budget, and the decode-side mapping epoch (the same epoch
+    protocol the interleaved engine keys its page-table cache on, so
+    uploads stay cached across handoffs).
+
+    Admission, chunk budgeting, prefix caching and mid-prefill
+    preemption all live on the prefill-side admitter (a plain
+    ``Scheduler``); a request only ever arrives here through an accepted
+    page handoff, already RUNNING with its first token sampled.  When
+    the decode pool runs dry mid-growth the YOUNGEST accepted request is
+    BOUNCED -- its decode pages freed, the request queued on ``bounced``
+    for the engine to hand back to the admitter (``Scheduler.reaccept``)
+    where it re-prefills prompt+generated -- the disaggregated analogue
+    of LIFO preemption, with the same youngest-victim-first progress
+    guarantee (``submit`` caps a request's total need at the decode
+    pool, so a lone request always fits and bouncing always frees pages
+    held by someone younger than the oldest)."""
+
+    _COUNTERS = ("bounce_count",)
+
+    def __init__(self, pool: PagedKVPool, max_batch: int):
+        self.pool = pool
+        self.max_batch = int(max_batch)
+        self.running: List[Request] = []      # acceptance order
+        self.finished: Dict[int, Request] = {}
+        self.bounced: List[Request] = []      # drained by the engine
+        self.retired_log: List[int] = []
+        for c in self._COUNTERS:
+            setattr(self, c, 0)
+        self.epoch = 0
+
+    def reset_counters(self) -> None:
+        for c in self._COUNTERS:
+            setattr(self, c, 0)
+        self.retired_log.clear()
+
+    @property
+    def has_slot(self) -> bool:
+        return len(self.running) < self.max_batch
+
+    def accept(self, req: Request, pages: List[int]) -> None:
+        """Take ownership of a handed-off request: its payload has been
+        imported into this pool's ``pages``, which become its page-table
+        row here.  Bumps the epoch -- a new row order means the resident
+        page table is stale."""
+        assert self.has_slot and req.status == RUNNING, req.status
+        req.pages = list(pages)
+        self.running.append(req)
+        self.epoch += 1
+
+    def ensure_capacity(self, req: Request, horizon: int = 1) -> bool:
+        """Decode-side twin of ``Scheduler.ensure_capacity``: own every
+        page the next ``horizon`` decode writes land in, bouncing the
+        youngest accepted request when the pool is dry.  False if
+        ``req`` itself was bounced."""
+        last = req.position + max(int(horizon), 1) - 1
+        need = last // self.pool.page_size + 1
+        grew = False
+        while need > len(req.pages):
+            got = self.pool.alloc(1)
+            if got is not None:
+                req.pages.extend(got)
+                grew = True
+                continue
+            victim = self.running[-1]         # youngest accepted
+            self.bounce(victim)
+            if victim is req:
+                return False
+        if grew:
+            self.epoch += 1
+        return True
+
+    def bounce(self, req: Request) -> None:
+        """Evict a running request from the decode side: free its decode
+        pages and reset its prefill cursor so the admitter re-prefills
+        prompt+generated from chunk 0 (the generated tokens survive --
+        greedy decoding resumes where it stopped, like any RUNNING
+        preemption victim).  The engine drains ``bounced`` back to the
+        prefill admitter's queue front."""
+        assert req.status == RUNNING, req.status
+        self.pool.free(req.pages)
+        req.pages = []
+        req.status = WAITING
+        req.next_token = -1
+        req.prefilled = 0
+        req.cached_tokens = 0
+        self.bounce_count += 1
+        self.running.remove(req)
+        self.bounced.append(req)
+        self.epoch += 1
+
+    def drain_bounced(self) -> List[Request]:
+        out, self.bounced = self.bounced, []
+        return out
+
+    def retire(self, req: Request) -> None:
+        """RUNNING -> FINISHED on the decode side; pages return to the
+        decode pool the same step."""
+        assert req.status == RUNNING, req.status
         self.pool.free(req.pages)
         req.pages = []
         req.status = FINISHED

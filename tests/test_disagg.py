@@ -1,0 +1,300 @@
+"""Disaggregated prefill/decode serving (PR 7): posit8 page handoff.
+
+The pinned invariant extends across the split: temperature-0 output of
+``DisaggEngine`` is token-for-token identical to the interleaved
+``ContinuousEngine`` AND the static per-request ``ServeEngine`` oracle
+-- through decode-pool pressure (bounces), prefix-cache hits and
+channel backpressure -- and the handoff payload is bitwise the pool's
+posit8 codes + scales (``page_handoff_bytes`` models its size
+exactly)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve import (ContinuousEngine, DisaggEngine, PagedKVPool,
+                         PageHandoffChannel, ServeEngine,
+                         page_handoff_bytes)
+from repro.serve.paged_kv import _POOL_KEYS
+
+CFG = get_config("qwen2-0.5b").reduced()
+RNG = np.random.default_rng(11)
+PARAMS = T.lm_init(jax.random.PRNGKey(0), CFG)
+
+
+def _reqs(spec):
+    return [(RNG.integers(0, CFG.vocab, (ln,)).astype(np.int32), gn)
+            for ln, gn in spec]
+
+
+def _run_disagg(reqs, **kw):
+    kw.setdefault("prefill_pages", 40)
+    kw.setdefault("decode_pages", 40)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("max_len", 48)
+    eng = DisaggEngine(CFG, PARAMS, **kw)
+    rids = [eng.submit(p, g) for p, g in reqs]
+    out = eng.run()
+    return [out[r] for r in rids], eng
+
+
+def _run_interleaved(reqs, n_pages=40, **kw):
+    kw.setdefault("page_size", 16)
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("max_len", 48)
+    eng = ContinuousEngine(CFG, PARAMS, n_pages=n_pages, **kw)
+    rids = [eng.submit(p, g) for p, g in reqs]
+    out = eng.run()
+    return [out[r] for r in rids], eng
+
+
+# ---------------------------------------------------------------------------
+# page export/import: the handoff is bitwise
+# ---------------------------------------------------------------------------
+
+def test_export_import_roundtrip_bitwise():
+    """Exported pages scatter bitwise into another pool at DIFFERENT
+    page ids; the payload is a functional gather (stays valid after the
+    source pages are freed) and the destination pages come out at
+    refcount 1 while the source refcounts are untouched."""
+    src = PagedKVPool(CFG, 8, 16)
+    dst = PagedKVPool(CFG, 8, 16)
+    rng = np.random.default_rng(3)
+    for key in _POOL_KEYS:
+        leaf = getattr(src, key)
+        if leaf.dtype == jnp.uint8:
+            fill = rng.integers(0, 256, leaf.shape).astype(np.uint8)
+        else:
+            fill = (2.0 ** rng.integers(-4, 5, leaf.shape)).astype(
+                np.float32)
+        setattr(src, key, jnp.asarray(fill, leaf.dtype))
+    pages = src.alloc(3)
+    payload = src.export_pages(pages)
+    # destination at different ids, deliberately out of order
+    got = dst.alloc(4)
+    target = [got[2], got[0], got[3]]
+    dst.import_pages(payload, target)
+    for key in _POOL_KEYS:
+        want = np.asarray(getattr(src, key))[:, pages]
+        have = np.asarray(getattr(dst, key))[:, target]
+        np.testing.assert_array_equal(have, want, err_msg=key)
+    assert all(dst.refcount(pg) == 1 for pg in got)
+    assert all(src.refcount(pg) == 1 for pg in pages)
+    # functional gather: freeing the source pages must not corrupt an
+    # already-exported payload
+    snap = {key: np.asarray(val) for key, val in payload.items()}
+    src.free(pages)
+    for key in _POOL_KEYS:
+        np.testing.assert_array_equal(np.asarray(payload[key]), snap[key])
+    assert src.used_pages == 0
+
+
+def test_handoff_bytes_model():
+    """The measured payload size is exactly the per-page posit8 model:
+    2 (K+V) x layers x page x kv_heads x (codes + 2-byte scales)."""
+    pool = PagedKVPool(CFG, 8, 16)
+    pages = pool.alloc(3)
+    payload = pool.export_pages(pages)
+    nbytes = sum(int(v.nbytes) for v in payload.values())
+    assert nbytes == 3 * page_handoff_bytes(CFG, 16)
+
+
+def test_channel_depth_and_counters():
+    ch = PageHandoffChannel(depth=1)
+    pool = PagedKVPool(CFG, 8, 16)
+    pages = pool.alloc(2)
+    payload = pool.export_pages(pages)
+
+    class _Req:          # channel only touches the payload
+        pass
+
+    ch.push(_Req(), payload)
+    assert ch.full and len(ch) == 1
+    with pytest.raises(AssertionError):
+        ch.push(_Req(), payload)
+    assert ch.handoffs == 1 and ch.handoff_pages == 2
+    assert ch.handoff_bytes == 2 * page_handoff_bytes(CFG, 16)
+    ch.pop()
+    assert not ch.full and len(ch) == 0
+
+
+# ---------------------------------------------------------------------------
+# the pinned invariant: 3-way temperature-0 parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k_steps", [1, 3])
+def test_disagg_matches_interleaved_and_static(k_steps):
+    """Ample pools, no preemption/bounce: the disaggregated output is
+    token-for-token the interleaved engine's and the static oracle's,
+    for single- and multi-step decode dispatches; every handoff crosses
+    once at exactly the posit8 page-byte model; the decode worker's
+    page table stays epoch-cached across dispatches."""
+    reqs = _reqs([(3, 6), (19, 8), (8, 4), (10, 12), (5, 9)])
+    kw = dict(prefill_chunk_tokens=16, decode_steps=k_steps)
+    disagg, eng_d = _run_disagg(reqs, **kw)
+    inter, eng_i = _run_interleaved(reqs, **kw)
+    static = ServeEngine(CFG, PARAMS, max_len=48, quantized_kv=True)
+    for got_d, got_i, (p, g) in zip(disagg, inter, reqs):
+        want = static.generate(jnp.asarray(p)[None], steps=g)[0]
+        np.testing.assert_array_equal(got_d, got_i)
+        np.testing.assert_array_equal(got_d, want)
+    assert eng_d.prefill.scheduler.preemption_count == 0
+    assert eng_d.decode_bounces == 0
+    assert eng_d.handoffs == len(reqs)
+    assert eng_d.handoff_bytes == \
+        eng_d.handoff_pages * page_handoff_bytes(CFG, 16)
+    # both pools drain on retirement
+    assert eng_d.prefill.pool.used_pages == 0
+    assert eng_d.decode.pool.used_pages == 0
+    # the mapping-epoch protocol survives the handoff: dispatches of an
+    # unchanged batch reuse the resident page table
+    assert eng_d.page_table_uploads < eng_d.decode_dispatches
+    # fused sampling: logits never cross to host on the decode worker
+    assert eng_d.logits_host_bytes == 0
+
+
+def test_disagg_instant_done_retires_prefill_side():
+    """A budget-1 request finishes at prefill completion and must never
+    cross the channel; it still matches the static oracle."""
+    (p, _), = _reqs([(7, 1)])
+    out, eng = _run_disagg([(p, 1)])
+    static = ServeEngine(CFG, PARAMS, max_len=48, quantized_kv=True)
+    np.testing.assert_array_equal(
+        out[0], static.generate(jnp.asarray(p)[None], steps=1)[0])
+    assert eng.handoffs == 0 and eng.decode_dispatches == 0
+    assert list(eng.prefill.scheduler.finished) == [0]
+
+
+def test_disagg_channel_backpressure_depth1():
+    """A depth-1 channel forces completed prefills to park holding
+    their pages; outputs are unchanged and every request still crosses
+    exactly once."""
+    reqs = _reqs([(4, 6), (6, 8), (9, 5), (5, 7)])
+    base, _ = _run_disagg(reqs, decode_steps=2)
+    tight, eng = _run_disagg(reqs, decode_steps=2, channel_depth=1)
+    for a, b in zip(base, tight):
+        np.testing.assert_array_equal(a, b)
+    assert eng.handoffs == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# decode-pool pressure: bounce = disaggregated preemption
+# ---------------------------------------------------------------------------
+
+def test_disagg_decode_pool_pressure_bounces():
+    """A starved DECODE pool bounces requests back across the split
+    mid-run: the run stays deterministic, both pools drain, and
+    requests that were never bounced still match the ample-pool
+    interleaved stream exactly (the same guarantee LIFO preemption
+    gives the interleaved engine)."""
+    reqs = _reqs([(10, 20), (12, 18), (9, 22), (11, 16)])
+    kw = dict(page_size=8, max_batch=4, max_len=40)
+    ample, _ = _run_interleaved(reqs, n_pages=32, decode_steps=1, **kw)
+    kw_d = dict(prefill_pages=32, decode_pages=7, decode_steps=4, **kw)
+    starved, eng = _run_disagg(reqs, **kw_d)
+    starved2, _ = _run_disagg(reqs, **kw_d)
+    assert eng.decode_bounces > 0
+    for a, b in zip(starved, starved2):
+        np.testing.assert_array_equal(a, b)
+    fin = eng.finished
+    for out_a, out_s, rid in zip(ample, starved, sorted(fin)):
+        if fin[rid].preemptions == 0:
+            np.testing.assert_array_equal(out_a, out_s)
+    assert eng.prefill.pool.used_pages == 0
+    assert eng.decode.pool.used_pages == 0
+
+
+def test_disagg_submit_rejects_decode_overflow():
+    """The no-livelock guard: a request whose total footprint exceeds
+    the decode pool is rejected at submit, not bounced forever."""
+    eng = DisaggEngine(CFG, PARAMS, prefill_pages=40, decode_pages=2,
+                       page_size=16, max_batch=4, max_len=48)
+    with pytest.raises(ValueError, match="decode pool"):
+        eng.submit(_reqs([(20, 20)])[0][0], 20)
+
+
+# ---------------------------------------------------------------------------
+# prefix-cache hits cross the split
+# ---------------------------------------------------------------------------
+
+def test_disagg_prefix_cache_parity():
+    """Shared-preamble requests under the disaggregated engine hit the
+    PREFILL-side prefix index and reproduce the interleaved
+    prefix-cache stream token for token (both on the pages context);
+    the shared pages cross the channel as plain payload copies."""
+    pre = RNG.integers(0, CFG.vocab, (16,)).astype(np.int32)
+    reqs = [(np.concatenate([pre, t]).astype(np.int32), g)
+            for t, g in [(RNG.integers(0, CFG.vocab, (3,)), 6),
+                         (RNG.integers(0, CFG.vocab, (5,)), 8),
+                         (RNG.integers(0, CFG.vocab, (2,)), 7)]]
+
+    def drive(eng, sched):
+        rids = [eng.submit(*reqs[0])]
+        for _ in range(3):               # publish the preamble pages
+            eng.step()
+        rids += [eng.submit(p, g) for p, g in reqs[1:]]
+        out = eng.run()
+        return [out[r] for r in rids]
+
+    eng_i = ContinuousEngine(CFG, PARAMS, n_pages=40, page_size=16,
+                             max_batch=4, max_len=48,
+                             prefill_chunk_tokens=16, prefix_cache=True)
+    inter = drive(eng_i, eng_i.scheduler)
+    eng_d = DisaggEngine(CFG, PARAMS, prefill_pages=40, decode_pages=40,
+                         page_size=16, max_batch=4, max_len=48,
+                         prefill_chunk_tokens=16, prefix_cache=True)
+    disagg = drive(eng_d, eng_d.prefill.scheduler)
+    assert eng_d.prefill.scheduler.prefix.hits == \
+        eng_i.scheduler.prefix.hits > 0
+    for a, b in zip(inter, disagg):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# counter registries: reset_counters derives from _COUNTERS everywhere
+# ---------------------------------------------------------------------------
+
+def _assert_registry_zero(obj, label):
+    for c in type(obj)._COUNTERS:
+        assert getattr(obj, c) == 0, f"{label}.{c} survived reset"
+
+
+def test_interleaved_counter_registry_reset():
+    """Regression for the hand-maintained reset: run real traffic, then
+    reset and walk EVERY layer's ``_COUNTERS`` registry -- a counter
+    added to any registry is reset without touching reset_counters."""
+    eng = ContinuousEngine(CFG, PARAMS, n_pages=40, page_size=16,
+                           max_batch=4, max_len=48,
+                           prefill_chunk_tokens=16, prefix_cache=True)
+    eng.submit(*_reqs([(5, 3)])[0])
+    eng.run()
+    assert eng.steps_run > 0 and eng.prefill_tokens_computed > 0
+    eng.reset_counters()
+    _assert_registry_zero(eng, "engine")
+    _assert_registry_zero(eng.scheduler, "scheduler")
+    _assert_registry_zero(eng.scheduler.prefix, "prefix")
+    assert eng.scheduler.retired_log == []
+    assert eng.scheduler.preempted_log == []
+    assert eng.pool.alloc_peak == eng.pool.used_pages
+
+
+def test_disagg_counter_registry_reset():
+    eng = DisaggEngine(CFG, PARAMS, prefill_pages=40, decode_pages=40,
+                       page_size=16, max_batch=4, max_len=48,
+                       prefill_chunk_tokens=16, prefix_cache=True)
+    eng.submit(*_reqs([(5, 3)])[0])
+    eng.run()
+    assert eng.handoffs > 0 and eng.decode_dispatches > 0
+    eng.reset_counters()
+    _assert_registry_zero(eng, "disagg")
+    _assert_registry_zero(eng.prefill, "prefill-worker")
+    _assert_registry_zero(eng.decode, "decode-worker")
+    _assert_registry_zero(eng.prefill.scheduler, "admitter")
+    _assert_registry_zero(eng.prefill.scheduler.prefix, "prefix")
+    _assert_registry_zero(eng.decode.runner, "runner")
+    _assert_registry_zero(eng.channel, "channel")
+    assert eng.decode.runner.retired_log == []

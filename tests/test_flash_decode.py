@@ -118,6 +118,47 @@ def test_flash_kernel_pad_matches_blocked(pos):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("softcap", [0.0, 20.0])
+@pytest.mark.parametrize("group", [None, 8])
+def test_flash_kernel_pad_skip_whole_blocks(softcap, group):
+    """Pads covering WHOLE KV blocks: the index map now clamps those
+    blocks onto the first live one (they are never fetched) and the
+    compute gate skips them -- the output must still match the oracle's
+    mask-everything path, including a pad-free row and a row whose pad
+    is a multiple of the block size."""
+    cache = _quantized_cache(b=3)
+    q = jnp.asarray(RNG.normal(size=(3, 2, 2, 32)).astype(np.float32))
+    pad = jnp.asarray([0, 16, 48], jnp.int32)    # 0, 1 and 3 whole blocks
+    got = flash_decode_pallas(
+        q, cache["k_codes"], cache["k_scale"], cache["v_codes"],
+        cache["v_scale"], jnp.int32(55), pad=pad, blk=16,
+        softcap=softcap, interpret=True)
+    want = ref.flash_decode_ref(
+        q, cache["k_codes"], cache["k_scale"], cache["v_codes"],
+        cache["v_scale"], 55, softcap, pad=pad)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("pos", [33, 47, 63])
+def test_flash_kernel_pad_skip_matches_blocked(pos):
+    """Kernel (skip-below-pad index map) vs the XLA blocked fallback
+    (which still masks below-pad slots): same result on rows whose pad
+    skips whole blocks, lands mid-block, or equals pos (a single live
+    slot -- the smallest legal window)."""
+    cache = _quantized_cache(b=3)
+    q = jnp.asarray(RNG.normal(size=(3, 2, 2, 32)).astype(np.float32))
+    pad = jnp.asarray([32, 19, pos], jnp.int32)
+    a = flash_decode_pallas(q, cache["k_codes"], cache["k_scale"],
+                            cache["v_codes"], cache["v_scale"],
+                            jnp.int32(pos), pad=pad, blk=16,
+                            interpret=True)
+    b = A.decode_quantized_blocks(q, cache, jnp.int32(pos), blk=16,
+                                  pad=pad)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_engine_ragged_generate_flash_matches_blocked():
     """lengths= (ragged static batch) no longer forces the blocked
     fallback under decode_impl='flash': both paths emit the same
