@@ -36,9 +36,10 @@ from repro.core.policy import PrecisionPolicy
 from repro.kernels.flash_decode import default_kv_block, flash_decode_pallas
 from repro.models import attention as A
 from repro.models import zoo
+from repro.obs.stats import time_call
 from repro.roofline.analysis import decode_kv_bytes
 from repro.serve.engine import ServeEngine
-from .common import emit, time_call
+from .common import emit
 
 OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_decode.json")
 

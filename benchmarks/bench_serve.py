@@ -51,6 +51,15 @@ to BENCH_serve.json at the repo root (CI refreshes it via ``--smoke``);
 ``scenario_wall_s`` in the JSON records each scenario's harness wall
 time.
 
+Serving-plane telemetry (``repro.obs``, PR 8) is exercised throughout:
+the continuous scenario's request-latency percentiles are derived from
+the lifecycle trace (SUBMIT -> RETIRE stamps) instead of hand-rolled
+dicts; the traced decode-loop runs assert the trace's DECODE_DISPATCH
+count equals both the engine counter and the ``(gen-1)/K`` closed
+form; the disaggregated burst asserts its HANDOFF events mirror the
+channel counters exactly and exports a schema-validated Chrome-trace
+artifact to ``artifacts/serve_trace.json`` (open in Perfetto).
+
   PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
 """
 
@@ -67,12 +76,15 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import zoo
+from repro.obs import TraceRecorder, validate_chrome_trace
 from repro.roofline.analysis import decode_kv_bytes
 from repro.serve import ContinuousEngine, DisaggEngine, ServeEngine
 from repro.serve.paged_kv import page_handoff_bytes, paged_kv_bytes_per_step
 from .common import emit
 
 OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+TRACE_JSON = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                          "serve_trace.json")
 
 
 def _trace(cfg, n_req, rng):
@@ -89,9 +101,15 @@ def _trace(cfg, n_req, rng):
 
 def _serve_continuous(cfg, params, trace, n_pages, page_size, max_batch,
                       max_len):
+    # lifecycle tracing is ON for this scenario: the request latency
+    # percentiles come from the recorder's SUBMIT/RETIRE stamps instead
+    # of the hand-rolled arrive/finish dicts this harness used to keep
+    # (the recorder stamps SUBMIT inside ``eng.submit`` -- the same
+    # instant the old dict recorded)
+    rec = TraceRecorder()
     eng = ContinuousEngine(cfg, params, n_pages=n_pages,
                            page_size=page_size, max_batch=max_batch,
-                           max_len=max_len)
+                           max_len=max_len, trace=rec)
     # warm the jits (prefill bucket + decode step) off the clock, then
     # RESET the counters: the warm request's pages/steps/preemptions
     # used to leak into the reported peak_pages / engine_steps baseline
@@ -99,40 +117,39 @@ def _serve_continuous(cfg, params, trace, n_pages, page_size, max_batch,
     eng.run()
     eng.scheduler.finished.pop(warm)
     eng.reset_counters()
+    rec.clear()                    # drop the warm request's events too
 
     pending = sorted(trace, key=lambda t: t[0])
-    arrive, finish = {}, {}
     util, positions_per_step = [], []
     t0 = time.perf_counter()
     rids = {}
     i = 0
-    n_retired = 0
     while pending or eng.scheduler.has_work:
         while pending and pending[0][0] <= i:
             _, prompt, gen = pending.pop(0)
-            rid = eng.submit(prompt, gen)
-            rids[rid] = (prompt, gen)
-            arrive[rid] = time.perf_counter()
+            rids[eng.submit(prompt, gen)] = (prompt, gen)
         eng.step()
         # the engine records the positions its decode ACTUALLY served,
         # including requests that retired within the step
         positions_per_step.append(list(eng.last_positions))
-        util.append(eng.pool.utilization)
-        # only the rids retired THIS step (the old finished-dict rescan
-        # re-stamped every finished request every step: O(n^2))
-        log = eng.scheduler.retired_log
-        for rid_ in log[n_retired:]:
-            finish[rid_] = time.perf_counter()
-        n_retired = len(log)
+        # read through the registry gauge -- same number as
+        # ``eng.pool.utilization``, exercising the metrics plane
+        util.append(eng.metrics.value("pool/utilization"))
         i += 1
     dt = time.perf_counter() - t0
     toks = sum(len(eng.scheduler.finished[r].generated) for r in rids)
-    lat = np.asarray([finish[r] - arrive[r] for r in rids])
+    # per-request SLOs straight from the lifecycle trace; every request
+    # must have a complete SUBMIT -> ... -> RETIRE record
+    slo = rec.request_slo()
+    assert set(slo) == set(rids), (set(slo), set(rids))
+    assert rec.count("RETIRE") == len(rids), rec.count("RETIRE")
+    lat = np.asarray([slo[r]["e2e_ms"] for r in rids])
     return eng, dict(
         tokens=toks, wall_s=dt, tokens_per_s=toks / dt,
         engine_steps=i,
-        latency_p50_ms=float(np.percentile(lat, 50) * 1e3),
-        latency_p99_ms=float(np.percentile(lat, 99) * 1e3),
+        latency_p50_ms=float(np.percentile(lat, 50)),
+        latency_p99_ms=float(np.percentile(lat, 99)),
+        slo_ms=rec.slo_summary(),
         pool_util_mean=float(np.mean(util)),
         pool_util_peak=float(np.max(util)),
         peak_pages=eng.pool.alloc_peak,
@@ -204,11 +221,16 @@ def _serve_disagg_burst(cfg, params, page_size, max_len, disagg):
     longs = [(rng.integers(0, cfg.vocab,
                            (4 * page_size,)).astype(np.int32), 4)
              for _ in range(2)]
+    # the disagg side runs TRACED (handoff/dispatch events feed the
+    # tie-out asserts and the exported artifact); the interleaved side
+    # runs untraced, so the shared static-oracle parity check below
+    # doubles as the tracing-changes-no-math check
+    rec = TraceRecorder() if disagg else None
     if disagg:
         eng = DisaggEngine(cfg, params, prefill_pages=24, decode_pages=24,
                            page_size=page_size, max_batch=4,
                            max_len=max_len,
-                           prefill_chunk_tokens=page_size)
+                           prefill_chunk_tokens=page_size, trace=rec)
     else:
         eng = ContinuousEngine(cfg, params, n_pages=24,
                                page_size=page_size, max_batch=4,
@@ -245,7 +267,7 @@ def _serve_disagg_burst(cfg, params, page_size, max_len, disagg):
     med = np.median(np.asarray(reps), axis=0) * 1e3
     fin = eng.finished if disagg else eng.scheduler.finished
     outs = {r: fin[r].output for r in rids}
-    return eng, rids, outs, float(np.percentile(med, 99))
+    return eng, rids, outs, float(np.percentile(med, 99)), rec
 
 
 def _preamble_trace(cfg, rng, n_req, pre_tokens, arrival_gap):
@@ -322,17 +344,23 @@ def _serve_shared_preamble(cfg, params, trace, n_pages, page_size,
 
 
 def _serve_decode_loop(cfg, params, page_size, max_batch, max_len,
-                       n_pages, gen, k_steps):
+                       n_pages, gen, k_steps, traced=False):
     """One full-batch cohort decoded with ``decode_steps=k_steps``.
 
     Every request has the same 4-token prompt length, the same ``gen``
     budget and no EOS, so the whole batch moves in lockstep and the
     dispatch count has a closed form: prefill samples token 1 on the
     host, then each engine step drives ONE jitted dispatch of K fused
-    decode+sample iterations -- ``(gen - 1) / K`` dispatches total."""
+    decode+sample iterations -- ``(gen - 1) / K`` dispatches total.
+
+    With ``traced`` a TraceRecorder rides along and its
+    DECODE_DISPATCH count is asserted against the engine counter AND
+    its registry mirror (the caller asserts the closed form)."""
+    rec = TraceRecorder() if traced else None
     eng = ContinuousEngine(cfg, params, n_pages=n_pages,
                            page_size=page_size, max_batch=max_batch,
-                           max_len=max_len, decode_steps=k_steps)
+                           max_len=max_len, decode_steps=k_steps,
+                           trace=rec)
     rng = np.random.default_rng(11)
     prompts = [rng.integers(0, cfg.vocab, (4,)).astype(np.int32)
                for _ in range(max_batch)]
@@ -340,6 +368,8 @@ def _serve_decode_loop(cfg, params, page_size, max_batch, max_len,
     eng.run()
     eng.scheduler.finished.pop(warm)
     eng.reset_counters()
+    if rec is not None:
+        rec.clear()
 
     rids = [eng.submit(p, gen) for p in prompts]
     t0 = time.perf_counter()
@@ -347,6 +377,12 @@ def _serve_decode_loop(cfg, params, page_size, max_batch, max_len,
     dt = time.perf_counter() - t0
     toks = sum(len(eng.scheduler.finished[r].generated) for r in rids)
     outs = [np.asarray(eng.scheduler.finished[r].generated) for r in rids]
+    if rec is not None:
+        # one DECODE_DISPATCH event per jitted dispatch: the trace, the
+        # engine counter and the registry must agree exactly
+        assert rec.count("DECODE_DISPATCH") == eng.decode_dispatches \
+            == eng.metrics.value("engine/decode_dispatches"), \
+            (rec.count("DECODE_DISPATCH"), eng.decode_dispatches)
     return outs, dict(
         decode_steps=k_steps,
         tokens=toks, wall_s=dt, tokens_per_s=toks / dt,
@@ -501,9 +537,9 @@ def run(smoke: bool = False) -> None:
     # decode worker's critical path (dispatch + token sync) never
     # contains a prefill chunk -- the prefill worker runs inside the
     # async overlap window while the device scans the decode loop
-    eng_i, rids_i, outs_i, p99_inter = _serve_disagg_burst(
+    eng_i, rids_i, outs_i, p99_inter, _ = _serve_disagg_burst(
         cfg, params, page_size, lp_max_len, disagg=False)
-    eng_d, rids_d, outs_d, p99_disagg = _serve_disagg_burst(
+    eng_d, rids_d, outs_d, p99_disagg, rec_d = _serve_disagg_burst(
         cfg, params, page_size, lp_max_len, disagg=True)
     static_dg = ServeEngine(cfg, params, max_len=lp_max_len,
                             quantized_kv=True)
@@ -524,7 +560,26 @@ def run(smoke: bool = False) -> None:
     # 4 drives x 5 requests, every one crosses the channel exactly once
     assert eng_d.handoffs == 4 * len(rids_d), eng_d.handoffs
     assert eng_d.decode_bounces == 0, eng_d.decode_bounces
+    # the trace mirrors the channel counters EXACTLY across all 4
+    # drives (no reset between drives; the recorder's per-kind count /
+    # arg-sum accumulators are eviction-proof) -- the observability
+    # acceptance tie-out: HANDOFF events == handoffs, and their summed
+    # pages/bytes args == the posit8 page model
+    assert rec_d.count("HANDOFF") == eng_d.handoffs, \
+        (rec_d.count("HANDOFF"), eng_d.handoffs)
+    assert rec_d.arg_sum("HANDOFF", "pages") == eng_d.handoff_pages, \
+        rec_d.arg_sum("HANDOFF", "pages")
+    assert rec_d.arg_sum("HANDOFF", "bytes") == eng_d.handoff_bytes, \
+        rec_d.arg_sum("HANDOFF", "bytes")
+    assert eng_d.metrics.value("channel/handoffs") == eng_d.handoffs
+    # export the disagg burst's trace and schema-validate it: the
+    # artifact CI checks is Perfetto-loadable by construction
+    os.makedirs(os.path.dirname(TRACE_JSON), exist_ok=True)
+    rec_d.write_chrome_trace(TRACE_JSON)
+    with open(TRACE_JSON) as f:
+        tstats = validate_chrome_trace(json.load(f))
     results["disagg"] = {
+        "trace_events": tstats,
         "n_req": len(rids_d),
         "long_prompt_tokens": 4 * page_size,
         "p99_decode_step_ms_interleaved": p99_inter,
@@ -543,6 +598,10 @@ def run(smoke: bool = False) -> None:
          f"handoffs={eng_d.handoffs};"
          f"handoff_bytes={eng_d.handoff_bytes};"
          f"bounces={eng_d.decode_bounces};static_parity=1")
+    emit("serve/trace_artifact", 0.0,
+         f"events={tstats['total']};spans={tstats['spans']};"
+         f"instants={tstats['instants']};"
+         f"path={os.path.normpath(TRACE_JSON)}")
     lap("disagg")
 
     # --- prefix caching: shared-preamble arrivals, cache on vs off
@@ -609,11 +668,17 @@ def run(smoke: bool = False) -> None:
     dl_results = {}
     base_out = None
     for k_steps in (1, 4, 8):
+        # K=1 runs UNTRACED while K=4/8 run traced, so the cross-K
+        # token-equality assert below doubles as the traced-vs-
+        # untraced temperature-0 parity check (tracing never touches
+        # device math)
         outs, stats = _serve_decode_loop(
             cfg, params, page_size, max_batch, max_len, n_pages,
-            gen, k_steps)
+            gen, k_steps, traced=k_steps != 1)
         # closed-form dispatch model: lockstep cohort, (gen-1)/K
         # dispatches, one (max_batch, K) int32 sync each, no logits
+        # (with tracing on, _serve_decode_loop already tied the trace's
+        # DECODE_DISPATCH count to this same counter)
         want = (gen - 1) // k_steps
         assert stats["decode_dispatches"] == want, (k_steps, stats)
         assert stats["logits_host_bytes"] == 0, stats

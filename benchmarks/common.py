@@ -1,24 +1,16 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV emission.
+
+The timing/percentile helpers live in ``repro.obs.stats`` (one shared
+implementation for benchmarks and the serving-plane telemetry);
+``time_call`` is re-exported here so existing bench imports keep
+working unchanged.
+"""
 
 from __future__ import annotations
 
-import time
-from typing import Callable
+from repro.obs.stats import pctl_ms, percentiles, time_call  # noqa: F401
 
-import jax
-
-
-def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall time per call in microseconds (blocks on results)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+__all__ = ["time_call", "pctl_ms", "percentiles", "emit"]
 
 
 def emit(name: str, us: float, derived: str) -> None:

@@ -100,8 +100,14 @@ if ARGS.continuous:
     # into (see serve/__init__ for the page-table layout).
     from repro.configs import get_config
     from repro.models import zoo
+    from repro.obs import TraceRecorder
     from repro.serve import ContinuousEngine
 
+    # request-lifecycle tracing: the engine stamps SUBMIT/ADMIT/.../
+    # RETIRE per stream, from which per-stream SLOs (TTFT, TPOT, queue
+    # wait) are derived below -- the numbers XR latency classes are
+    # scheduled on (docs/observability.md)
+    recorder = TraceRecorder()
     cfg = get_config("qwen2-0.5b").reduced()
     lm = zoo.init_model(jax.random.PRNGKey(7), cfg)
     # chunked paged prefill: one engine step pays at most 16 prefill
@@ -125,13 +131,15 @@ if ARGS.continuous:
                            page_size=16, max_batch=4, max_len=64,
                            policy=PrecisionPolicy.uniform("posit8_0"),
                            prefill_chunk_tokens=16, prefix_cache=True,
-                           decode_steps=ARGS.decode_steps)
+                           decode_steps=ARGS.decode_steps,
+                           trace=recorder)
     else:
         eng = ContinuousEngine(cfg, lm, n_pages=32, page_size=16,
                                max_batch=4, max_len=64,
                                policy=PrecisionPolicy.uniform("posit8_0"),
                                prefill_chunk_tokens=16, prefix_cache=True,
-                               decode_steps=ARGS.decode_steps)
+                               decode_steps=ARGS.decode_steps,
+                               trace=recorder)
     rng = np.random.default_rng(0)
     scene = rng.integers(0, cfg.vocab, (16,))   # shared scene preamble
     arrivals = [(s, int(rng.integers(3, 12)), int(rng.integers(4, 16)))
@@ -173,4 +181,16 @@ if ARGS.continuous:
           f"{eng.decode_dispatches} dispatches, "
           f"{eng.page_table_uploads} page-table uploads, "
           f"{eng.logits_host_bytes} logits bytes to host")
+    # per-stream SLOs from the lifecycle trace: time-to-first-token,
+    # inter-token latency and queue wait per XR stream, plus aggregate
+    # percentiles -- what a latency-class scheduler would act on
+    print("stream SLOs (ms):")
+    for name, s in recorder.slo_summary().items():
+        print(f"  {name:>17}: p50 {s['p50']:8.2f}  p95 {s['p95']:8.2f}  "
+              f"p99 {s['p99']:8.2f}  (n={s['n']})")
+    util = eng.metrics.value(
+        "decode/pool/utilization" if ARGS.disagg else "pool/utilization")
+    print(f"pool utilization at drain: {util:.2f}; "
+          f"{recorder.count('PREFILL_CHUNK')} prefill chunks traced "
+          f"across {len(recorder)} ring events")
 print("OK")

@@ -32,6 +32,11 @@ programs are placed on distinct device slices
 (``parallel.sharding.split_devices``).
 
   ... --disagg --batch 8 --n-pages 48 --prefill-chunk 16 --decode-steps 4
+
+``--trace out.json`` records request-lifecycle events and per-step
+spans on the paged engines and writes a Chrome-trace JSON (open in
+Perfetto / chrome://tracing); ``--metrics`` prints a Prometheus-style
+snapshot of the engine's metric registry.  See docs/observability.md.
 """
 
 from __future__ import annotations
@@ -55,16 +60,18 @@ def _static(args, cfg, params, policy) -> None:
                       quantized_kv=args.quantized_kv, policy=policy)
     toks = jnp.asarray(np.random.default_rng(0).integers(
         0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = eng.generate(toks, steps=args.steps,
                        temperature=args.temperature)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     tps = args.batch * args.steps / dt
     print(f"generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
     print(out[:, args.prompt_len:][:2])
 
 
 def _continuous(args, cfg, params, policy) -> None:
+    from ..obs import TraceRecorder
+    rec = TraceRecorder() if (args.trace or args.metrics) else None
     rng = np.random.default_rng(0)
     max_len = args.prompt_len + args.steps + 8
     page_size = args.page_size
@@ -100,7 +107,8 @@ def _continuous(args, cfg, params, policy) -> None:
             prefix_cache=args.prefix_cache,
             decode_steps=args.decode_steps,
             prefill_device=None if one else pdev[0],
-            decode_device=None if one else ddev[0])
+            decode_device=None if one else ddev[0],
+            trace=rec)
     else:
         eng = ContinuousEngine(
             cfg, params, n_pages=args.n_pages, page_size=page_size,
@@ -108,7 +116,8 @@ def _continuous(args, cfg, params, policy) -> None:
             temperature=args.temperature,
             prefill_chunk_tokens=args.prefill_chunk,
             prefix_cache=args.prefix_cache,
-            decode_steps=args.decode_steps)
+            decode_steps=args.decode_steps,
+            trace=rec)
     # ragged request mix around the CLI's nominal prompt/step counts;
     # under --prefix-cache every prompt opens with one shared page-sized
     # preamble (the XR scene/system prompt ahead of every query), so
@@ -125,9 +134,9 @@ def _continuous(args, cfg, params, policy) -> None:
             prompt = np.concatenate([preamble, prompt])
             steps = max(1, min(steps, max_len - prompt.size))
         rids.append(eng.submit(prompt, steps))
-    t0 = time.time()
+    t0 = time.perf_counter()
     eng.run()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     finished = eng.finished if args.disagg else eng.scheduler.finished
     sched = eng.prefill.scheduler if args.disagg else eng.scheduler
     toks = sum(len(finished[r].generated) for r in rids)
@@ -162,6 +171,17 @@ def _continuous(args, cfg, params, policy) -> None:
               f"{px.evictions} evictions")
     for r in rids[:2]:
         print(f"  req {r}: {np.asarray(finished[r].generated)}")
+    if rec is not None:
+        print("slo (ms):")
+        for name, s in rec.slo_summary().items():
+            print(f"  {name:>17}: p50 {s['p50']:8.2f}  p95 {s['p95']:8.2f}  "
+                  f"p99 {s['p99']:8.2f}  (n={s['n']})")
+    if args.trace:
+        rec.write_chrome_trace(args.trace)
+        print(f"wrote Chrome trace ({len(rec)} events) to {args.trace} -- "
+              f"open in Perfetto (ui.perfetto.dev) or chrome://tracing")
+    if args.metrics:
+        print(eng.metrics.prometheus_text(), end="")
 
 
 def main() -> None:
@@ -200,6 +220,14 @@ def main() -> None:
                          "host round trip drives K on-device "
                          "decode+sample steps (temperature-0 output is "
                          "identical for every K)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="record request-lifecycle events + step spans "
+                         "and write a Chrome-trace JSON (open in "
+                         "Perfetto); paged engines only")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print a Prometheus-style text snapshot of the "
+                         "engine's metric registry after the run; paged "
+                         "engines only")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -213,6 +241,10 @@ def main() -> None:
     if args.continuous or args.disagg:
         _continuous(args, cfg, params, policy)
     else:
+        if args.trace or args.metrics:
+            print("note: --trace/--metrics need the paged engines "
+                  "(--continuous/--disagg); the static engine carries "
+                  "no telemetry")
         _static(args, cfg, params, policy)
 
 

@@ -1,0 +1,76 @@
+"""Shared timing/percentile helpers for benches and telemetry.
+
+This is the single home for the small statistics helpers that used to
+be copy-pasted across ``benchmarks/common.py``, ``bench_serve.py`` and
+``bench_decode.py``.  The bench modules now import from here (directly
+or via the ``benchmarks.common`` re-export), so median/percentile
+semantics cannot drift between benches.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Sequence
+
+import numpy as np
+
+__all__ = ["time_call", "pctl_ms", "percentiles", "summarize"]
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time of ``fn(*args)`` in microseconds.
+
+    Blocks on the result via ``block_until_ready`` when available, so
+    dispatched device work is included in the measurement.
+    """
+    for _ in range(warmup):
+        r = fn(*args)
+        _block(r)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        _block(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _block(r) -> None:
+    if hasattr(r, "block_until_ready"):
+        r.block_until_ready()
+    elif isinstance(r, (tuple, list)):
+        for x in r:
+            if hasattr(x, "block_until_ready"):
+                x.block_until_ready()
+
+
+def pctl_ms(seconds: Sequence[float], q: float) -> float:
+    """``q``-th percentile of a list of second-valued samples, in ms.
+
+    Matches the historical bench expression
+    ``float(np.percentile(xs, q) * 1e3)`` exactly (percentile first,
+    then unit conversion).
+    """
+    return float(np.percentile(np.asarray(seconds, dtype=np.float64), q) * 1e3)
+
+
+def percentiles(values: Sequence[float], qs: Sequence[float] = (50, 95, 99)) -> Dict[str, float]:
+    """``{"p50": ..., "p95": ...}`` over raw samples (no unit change)."""
+    arr = np.asarray(values, dtype=np.float64)
+    return {f"p{g:g}": float(np.percentile(arr, g)) for g in qs}
+
+
+def summarize(values: Sequence[float]) -> Dict[str, float]:
+    """Count/mean/min/max plus p50/p95/p99 of raw samples."""
+    arr = np.asarray(values, dtype=np.float64)
+    if arr.size == 0:
+        return {"n": 0}
+    out = {
+        "n": int(arr.size),
+        "mean": float(arr.mean()),
+        "min": float(arr.min()),
+        "max": float(arr.max()),
+    }
+    out.update(percentiles(arr))
+    return out

@@ -67,6 +67,7 @@ three leg pairs.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -79,6 +80,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.policy import PrecisionPolicy
 from ..models import zoo
+from ..obs import MetricRegistry, NULL_RECORDER, bind_counters
 from .engine import (_build_decode_loop, _ChunkPrefillMixin,
                      _apply_decode_tokens, _decode_horizon,
                      _dispatch_decode_loop, _PageTableCache,
@@ -88,6 +90,8 @@ from .scheduler import RUNNING, DecodeRunner, Request, Scheduler
 
 __all__ = ["PageHandoffChannel", "PrefillWorker", "DecodeWorker",
            "DisaggEngine"]
+
+_NULL_CTX = contextlib.nullcontext()
 
 
 class PageHandoffChannel:
@@ -111,13 +115,16 @@ class PageHandoffChannel:
                  "handoff_pages",   # pages moved
                  "handoff_bytes")   # device bytes moved (sum of .nbytes)
 
-    def __init__(self, depth: int = 2, device=None):
+    def __init__(self, depth: int = 2, device=None,
+                 registry: Optional[MetricRegistry] = None,
+                 trace=None, namespace: str = "channel"):
         assert depth >= 1, depth
         self.depth = int(depth)
         self.device = device
         self._q: Deque[Tuple[Request, Dict[str, jax.Array]]] = deque()
-        for c in self._COUNTERS:
-            setattr(self, c, 0)
+        self.metrics = registry if registry is not None else MetricRegistry()
+        self._trace = trace if trace is not None else NULL_RECORDER
+        bind_counters(self, self.metrics, namespace)
 
     def reset_counters(self) -> None:
         for c in self._COUNTERS:
@@ -132,13 +139,17 @@ class PageHandoffChannel:
 
     def push(self, req: Request, payload: Dict[str, jax.Array]) -> None:
         assert not self.full, "push on a full channel (check .full first)"
-        if self.device is not None:
-            payload = {key: jax.device_put(val, self.device)
-                       for key, val in payload.items()}
+        rid = getattr(req, "rid", None)
+        with self._trace.span("channel_push", rid=rid):
+            if self.device is not None:
+                payload = {key: jax.device_put(val, self.device)
+                           for key, val in payload.items()}
+        pages = int(payload["k_codes"].shape[1])
+        nbytes = sum(int(val.nbytes) for val in payload.values())
         self.handoffs += 1
-        self.handoff_pages += int(payload["k_codes"].shape[1])
-        self.handoff_bytes += sum(int(val.nbytes)
-                                  for val in payload.values())
+        self.handoff_pages += pages
+        self.handoff_bytes += nbytes
+        self._trace.event("HANDOFF", rid=rid, pages=pages, bytes=nbytes)
         self._q.append((req, payload))
 
     def peek(self) -> Tuple[Request, Dict[str, jax.Array]]:
@@ -169,7 +180,8 @@ class PrefillWorker(_ChunkPrefillMixin):
                  page_size: int, max_batch: int, max_pages_per_req: int,
                  kv_group: Optional[int], temperature: float, base_key,
                  prefill_chunk_tokens: Optional[int], prefill_context: str,
-                 prefix_cache: bool, device=None):
+                 prefix_cache: bool, device=None,
+                 registry: Optional[MetricRegistry] = None, trace=None):
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
@@ -178,14 +190,19 @@ class PrefillWorker(_ChunkPrefillMixin):
         self._base_key = base_key
         self.prefill_chunk_tokens = prefill_chunk_tokens
         self.prefill_context = prefill_context
+        self.metrics = registry if registry is not None else MetricRegistry()
+        self._trace = trace if trace is not None else NULL_RECORDER
         pool = PagedKVPool(cfg, n_pages, page_size, kv_group)
         if device is not None:
             pool.set_device_state(
                 {key: jax.device_put(getattr(pool, key), device)
                  for key in _POOL_KEYS})
+        pool.register_gauges(self.metrics, "prefill/pool")
         self.scheduler = Scheduler(pool, max_batch,
                                    max_pages_per_req=max_pages_per_req,
-                                   prefix_cache=prefix_cache)
+                                   prefix_cache=prefix_cache,
+                                   registry=self.metrics, trace=self._trace,
+                                   namespace="prefill/scheduler")
         self._chunk_step = jax.jit(
             build_prefill_chunk_step(cfg, kv_group))
         self._chunk_step_paged = jax.jit(
@@ -193,8 +210,7 @@ class PrefillWorker(_ChunkPrefillMixin):
             donate_argnums=(2,))
         self._prefill_ctx: Dict[int, Any] = {}
         self._ready: List[Request] = []       # completed, awaiting channel
-        for c in self._COUNTERS:
-            setattr(self, c, 0)
+        bind_counters(self, self.metrics, "prefill")
 
     @property
     def pool(self) -> PagedKVPool:
@@ -264,25 +280,32 @@ class DecodeWorker:
     def __init__(self, cfg: ModelConfig, params: Any, n_pages: int,
                  page_size: int, max_batch: int, max_pages_per_req: int,
                  kv_group: Optional[int], temperature: float, base_key,
-                 decode_steps: int, device=None):
+                 decode_steps: int, device=None,
+                 registry: Optional[MetricRegistry] = None, trace=None,
+                 annotation=None):
         self.params = params
         self.max_batch = max_batch
         self.max_pages_per_req = max_pages_per_req
         self.decode_steps = decode_steps
         self._base_key = base_key
+        self.metrics = registry if registry is not None else MetricRegistry()
+        self._trace = trace if trace is not None else NULL_RECORDER
+        self._annotation = annotation
         pool = PagedKVPool(cfg, n_pages, page_size, kv_group)
         if device is not None:
             pool.set_device_state(
                 {key: jax.device_put(getattr(pool, key), device)
                  for key in _POOL_KEYS})
-        self.runner = DecodeRunner(pool, max_batch)
+        pool.register_gauges(self.metrics, "decode/pool")
+        self.runner = DecodeRunner(pool, max_batch,
+                                   registry=self.metrics, trace=self._trace,
+                                   namespace="decode/runner")
         self._decode_loop = jax.jit(
             _build_decode_loop(cfg, temperature, decode_steps),
             donate_argnums=(3,))
         self._pt_cache = _PageTableCache()
         self.last_positions: List[int] = []
-        for c in self._COUNTERS:
-            setattr(self, c, 0)
+        bind_counters(self, self.metrics, "decode")
 
     @property
     def pool(self) -> PagedKVPool:
@@ -306,7 +329,8 @@ class DecodeWorker:
             pages = self.pool.alloc(int(payload["k_codes"].shape[1]))
             if pages is None:
                 break                     # decode pool dry: retry next step
-            self.pool.import_pages(payload, pages)
+            with self._trace.span("channel_pull", rid=req.rid):
+                self.pool.import_pages(payload, pages)
             self.runner.accept(req, pages)
             channel.pop()
             took += 1
@@ -326,12 +350,17 @@ class DecodeWorker:
         self.last_positions = [req.position for req in running]
         if not running:
             return None
-        disp = _dispatch_decode_loop(
-            self._decode_loop, self.params, self.pool, running,
-            self.max_batch, self._pt_cache, runner.epoch,
-            self.max_pages_per_req, self._base_key)
+        ann = self._annotation("decode_dispatch") \
+            if self._annotation is not None else _NULL_CTX
+        with ann:
+            disp = _dispatch_decode_loop(
+                self._decode_loop, self.params, self.pool, running,
+                self.max_batch, self._pt_cache, runner.epoch,
+                self.max_pages_per_req, self._base_key)
         self.decode_dispatches += 1
         self.page_table_uploads += disp["uploaded"]
+        self._trace.event("DECODE_DISPATCH", batch=len(running),
+                          k=self.decode_steps, uploaded=disp["uploaded"])
         return disp
 
     def sync(self, disp) -> int:
@@ -342,6 +371,7 @@ class DecodeWorker:
             return 0
         toks = np.asarray(disp["toks_dev"])  # the ONE (B, K) host sync
         self.token_host_bytes += toks.nbytes
+        self._trace.event("DECODE_SYNC", token_bytes=toks.nbytes)
         return _apply_decode_tokens(disp, toks, self.runner.retire)
 
 
@@ -377,6 +407,9 @@ class DisaggEngine:
     # device -- the dispatch-async overlap still applies
     prefill_device: Any = None
     decode_device: Any = None
+    # observability (docs/observability.md): see ``ContinuousEngine``
+    trace: Any = None
+    profile_annotations: bool = False
 
     _COUNTERS = ("steps_run",)
 
@@ -417,6 +450,16 @@ class DisaggEngine:
             raise ValueError(
                 f"decode_steps={self.decode_steps} must be >= 1")
         base_key = jax.random.PRNGKey(self.seed)
+        # one registry + recorder spans the engine and both workers
+        self.metrics = MetricRegistry()
+        self._trace = self.trace if self.trace is not None else NULL_RECORDER
+        if self._trace.enabled and self._trace.hist_registry is None:
+            self._trace.hist_registry = self.metrics
+        bind_counters(self, self.metrics, "engine")
+        annotation = None
+        if self.profile_annotations:
+            from jax.profiler import TraceAnnotation
+            annotation = TraceAnnotation
         params_p = self.params if self.prefill_device is None else \
             jax.device_put(self.params, self.prefill_device)
         params_d = self.params if self.decode_device is None else \
@@ -426,16 +469,22 @@ class DisaggEngine:
             self.max_batch, self.max_pages_per_req, kv_group,
             self.temperature, base_key, self.prefill_chunk_tokens,
             self.prefill_context, self.prefix_cache,
-            device=self.prefill_device)
+            device=self.prefill_device,
+            registry=self.metrics, trace=self._trace)
         self.decode = DecodeWorker(
             self.cfg, params_d, self.decode_pages, self.page_size,
             self.max_batch, self.max_pages_per_req, kv_group,
             self.temperature, base_key, self.decode_steps,
-            device=self.decode_device)
+            device=self.decode_device,
+            registry=self.metrics, trace=self._trace,
+            annotation=annotation)
         self.channel = PageHandoffChannel(self.channel_depth,
-                                          device=self.decode_device)
-        for c in self._COUNTERS:
-            setattr(self, c, 0)
+                                          device=self.decode_device,
+                                          registry=self.metrics,
+                                          trace=self._trace)
+        # decode-side critical path (dispatch + sync, prefill hidden):
+        # the per-step sample behind ``last_decode_step_s``
+        self._step_hist = self.metrics.histogram("engine/decode_step_ms")
         self.last_decode_step_s = 0.0
 
     # -- request intake -----------------------------------------------------
@@ -476,19 +525,26 @@ class DisaggEngine:
         ``last_decode_step_s`` sums only (2) and (5): the decode
         critical path with prefill hidden behind it.  Returns decoded
         request count."""
-        self.decode.admit_handoffs(self.channel)
-        t0 = time.perf_counter()
-        disp = self.decode.dispatch()
-        t1 = time.perf_counter()
-        for req in self.decode.runner.drain_bounced():
-            self.prefill.scheduler.reaccept(req)
-        self.prefill.step(self.channel)
-        t2 = time.perf_counter()
-        n = self.decode.sync(disp)
-        t3 = time.perf_counter()
-        self.last_decode_step_s = (t1 - t0) + (t3 - t2)
-        self.steps_run += 1
-        return n
+        tr = self._trace
+        with tr.span("step"):
+            with tr.span("admit"):
+                self.decode.admit_handoffs(self.channel)
+            t0 = time.perf_counter()
+            with tr.span("decode_dispatch"):
+                disp = self.decode.dispatch()
+            t1 = time.perf_counter()
+            for req in self.decode.runner.drain_bounced():
+                self.prefill.scheduler.reaccept(req)
+            with tr.span("prefill"):
+                self.prefill.step(self.channel)
+            t2 = time.perf_counter()
+            with tr.span("decode_sync"):
+                n = self.decode.sync(disp)
+            t3 = time.perf_counter()
+            self.last_decode_step_s = (t1 - t0) + (t3 - t2)
+            self._step_hist.observe(self.last_decode_step_s * 1e3)
+            self.steps_run += 1
+            return n
 
     # -- aggregate views ----------------------------------------------------
 
@@ -552,6 +608,9 @@ class DisaggEngine:
         self.prefill.reset_counters()
         self.decode.reset_counters()
         self.channel.reset_counters()
+        # registry-wide sweep: clears span/SLO histograms too (callback
+        # gauges are live reads and have nothing to reset)
+        self.metrics.reset()
 
     # -- drive to completion ------------------------------------------------
 

@@ -18,6 +18,7 @@ examples while keeping the step function identical to the dry-run cell.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Any, Dict, List, Optional
@@ -29,6 +30,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.policy import PrecisionPolicy
 from ..models import zoo
+from ..obs import MetricRegistry, NULL_RECORDER, bind_counters
 from .scheduler import PREFILLING, RUNNING
 
 __all__ = ["build_prefill_step", "build_prefill_chunk_step",
@@ -447,8 +449,8 @@ class _ChunkPrefillMixin:
     ``pool``), ``page_size``, ``max_pages_per_req``,
     ``prefill_chunk_tokens``, ``prefill_context``, ``temperature``,
     ``_base_key``, the jitted ``_chunk_step`` / ``_chunk_step_paged``,
-    the ``_prefill_ctx`` carry dict and a ``prefill_tokens_computed``
-    counter.  One implementation is what makes the disaggregated
+    the ``_prefill_ctx`` carry dict, a ``prefill_tokens_computed``
+    counter and a ``_trace`` recorder.  One implementation is what makes the disaggregated
     engine's temperature-0 outputs bitwise the interleaved engine's:
     both prefill paths run the exact same chunk code."""
 
@@ -534,6 +536,8 @@ class _ChunkPrefillMixin:
                     "v": _ctx_write(ctx["v"], kv["v"], jnp.int32(start))}
         req.prefilled = start + real
         self.prefill_tokens_computed += real
+        self._trace.event("PREFILL_CHUNK", rid=req.rid, start=start,
+                          width=c, real=real)
         if req.prefilled == ln:
             self._prefill_ctx.pop(req.rid, None)
             nxt = self._sample(np.asarray(logits[0, real - 1]), req)
@@ -653,6 +657,15 @@ class ContinuousEngine(_ChunkPrefillMixin):
     # K; K only trades host round trips against (at most K-1) wasted
     # tail iterations per dispatch.
     decode_steps: int = 1
+    # observability (docs/observability.md): an ``obs.TraceRecorder``
+    # capturing lifecycle events + step spans, or None for the shared
+    # no-op recorder -- telemetry is host-side bookkeeping only, so
+    # temperature-0 outputs are bitwise identical with tracing on or
+    # off.  ``profile_annotations`` additionally wraps each decode
+    # dispatch in ``jax.profiler.TraceAnnotation`` so device profiles
+    # carry the engine's phase names.
+    trace: Any = None
+    profile_annotations: bool = False
 
     # every public run counter; ``reset_counters`` and ``__post_init__``
     # derive from this registry, so adding a counter here is the WHOLE
@@ -714,10 +727,29 @@ class ContinuousEngine(_ChunkPrefillMixin):
         if self.decode_steps < 1:
             raise ValueError(
                 f"decode_steps={self.decode_steps} must be >= 1")
+        # one registry spans every layer of this engine; the recorder
+        # defaults to the shared no-op (one predicted branch per call)
+        self.metrics = MetricRegistry()
+        self._trace = self.trace if self.trace is not None else NULL_RECORDER
+        if self._trace.enabled and self._trace.hist_registry is None:
+            self._trace.hist_registry = self.metrics
+        bind_counters(self, self.metrics, "engine")
+        self._annotation = None
+        if self.profile_annotations:
+            from jax.profiler import TraceAnnotation
+            self._annotation = TraceAnnotation
         pool = PagedKVPool(self.cfg, self.n_pages, self.page_size, kv_group)
+        pool.register_gauges(self.metrics, "pool")
         self.scheduler = Scheduler(pool, self.max_batch,
                                    max_pages_per_req=self.max_pages_per_req,
-                                   prefix_cache=self.prefix_cache)
+                                   prefix_cache=self.prefix_cache,
+                                   registry=self.metrics, trace=self._trace)
+        # closed-form KV traffic of the LAST decode dispatch (the same
+        # model bench_serve ties against measured bytes)
+        self.metrics.gauge(
+            "engine/kv_bytes_per_step_model",
+            fn=lambda: self.pool.modeled_bytes_per_step(self.last_positions)
+            if self.last_positions else 0.0)
         # chunk prefill steps: FULL chunk logits (the request's last real
         # token may sit anywhere inside the final chunk)
         self._chunk_step = jax.jit(
@@ -743,8 +775,6 @@ class ContinuousEngine(_ChunkPrefillMixin):
         # epoch-cached device page table: re-uploaded only when the
         # scheduler epoch or the running-row order changed
         self._pt_cache = _PageTableCache()
-        for c in self._COUNTERS:
-            setattr(self, c, 0)
         # positions the LAST decode dispatch started from (requests that
         # retired within the step included) -- the per-step KV-traffic
         # ground truth benchmarks read; [] when the step decoded nothing
@@ -786,44 +816,58 @@ class ContinuousEngine(_ChunkPrefillMixin):
         lasted.  Capacity-first means a newcomer is only admitted
         against pages the running batch did not need this step."""
         sched = self.scheduler
-        # (1) grow the already-running requests' page tables (pre-claim
-        # the whole decode_steps window: no page can be missing mid-scan)
-        for req in list(sched.running):
-            if req.status == RUNNING:    # a victim may drop mid-loop
-                sched.ensure_capacity(
-                    req, horizon=_decode_horizon(req, self.decode_steps))
-        # (2) admit against the unclaimed remainder
-        self.last_admitted = [r.rid for r in sched.admit()]
-        # (3) chunked prefill within the token budget; a request whose
-        # whole budget fit the prefill (budget of 1 / instant EOS)
-        # retires without ever reaching decode
-        for req in self._prefill_phase():
-            if req.done:
-                sched.retire(req)
-        # (4) ONE batched K-step decode dispatch for everyone RUNNING
-        # (newly promoted requests may still need pages their decode
-        # window writes -- their admission gate already reserved budget
-        # for the first write, so this never preempts a same-step
-        # admission)
-        running = []
-        for req in list(sched.running):
-            if req.status == RUNNING and sched.ensure_capacity(
-                    req, horizon=_decode_horizon(req, self.decode_steps)):
-                running.append(req)
-        self.last_positions = [req.position for req in running]
-        if not running:
-            return 0
-        disp = _dispatch_decode_loop(
-            self._decode_loop, self.params, self.pool, running,
-            self.max_batch, self._pt_cache, sched.epoch,
-            self.max_pages_per_req, self._base_key)
-        self.decode_dispatches += 1
-        self.page_table_uploads += disp["uploaded"]
-        toks = np.asarray(disp["toks_dev"])  # the ONE (B, K) host sync
-        self.token_host_bytes += toks.nbytes
-        n = _apply_decode_tokens(disp, toks, sched.retire)
-        self.steps_run += 1
-        return n
+        tr = self._trace
+        with tr.span("step"):
+            # (1) grow the already-running requests' page tables
+            # (pre-claim the whole decode_steps window: no page can be
+            # missing mid-scan)
+            with tr.span("capacity"):
+                for req in list(sched.running):
+                    if req.status == RUNNING:  # a victim may drop mid-loop
+                        sched.ensure_capacity(
+                            req,
+                            horizon=_decode_horizon(req, self.decode_steps))
+            # (2) admit against the unclaimed remainder
+            with tr.span("admit"):
+                self.last_admitted = [r.rid for r in sched.admit()]
+            # (3) chunked prefill within the token budget; a request
+            # whose whole budget fit the prefill (budget of 1 / instant
+            # EOS) retires without ever reaching decode
+            with tr.span("prefill"):
+                for req in self._prefill_phase():
+                    if req.done:
+                        sched.retire(req)
+            # (4) ONE batched K-step decode dispatch for everyone
+            # RUNNING (newly promoted requests may still need pages
+            # their decode window writes -- their admission gate already
+            # reserved budget for the first write, so this never
+            # preempts a same-step admission)
+            running = []
+            for req in list(sched.running):
+                if req.status == RUNNING and sched.ensure_capacity(
+                        req, horizon=_decode_horizon(req, self.decode_steps)):
+                    running.append(req)
+            self.last_positions = [req.position for req in running]
+            if not running:
+                return 0
+            ann = self._annotation("decode_dispatch") \
+                if self._annotation is not None else contextlib.nullcontext()
+            with tr.span("decode_dispatch"), ann:
+                disp = _dispatch_decode_loop(
+                    self._decode_loop, self.params, self.pool, running,
+                    self.max_batch, self._pt_cache, sched.epoch,
+                    self.max_pages_per_req, self._base_key)
+            self.decode_dispatches += 1
+            self.page_table_uploads += disp["uploaded"]
+            tr.event("DECODE_DISPATCH", batch=len(running),
+                     k=self.decode_steps, uploaded=disp["uploaded"])
+            with tr.span("decode_sync"):
+                toks = np.asarray(disp["toks_dev"])  # ONE (B,K) host sync
+            self.token_host_bytes += toks.nbytes
+            tr.event("DECODE_SYNC", token_bytes=toks.nbytes)
+            n = _apply_decode_tokens(disp, toks, sched.retire)
+            self.steps_run += 1
+            return n
 
     # -- counters -----------------------------------------------------------
 
@@ -839,6 +883,9 @@ class ContinuousEngine(_ChunkPrefillMixin):
             setattr(self, c, 0)
         self.pool.alloc_peak = self.pool.used_pages
         self.scheduler.reset_counters()
+        # registry-wide sweep: clears span/SLO histograms too (callback
+        # gauges are live reads and have nothing to reset)
+        self.metrics.reset()
 
     # -- drive to completion ------------------------------------------------
 

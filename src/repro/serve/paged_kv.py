@@ -165,6 +165,23 @@ class PagedKVPool:
         """Pages needed to hold ``tokens`` cache slots."""
         return -(-tokens // self.page_size)
 
+    def register_gauges(self, registry, namespace: str = "pool") -> None:
+        """Expose the pool's occupancy accounting as callback gauges on
+        an ``obs.MetricRegistry``.  Everything reads existing properties
+        lazily at snapshot time, so the alloc/free hot path stays
+        untouched; ``page_bytes`` is the closed-form per-page byte model
+        (``page_handoff_bytes``) the handoff tie-outs check against."""
+        registry.gauge(f"{namespace}/n_pages", fn=lambda: self.n_pages)
+        registry.gauge(f"{namespace}/used_pages", fn=lambda: self.used_pages)
+        registry.gauge(f"{namespace}/free_pages", fn=lambda: self.free_pages)
+        registry.gauge(f"{namespace}/utilization",
+                       fn=lambda: self.utilization)
+        registry.gauge(f"{namespace}/alloc_peak", fn=lambda: self.alloc_peak)
+        registry.gauge(
+            f"{namespace}/page_bytes",
+            fn=lambda: page_handoff_bytes(self.cfg, self.page_size,
+                                          self.kv_group))
+
     # -- alloc / free -------------------------------------------------------
 
     def alloc(self, n: int) -> Optional[List[int]]:

@@ -65,6 +65,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import MetricRegistry, NULL_RECORDER, bind_counters
 from .paged_kv import PagedKVPool
 
 __all__ = ["Request", "Scheduler", "PrefixIndex", "DecodeRunner",
@@ -158,13 +159,19 @@ class PrefixIndex:
     # registry, so adding a counter here is the WHOLE change
     _COUNTERS = ("hits",          # admissions served by cached pages
                  "hit_tokens",    # prefill tokens served cached
+                 "misses",        # prefix-enabled admissions with no match
                  "evictions")
 
-    def __init__(self, pool: PagedKVPool):
+    def __init__(self, pool: PagedKVPool,
+                 registry: Optional[MetricRegistry] = None,
+                 namespace: str = "prefix"):
         self.pool = pool
         self._entries: "OrderedDict[int, _PrefixEntry]" = OrderedDict()
-        for c in self._COUNTERS:
-            setattr(self, c, 0)
+        self.metrics = registry if registry is not None else MetricRegistry()
+        bind_counters(self, self.metrics, namespace)
+        self.metrics.gauge(
+            f"{namespace}/hit_rate",
+            fn=lambda: self.hits / max(self.hits + self.misses, 1))
 
     def reset_counters(self) -> None:
         for c in self._COUNTERS:
@@ -293,19 +300,28 @@ class Scheduler:
 
     def __init__(self, pool: PagedKVPool, max_batch: int,
                  max_pages_per_req: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 registry: Optional[MetricRegistry] = None,
+                 trace=None,
+                 namespace: str = "scheduler"):
         self.pool = pool
         self.max_batch = int(max_batch)
         # widest page-table row the engine's fixed-shape decode step can
         # build; None = unbounded (pool capacity is the only limit)
         self.max_pages_per_req = max_pages_per_req
-        self.prefix = PrefixIndex(pool) if prefix_cache else None
+        # telemetry: counters live on a MetricRegistry (a private one
+        # when the scheduler is used standalone); lifecycle transitions
+        # are announced on the trace recorder (no-op unless enabled)
+        self.metrics = registry if registry is not None else MetricRegistry()
+        self._trace = trace if trace is not None else NULL_RECORDER
+        self.prefix = PrefixIndex(pool, registry=self.metrics,
+                                  namespace=f"{namespace}/prefix") \
+            if prefix_cache else None
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []      # admission order
         self.finished: Dict[int, Request] = {}
         self._next_rid = 0
-        for c in self._COUNTERS:
-            setattr(self, c, 0)
+        bind_counters(self, self.metrics, namespace)
         self.preempted_log: List[int] = []    # rids, in preemption order
         self.retired_log: List[int] = []      # rids, in retirement order
         # batch epoch: bumped on every transition that can change any
@@ -354,6 +370,9 @@ class Scheduler:
         req = Request(self._next_rid, prompt, int(max_new_tokens), eos_id)
         self._next_rid += 1
         self.waiting.append(req)
+        self._trace.event("SUBMIT", rid=req.rid,
+                          prompt_tokens=int(prompt.size),
+                          max_new_tokens=int(max_new_tokens))
         return req.rid
 
     @property
@@ -405,8 +424,12 @@ class Scheduler:
             if shared:
                 self.prefix.hits += 1
                 self.prefix.hit_tokens += head.cached_tokens
+            elif self.prefix is not None:
+                self.prefix.misses += 1
             self.running.append(head)
             admitted.append(head)
+            self._trace.event("ADMIT", rid=head.rid,
+                              cached_tokens=head.cached_tokens)
         if admitted:
             self.epoch += 1
         return admitted
@@ -421,6 +444,11 @@ class Scheduler:
         self.epoch += 1
         if self.prefix is not None:
             self.prefix.insert(req.prompt, req.pages)
+        # the first output token samples from the prefill logits, so
+        # this event is the request's time-to-first-token stamp
+        self._trace.event("PREFILL_COMPLETE", rid=req.rid,
+                          prompt_tokens=len(req.prompt),
+                          cached_tokens=req.cached_tokens)
 
     # -- capacity / preemption ----------------------------------------------
 
@@ -466,6 +494,7 @@ class Scheduler:
         queue.  A RUNNING victim keeps its generated tokens (resume =
         re-prefill prefix); a PREFILLING victim restarts from chunk 0."""
         assert req.status in (RUNNING, PREFILLING), req.status
+        self._trace.event("PREEMPT", rid=req.rid, was=req.status)
         # tokens served off shared cached pages were never computed by
         # this request, so preemption does not waste them -- and the
         # pages themselves survive in the index (the decref below drops
@@ -525,6 +554,8 @@ class Scheduler:
         self.finished[req.rid] = req
         self.retired_log.append(req.rid)
         self.epoch += 1
+        self._trace.event("RETIRE", rid=req.rid,
+                          generated=len(req.generated))
 
     # -- page handoff (disaggregated serving) -------------------------------
 
@@ -567,15 +598,19 @@ class DecodeRunner:
 
     _COUNTERS = ("bounce_count",)
 
-    def __init__(self, pool: PagedKVPool, max_batch: int):
+    def __init__(self, pool: PagedKVPool, max_batch: int,
+                 registry: Optional[MetricRegistry] = None,
+                 trace=None,
+                 namespace: str = "runner"):
         self.pool = pool
         self.max_batch = int(max_batch)
         self.running: List[Request] = []      # acceptance order
         self.finished: Dict[int, Request] = {}
         self.bounced: List[Request] = []      # drained by the engine
         self.retired_log: List[int] = []
-        for c in self._COUNTERS:
-            setattr(self, c, 0)
+        self.metrics = registry if registry is not None else MetricRegistry()
+        self._trace = trace if trace is not None else NULL_RECORDER
+        bind_counters(self, self.metrics, namespace)
         self.epoch = 0
 
     def reset_counters(self) -> None:
@@ -637,6 +672,8 @@ class DecodeRunner:
         self.running.remove(req)
         self.bounced.append(req)
         self.epoch += 1
+        self._trace.event("BOUNCE", rid=req.rid,
+                          generated=len(req.generated))
 
     def drain_bounced(self) -> List[Request]:
         out, self.bounced = self.bounced, []
@@ -653,3 +690,5 @@ class DecodeRunner:
         self.finished[req.rid] = req
         self.retired_log.append(req.rid)
         self.epoch += 1
+        self._trace.event("RETIRE", rid=req.rid,
+                          generated=len(req.generated))

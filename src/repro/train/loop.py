@@ -178,7 +178,7 @@ def train_loop(cfg: ModelConfig, run: RunConfig, data,
 
     step_fn = build_train_step(cfg, run, policy)
     history: Dict[str, list] = {"loss": [], "ce": [], "step": []}
-    t0 = time.time()
+    t0 = time.perf_counter()      # monotonic: immune to NTP clock steps
     while int(state.step) < run.steps:
         batch = data.next_batch()
         try:
@@ -199,7 +199,7 @@ def train_loop(cfg: ModelConfig, run: RunConfig, data,
             history["loss"].append(float(metrics["loss"]))
             history["ce"].append(float(metrics["ce"]))
             history["step"].append(s)
-            dt = (time.time() - t0) / max(s, 1)
+            dt = (time.perf_counter() - t0) / max(s, 1)
             print(f"[train] step {s:5d} loss {float(metrics['loss']):.4f} "
                   f"ce {float(metrics['ce']):.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f} ms/step")

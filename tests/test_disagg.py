@@ -261,6 +261,9 @@ def test_disagg_prefix_cache_parity():
 def _assert_registry_zero(obj, label):
     for c in type(obj)._COUNTERS:
         assert getattr(obj, c) == 0, f"{label}.{c} survived reset"
+        # the attribute IS a MetricRegistry counter (bind_counters
+        # descriptor): the registry-side view must agree
+        assert obj._obs_counters[c].value == 0, f"{label}.{c} registry"
 
 
 def test_interleaved_counter_registry_reset():
@@ -273,6 +276,13 @@ def test_interleaved_counter_registry_reset():
     eng.submit(*_reqs([(5, 3)])[0])
     eng.run()
     assert eng.steps_run > 0 and eng.prefill_tokens_computed > 0
+    # attribute reads and their registry mirrors are the same storage
+    assert eng.metrics.value("engine/steps_run") == eng.steps_run
+    assert eng.metrics.value("engine/decode_dispatches") == \
+        eng.decode_dispatches
+    assert eng.metrics.value("scheduler/prefix/hits") == \
+        eng.scheduler.prefix.hits
+    assert 0.0 <= eng.metrics.value("pool/utilization") <= 1.0
     eng.reset_counters()
     _assert_registry_zero(eng, "engine")
     _assert_registry_zero(eng.scheduler, "scheduler")
@@ -289,6 +299,13 @@ def test_disagg_counter_registry_reset():
     eng.submit(*_reqs([(5, 3)])[0])
     eng.run()
     assert eng.handoffs > 0 and eng.decode_dispatches > 0
+    # worker/channel counters mirror into the ONE engine registry under
+    # their role namespaces
+    assert eng.metrics.value("channel/handoffs") == eng.handoffs
+    assert eng.metrics.value("decode/decode_dispatches") == \
+        eng.decode_dispatches
+    assert eng.metrics.value("prefill/prefill_tokens_computed") == \
+        eng.prefill_tokens_computed
     eng.reset_counters()
     _assert_registry_zero(eng, "disagg")
     _assert_registry_zero(eng.prefill, "prefill-worker")

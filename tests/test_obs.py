@@ -1,0 +1,300 @@
+"""Serving-plane telemetry (PR 8): registry, descriptors, tracing, SLOs.
+
+The pinned contracts:
+
+- legacy ``_COUNTERS`` attributes ARE registry counters (bind_counters
+  descriptors): attribute writes and registry reads agree always;
+- the trace's per-kind counts / arg-sums are eviction-proof, so
+  closed-form tie-outs hold regardless of ring pressure;
+- a disabled recorder records NOTHING across a full traffic burst;
+- tracing never touches device math: temperature-0 output is bitwise
+  identical with the recorder on or off;
+- the Chrome-trace export is schema-valid (Perfetto-loadable).
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.obs import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricRegistry,
+    NULL_RECORDER,
+    TraceRecorder,
+    bind_counters,
+    pctl_ms,
+    percentiles,
+    summarize,
+    validate_chrome_trace,
+)
+from repro.serve import ContinuousEngine
+
+CFG = get_config("qwen2-0.5b").reduced()
+RNG = np.random.default_rng(21)
+PARAMS = T.lm_init(jax.random.PRNGKey(0), CFG)
+
+
+def _reqs(spec):
+    return [(RNG.integers(0, CFG.vocab, (ln,)).astype(np.int32), gn)
+            for ln, gn in spec]
+
+
+# ---------------------------------------------------------------------------
+# metric primitives
+# ---------------------------------------------------------------------------
+
+def test_counter_and_gauge_basics():
+    reg = MetricRegistry()
+    c = reg.counter("a/b")
+    c.inc()
+    c.inc(3)
+    assert reg.value("a/b") == 4
+    c.reset()
+    assert c.value == 0
+
+    g = reg.gauge("a/g")
+    g.set(2.5)
+    assert reg.value("a/g") == 2.5
+    g.reset()
+    assert g.value == 0
+
+    live = reg.gauge("a/live", fn=lambda: 7)
+    assert live.value == 7
+    with pytest.raises(ValueError):
+        live.set(1)
+    reg.reset()                       # fn-gauges survive reset (live)
+    assert reg.value("a/live") == 7
+
+
+def test_registry_kind_mismatch_raises():
+    reg = MetricRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+    with pytest.raises(TypeError):
+        reg.histogram("x")
+    assert "x" in reg and reg.names() == ["x"]
+
+
+def test_histogram_log_buckets():
+    h = Histogram("h", lo=1e-3, hi=1e3, per_decade=8)
+    vals = [0.5, 1.0, 2.0, 4.0, 8.0, 16.0]
+    for v in vals:
+        h.observe(v)
+    # one log bucket spans 10^(1/8) ~ 1.33x: every percentile is within
+    # one bucket width of the exact answer, and clamped to [min, max]
+    for q in (50, 95, 99):
+        exact = float(np.percentile(vals, q))
+        assert h.percentile(q) <= exact * 10 ** (1 / 8) * 1.001
+        assert min(vals) <= h.percentile(q) <= max(vals)
+    snap = h.snapshot()
+    assert snap["count"] == len(vals)
+    assert snap["sum"] == pytest.approx(sum(vals))
+    assert snap["min"] == 0.5 and snap["max"] == 16.0
+    h.observe(1e-9)                   # underflow bucket, not a crash
+    assert h.count == len(vals) + 1 and h.vmin == 1e-9
+    h.reset()
+    assert h.snapshot() == {"count": 0} and h.percentile(50) == 0.0
+
+
+def test_prometheus_text_snapshot():
+    reg = MetricRegistry()
+    reg.counter("engine/steps_run").inc(5)
+    reg.gauge("pool/utilization", fn=lambda: 0.25)
+    reg.histogram("span/step").observe(1.5)
+    text = reg.prometheus_text()
+    assert "# TYPE repro_engine_steps_run counter" in text
+    assert "repro_engine_steps_run 5" in text
+    assert "repro_pool_utilization 0.25" in text
+    assert "# TYPE repro_span_step summary" in text
+    assert "repro_span_step_count 1" in text
+
+
+def test_bind_counters_descriptor_roundtrip():
+    class Legacy:
+        _COUNTERS = ("hits", "bytes_moved")
+
+        def __init__(self, reg):
+            bind_counters(self, reg, "legacy")
+
+    r1, r2 = MetricRegistry(), MetricRegistry()
+    a, b = Legacy(r1), Legacy(r2)
+    a.hits += 1
+    a.hits += 1
+    a.bytes_moved += 128
+    b.hits += 5
+    # attribute reads, registry reads and instances stay coherent
+    assert a.hits == 2 and r1.value("legacy/hits") == 2
+    assert a.bytes_moved == 128 and r1.value("legacy/bytes_moved") == 128
+    assert b.hits == 5 and r2.value("legacy/hits") == 5
+    # the legacy reset idiom writes through the descriptor too
+    for c in Legacy._COUNTERS:
+        setattr(a, c, 0)
+    assert a.hits == 0 and r1.value("legacy/hits") == 0
+    assert b.hits == 5                # other instance untouched
+    # re-binding is idempotent and zeroes the counters
+    bind_counters(b, r2, "legacy")
+    assert b.hits == 0
+
+
+def test_stats_helpers_match_numpy():
+    vals = [0.004, 0.001, 0.010, 0.007]
+    assert pctl_ms(vals, 50) == pytest.approx(
+        float(np.percentile(vals, 50) * 1e3))
+    p = percentiles(vals)
+    assert set(p) == {"p50", "p95", "p99"}
+    assert p["p99"] == pytest.approx(float(np.percentile(vals, 99)))
+    s = summarize(vals)
+    assert s["n"] == 4 and s["min"] == 0.001 and s["max"] == 0.010
+    assert summarize([]) == {"n": 0}
+
+
+# ---------------------------------------------------------------------------
+# trace recorder
+# ---------------------------------------------------------------------------
+
+def test_ring_eviction_keeps_counts_exact():
+    rec = TraceRecorder(capacity=4)
+    for i in range(10):
+        rec.event("HANDOFF", rid=i, pages=2, bytes=100)
+    assert len(rec) == 4              # ring evicted under pressure...
+    assert rec.dropped == 6
+    assert rec.count("HANDOFF") == 10          # ...counts never do
+    assert rec.arg_sum("HANDOFF", "pages") == 20
+    assert rec.arg_sum("HANDOFF", "bytes") == 1000
+    rec.clear()
+    assert len(rec) == 0 and rec.count("HANDOFF") == 0
+
+
+def test_disabled_recorder_records_nothing():
+    rec = TraceRecorder(enabled=False)
+    rec.event("SUBMIT", rid=0, prompt_tokens=4)
+    with rec.span("step"):
+        pass
+    assert len(rec) == 0 and rec.count("SUBMIT") == 0
+    assert rec._counts == {} and rec._sums == {}
+    # one shared no-op span object: no per-call allocation when off
+    assert rec.span("step") is rec.span("decode_sync")
+
+
+def test_slo_derivation_from_lifecycle_timestamps():
+    rec = TraceRecorder()
+    t = {"v": 0.0}
+    rec._now = lambda: t["v"]         # deterministic clock
+    rec.event("SUBMIT", rid=1)
+    t["v"] = 0.010
+    rec.event("ADMIT", rid=1)
+    t["v"] = 0.050
+    rec.event("PREFILL_COMPLETE", rid=1)
+    t["v"] = 0.150
+    rec.event("RETIRE", rid=1, generated=6)
+    slo = rec.request_slo()[1]
+    assert slo["queue_wait_ms"] == pytest.approx(10.0)
+    assert slo["ttft_ms"] == pytest.approx(50.0)
+    assert slo["prefill_stall_ms"] == pytest.approx(40.0)
+    assert slo["e2e_ms"] == pytest.approx(150.0)
+    assert slo["tpot_ms"] == pytest.approx(100.0 / 5)  # 6 tokens -> 5 gaps
+    summ = rec.slo_summary()
+    assert summ["e2e_ms"]["n"] == 1
+    assert summ["e2e_ms"]["p50"] == pytest.approx(150.0)
+
+
+def test_chrome_trace_schema():
+    rec = TraceRecorder()
+    rec.event("SUBMIT", rid=0, prompt_tokens=4)
+    with rec.span("step"):
+        with rec.span("prefill", rid=0, width=4):
+            pass
+    obj = rec.chrome_trace()
+    stats = validate_chrome_trace(obj)
+    assert stats["spans"] == 2 and stats["instants"] == 1
+    assert stats["total"] == len(obj["traceEvents"])
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"events": []})
+    with pytest.raises(ValueError):
+        validate_chrome_trace(
+            {"traceEvents": [{"ph": "Z", "name": "x", "pid": 0, "tid": 0,
+                              "ts": 0}]})
+    with pytest.raises(ValueError):
+        validate_chrome_trace(
+            {"traceEvents": [{"ph": "X", "name": "x", "pid": 0, "tid": 0,
+                              "ts": -1.0, "dur": 1.0}]})
+
+
+def test_exporters_roundtrip(tmp_path):
+    rec = TraceRecorder()
+    rec.event("SUBMIT", rid=0)
+    with rec.span("step"):
+        pass
+    ct = tmp_path / "trace.json"
+    jl = tmp_path / "trace.jsonl"
+    rec.write_chrome_trace(str(ct))
+    rec.write_jsonl(str(jl))
+    with open(ct) as f:
+        validate_chrome_trace(json.load(f))
+    lines = [json.loads(l) for l in open(jl)]
+    assert len(lines) == len(rec)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: parity, tie-outs, disabled path
+# ---------------------------------------------------------------------------
+
+def _drive(trace=None):
+    eng = ContinuousEngine(CFG, PARAMS, n_pages=40, page_size=16,
+                           max_batch=4, max_len=48,
+                           prefill_chunk_tokens=16, decode_steps=2,
+                           trace=trace)
+    reqs = _reqs([(5, 6), (9, 4), (3, 5)])
+    rids = [eng.submit(p, g) for p, g in reqs]
+    out = eng.run()
+    return eng, rids, [out[r] for r in rids]
+
+
+def test_traffic_burst_leaves_null_recorder_untouched():
+    """With tracing off (the default), the shared NULL_RECORDER's ring
+    stays empty across a full serve burst -- telemetry-off costs one
+    predicted branch, not hidden recording."""
+    before = (len(NULL_RECORDER), dict(NULL_RECORDER._counts),
+              dict(NULL_RECORDER._sums))
+    _drive(trace=None)
+    assert len(NULL_RECORDER) == before[0] == 0
+    assert NULL_RECORDER._counts == before[1] == {}
+    assert NULL_RECORDER._sums == before[2] == {}
+
+
+def test_traced_engine_parity_and_tieouts(tmp_path):
+    global RNG
+    RNG = np.random.default_rng(21)   # same request stream both runs
+    _, _, plain = _drive(trace=None)
+    RNG = np.random.default_rng(21)
+    rec = TraceRecorder()
+    eng, rids, traced = _drive(trace=rec)
+    # tracing never touches device math: bitwise-identical tokens
+    for a, b in zip(plain, traced):
+        np.testing.assert_array_equal(a, b)
+    # lifecycle counts tie to scheduler/engine counters exactly
+    assert rec.count("SUBMIT") == rec.count("RETIRE") == len(rids)
+    assert rec.count("DECODE_DISPATCH") == eng.decode_dispatches == \
+        eng.metrics.value("engine/decode_dispatches")
+    assert rec.count("PREFILL_CHUNK") > 0
+    assert rec.arg_sum("PREFILL_CHUNK", "real") == \
+        eng.prefill_tokens_computed
+    # every request has a full SLO record
+    slo = rec.request_slo()
+    assert set(slo) == set(rids)
+    for s in slo.values():
+        assert {"queue_wait_ms", "ttft_ms", "e2e_ms"} <= set(s)
+        assert s["e2e_ms"] >= s["ttft_ms"] >= 0.0
+    # the export is Perfetto-loadable
+    path = tmp_path / "t.json"
+    rec.write_chrome_trace(str(path))
+    with open(path) as f:
+        stats = validate_chrome_trace(json.load(f))
+    assert stats["spans"] > 0 and stats["instants"] > 0

@@ -1,0 +1,39 @@
+#!/usr/bin/env python
+"""Schema-validate a Chrome-trace JSON file (Perfetto-loadable check).
+
+Thin CLI over ``repro.obs.trace.validate_chrome_trace``: verifies the
+trace-event envelope (``traceEvents`` list, known phase codes, numeric
+non-negative timestamps/durations, integer pid/tid) that Perfetto and
+chrome://tracing require, and prints the event census.
+
+  PYTHONPATH=src python tools/validate_trace.py artifacts/serve_trace.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.trace import validate_chrome_trace
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome-trace JSON file to validate")
+    args = ap.parse_args()
+    with open(args.trace) as f:
+        obj = json.load(f)
+    try:
+        stats = validate_chrome_trace(obj)
+    except ValueError as e:
+        print(f"{args.trace}: INVALID: {e}", file=sys.stderr)
+        return 1
+    print(f"{args.trace}: OK -- {stats['total']} events "
+          f"({stats['spans']} spans, {stats['instants']} instants, "
+          f"{stats['metadata']} metadata)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
