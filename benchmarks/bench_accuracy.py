@@ -108,13 +108,17 @@ def run() -> None:
     for prec in ("fp4", "posit4_1"):
         spec = fmt_by_name(prec)
         for group in (None, 128, 64, 32):
-            num = den = 0.0
+            # accumulate the squared errors as device scalars and sync
+            # ONCE after the loop -- float() per matrix blocked on a
+            # device round trip every iteration
+            num_d, den_d = [], []
             for wmat in mats:
                 d = kops.to_dense(kops.pack_tensor(spec, wmat,
                                                    group_size=group))
-                num += float(jnp.sum(jnp.square(d - wmat)))
-                den += float(jnp.sum(jnp.square(wmat)))
-            rel = float(np.sqrt(num / max(den, 1e-30)))
+                num_d.append(jnp.sum(jnp.square(d - wmat)))
+                den_d.append(jnp.sum(jnp.square(wmat)))
+            num, den = jax.device_get((sum(num_d), sum(den_d)))
+            rel = float(np.sqrt(num / max(float(den), 1e-30)))
             gtag = "chan" if group is None else f"g{group}"
             emit(f"accuracy/group_scale_{prec}_{gtag}", 0.0,
                  f"w_rel_rmse={rel:.5f};n_mats={len(mats)}")

@@ -118,6 +118,14 @@ def _serve_continuous(cfg, params, trace, n_pages, page_size, max_batch,
     eng.scheduler.finished.pop(warm)
     eng.reset_counters()
     rec.clear()                    # drop the warm request's events too
+    # steady state begins here: decode dispatch+sync run under
+    # jax.transfer_guard("disallow") -- an implicit transfer on the
+    # decode critical path raises -- and the decode loop must not
+    # retrace across churn, preemptions and epoch re-uploads (prefill
+    # legitimately traces new chunk-width buckets; decode's shapes are
+    # fixed by max_batch)
+    eng.transfer_guard = True
+    decode_traces0 = eng.trace_counts["decode_loop"]
 
     pending = sorted(trace, key=lambda t: t[0])
     util, positions_per_step = [], []
@@ -137,6 +145,9 @@ def _serve_continuous(cfg, params, trace, n_pages, page_size, max_batch,
         util.append(eng.metrics.value("pool/utilization"))
         i += 1
     dt = time.perf_counter() - t0
+    decode_retraces = eng.trace_counts["decode_loop"] - decode_traces0
+    assert decode_retraces == 0, \
+        f"decode loop retraced {decode_retraces}x in steady state"
     toks = sum(len(eng.scheduler.finished[r].generated) for r in rids)
     # per-request SLOs straight from the lifecycle trace; every request
     # must have a complete SUBMIT -> ... -> RETIRE record
@@ -154,6 +165,7 @@ def _serve_continuous(cfg, params, trace, n_pages, page_size, max_batch,
         pool_util_peak=float(np.max(util)),
         peak_pages=eng.pool.alloc_peak,
         preemptions=eng.scheduler.preemption_count,
+        steady_state_retraces=decode_retraces,
     ), positions_per_step
 
 
@@ -260,10 +272,23 @@ def _serve_disagg_burst(cfg, params, page_size, max_len, disagg):
         return rids, lat
 
     drive()                            # warm every jit shape off-clock
+    # the decode side's steady state starts now: guard its dispatch+
+    # sync windows and pin zero decode-loop retraces across the replays
+    # (handoffs re-key the page-table epoch every admission -- exactly
+    # the churn the sentinel must stay flat under)
+    if disagg:
+        eng.decode.transfer_guard = True
+        decode_traces0 = eng.decode.trace_counts["decode_loop"]
+    else:
+        eng.transfer_guard = True
+        decode_traces0 = eng.trace_counts["decode_loop"]
     reps = []                          # deterministic replay: the per-
     for _ in range(3):                 # step-index median votes out
         rids, lat = drive()            # host-timer spikes
         reps.append(lat)
+    counts = eng.decode.trace_counts if disagg else eng.trace_counts
+    assert counts["decode_loop"] == decode_traces0, \
+        (counts["decode_loop"], decode_traces0)
     med = np.median(np.asarray(reps), axis=0) * 1e3
     fin = eng.finished if disagg else eng.scheduler.finished
     outs = {r: fin[r].output for r in rids}
@@ -370,11 +395,21 @@ def _serve_decode_loop(cfg, params, page_size, max_batch, max_len,
     eng.reset_counters()
     if rec is not None:
         rec.clear()
+    # steady state: the decode dispatch+sync windows run under
+    # jax.transfer_guard("disallow"), and the compile-count sentinel
+    # must stay flat for EVERY jit (uniform prompt lengths -- even the
+    # prefill buckets were warmed)
+    eng.transfer_guard = True
+    traces0 = dict(eng.trace_counts)
 
     rids = [eng.submit(p, gen) for p in prompts]
     t0 = time.perf_counter()
     eng.run()
     dt = time.perf_counter() - t0
+    retraces = {name: eng.trace_counts[name] - traces0[name]
+                for name in traces0}
+    assert not any(retraces.values()), \
+        f"steady-state recompiles at decode_steps={k_steps}: {retraces}"
     toks = sum(len(eng.scheduler.finished[r].generated) for r in rids)
     outs = [np.asarray(eng.scheduler.finished[r].generated) for r in rids]
     if rec is not None:
@@ -391,6 +426,7 @@ def _serve_decode_loop(cfg, params, page_size, max_batch, max_len,
         page_table_uploads=eng.page_table_uploads,
         token_host_bytes=eng.token_host_bytes,
         logits_host_bytes=eng.logits_host_bytes,
+        steady_state_retraces=sum(retraces.values()),
     )
 
 

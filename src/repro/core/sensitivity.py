@@ -16,7 +16,7 @@ inference itself", exactly as here: one calibration gradient suffices.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +45,7 @@ def layer_sensitivity(
     gradient tree (same structure as params)."""
     p_leaves = flatten_with_paths(params)
     g_leaves = dict(flatten_with_paths(grads))
-    out: Dict[str, float] = {}
+    scored: Dict[str, Any] = {}
     for path, w in p_leaves:
         if w.ndim < 2:  # norms/biases: never candidates, skip scoring
             continue
@@ -59,8 +59,10 @@ def layer_sensitivity(
         for cand in candidates:  # eq. 2: max over the sc in {8, 4} arms
             cand_err = _quant_err(cand, w)
             scores.append(jnp.abs(base_err - cand_err) * gnorm / n_l)
-        out[path] = float(jnp.max(jnp.stack(scores)))
-    return out
+        scored[path] = jnp.max(jnp.stack(scores))
+    # ONE batched device->host sync for every leaf's score -- float()
+    # inside the loop blocked on a round trip per parameter
+    return {path: float(v) for path, v in jax.device_get(scored).items()}
 
 
 def assign_layer_adaptive(

@@ -98,7 +98,7 @@ def _serve_params_sds(cfg: ModelConfig, policy: PrecisionPolicy,
 
 def _lower_one(cfg, shape, mesh, policy, policy_name, run_kw, quantized_kv):
     """Lower + compile one step program; return (compiled, t_lower, t_compile)."""
-    t0 = time.time()
+    t0 = time.perf_counter()
     if shape.kind == "train":
         run = RunConfig(qat=run_kw["qat"], precision_policy=policy_name,
                         opt_state_dtype=run_kw["opt_dtype"],
@@ -178,10 +178,10 @@ def _lower_one(cfg, shape, mesh, policy, policy_name, run_kw, quantized_kv):
                 donate_argnums=(2,),
             ).lower(params_sds, tok_sds, cache_sds, pos_sds)
 
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    return compiled, t_lower, time.time() - t0
+    return compiled, t_lower, time.perf_counter() - t0
 
 
 def _cost_dict(compiled):

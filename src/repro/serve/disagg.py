@@ -83,8 +83,8 @@ from ..models import zoo
 from ..obs import MetricRegistry, NULL_RECORDER, bind_counters
 from .engine import (_build_decode_loop, _ChunkPrefillMixin,
                      _apply_decode_tokens, _decode_horizon,
-                     _dispatch_decode_loop, _PageTableCache,
-                     build_prefill_chunk_step)
+                     _device_only, _dispatch_decode_loop, _PageTableCache,
+                     _trace_counted, build_prefill_chunk_step)
 from .paged_kv import _POOL_KEYS, PagedKVPool
 from .scheduler import RUNNING, DecodeRunner, Request, Scheduler
 
@@ -203,10 +203,13 @@ class PrefillWorker(_ChunkPrefillMixin):
                                    prefix_cache=prefix_cache,
                                    registry=self.metrics, trace=self._trace,
                                    namespace="prefill/scheduler")
-        self._chunk_step = jax.jit(
-            build_prefill_chunk_step(cfg, kv_group))
-        self._chunk_step_paged = jax.jit(
+        self.trace_counts: Dict[str, int] = {}
+        self._chunk_step = jax.jit(_trace_counted(
+            build_prefill_chunk_step(cfg, kv_group),
+            self.trace_counts, "prefill_chunk"))
+        self._chunk_step_paged = jax.jit(_trace_counted(
             build_prefill_chunk_step(cfg, kv_group, paged=True),
+            self.trace_counts, "prefill_chunk_paged"),
             donate_argnums=(2,))
         self._prefill_ctx: Dict[int, Any] = {}
         self._ready: List[Request] = []       # completed, awaiting channel
@@ -300,8 +303,14 @@ class DecodeWorker:
         self.runner = DecodeRunner(pool, max_batch,
                                    registry=self.metrics, trace=self._trace,
                                    namespace="decode/runner")
-        self._decode_loop = jax.jit(
+        # compile-count sentinel + transfer-guard hook: same contract
+        # as ContinuousEngine (see engine._trace_counted/_device_only);
+        # benches flip ``transfer_guard`` on after warm-up
+        self.trace_counts: Dict[str, int] = {}
+        self.transfer_guard = False
+        self._decode_loop = jax.jit(_trace_counted(
             _build_decode_loop(cfg, temperature, decode_steps),
+            self.trace_counts, "decode_loop"),
             donate_argnums=(3,))
         self._pt_cache = _PageTableCache()
         self.last_positions: List[int] = []
@@ -352,7 +361,7 @@ class DecodeWorker:
             return None
         ann = self._annotation("decode_dispatch") \
             if self._annotation is not None else _NULL_CTX
-        with ann:
+        with ann, _device_only(self.transfer_guard):
             disp = _dispatch_decode_loop(
                 self._decode_loop, self.params, self.pool, running,
                 self.max_batch, self._pt_cache, runner.epoch,
@@ -369,7 +378,9 @@ class DecodeWorker:
         Returns decoded request count."""
         if disp is None:
             return 0
-        toks = np.asarray(disp["toks_dev"])  # the ONE (B, K) host sync
+        with _device_only(self.transfer_guard):
+            # the ONE sanctioned (B, K) host sync of the decode side
+            toks = jax.device_get(disp["toks_dev"])
         self.token_host_bytes += toks.nbytes
         self._trace.event("DECODE_SYNC", token_bytes=toks.nbytes)
         return _apply_decode_tokens(disp, toks, self.runner.retire)

@@ -276,6 +276,38 @@ class ServeEngine:
 # Continuous batching over the paged posit8 KV pool
 # ---------------------------------------------------------------------------
 
+def _trace_counted(fn, counts: Dict[str, int], name: str):
+    """Wrap ``fn`` with a Python-side tracing counter before handing it
+    to ``jax.jit``: the wrapper body runs only while jax TRACES the
+    function (steady-state dispatches replay the compiled executable
+    without re-entering Python), so ``counts[name]`` is exactly the
+    (re)trace count.  This is the compile-count sentinel bench_serve
+    asserts stays flat across the measured window -- a new shape bucket
+    or a leaked weak-type/python-scalar operand shows up as a count
+    bump at the diff that introduced it, not as an unattributable p99
+    shift."""
+    counts[name] = 0
+
+    @functools.wraps(fn)
+    def counted(*args, **kwargs):
+        counts[name] += 1
+        return fn(*args, **kwargs)
+
+    return counted
+
+
+def _device_only(on: bool):
+    """A FRESH ``jax.transfer_guard("disallow")`` context when ``on``
+    (jax guard contexts are single-use, so each guarded window needs
+    its own), else a no-op.  Under the guard every IMPLICIT transfer
+    raises -- a numpy or python-scalar operand silently uploaded into a
+    dispatch, a device value silently pulled to host -- while the
+    sanctioned explicit escapes (``jnp.asarray`` staging, the
+    epoch-cache's page-table upload, ``jax.device_get`` of the sampled
+    tokens) stay legal."""
+    return jax.transfer_guard("disallow") if on else contextlib.nullcontext()
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _ctx_write(buf: jax.Array, chunk: jax.Array, start) -> jax.Array:
     """dynamic_update_slice one bf16 KV chunk (L, 1, C, Kh, Dh) into the
@@ -540,7 +572,7 @@ class _ChunkPrefillMixin:
                           width=c, real=real)
         if req.prefilled == ln:
             self._prefill_ctx.pop(req.rid, None)
-            nxt = self._sample(np.asarray(logits[0, real - 1]), req)
+            nxt = self._sample(jax.device_get(logits[0, real - 1]), req)
             req.generated.append(nxt)
             req.next_token = nxt
             sched.prefill_complete(req)
@@ -666,6 +698,15 @@ class ContinuousEngine(_ChunkPrefillMixin):
     # carry the engine's phase names.
     trace: Any = None
     profile_annotations: bool = False
+    # runtime transfer guard (bench/test harness hook): when True, the
+    # decode dispatch+sync windows run under a fresh
+    # ``jax.transfer_guard("disallow")`` so any IMPLICIT host<->device
+    # transfer on the decode critical path raises instead of silently
+    # serializing.  Off by default: the first dispatch of a fresh
+    # engine may legitimately move trace-time constants; benches flip
+    # it on after warm-up (the steady-state window the discipline
+    # governs).
+    transfer_guard: bool = False
 
     # every public run counter; ``reset_counters`` and ``__post_init__``
     # derive from this registry, so adding a counter here is the WHOLE
@@ -750,12 +791,20 @@ class ContinuousEngine(_ChunkPrefillMixin):
             "engine/kv_bytes_per_step_model",
             fn=lambda: self.pool.modeled_bytes_per_step(self.last_positions)
             if self.last_positions else 0.0)
+        # compile-count sentinel: every jitted entry point is wrapped
+        # with a tracing counter BEFORE jax.jit, so
+        # ``trace_counts[name]`` counts (re)traces -- bench_serve
+        # snapshots this after warm-up and asserts it stays flat across
+        # the measured run (zero steady-state recompiles)
+        self.trace_counts: Dict[str, int] = {}
         # chunk prefill steps: FULL chunk logits (the request's last real
         # token may sit anywhere inside the final chunk)
-        self._chunk_step = jax.jit(
-            build_prefill_chunk_step(self.cfg, kv_group))
-        self._chunk_step_paged = jax.jit(
+        self._chunk_step = jax.jit(_trace_counted(
+            build_prefill_chunk_step(self.cfg, kv_group),
+            self.trace_counts, "prefill_chunk"))
+        self._chunk_step_paged = jax.jit(_trace_counted(
             build_prefill_chunk_step(self.cfg, kv_group, paged=True),
+            self.trace_counts, "prefill_chunk_paged"),
             donate_argnums=(2,))
         # per-request bf16 KV carries of requests mid-prefill (rid ->
         # {"k","v"} stacked (L,1,T,Kh,Dh)); dropped on completion or
@@ -767,9 +816,10 @@ class ContinuousEngine(_ChunkPrefillMixin):
         # lax.scan over decode_steps iterations); only the pool cache
         # (arg 3) is donated -- the epoch-cached page table must stay
         # resident across dispatches
-        self._decode_loop = jax.jit(
+        self._decode_loop = jax.jit(_trace_counted(
             _build_decode_loop(self.cfg, self.temperature,
                                self.decode_steps),
+            self.trace_counts, "decode_loop"),
             donate_argnums=(3,))
         self._base_key = jax.random.PRNGKey(self.seed)
         # epoch-cached device page table: re-uploaded only when the
@@ -852,7 +902,8 @@ class ContinuousEngine(_ChunkPrefillMixin):
                 return 0
             ann = self._annotation("decode_dispatch") \
                 if self._annotation is not None else contextlib.nullcontext()
-            with tr.span("decode_dispatch"), ann:
+            with tr.span("decode_dispatch"), ann, \
+                    _device_only(self.transfer_guard):
                 disp = _dispatch_decode_loop(
                     self._decode_loop, self.params, self.pool, running,
                     self.max_batch, self._pt_cache, sched.epoch,
@@ -861,8 +912,9 @@ class ContinuousEngine(_ChunkPrefillMixin):
             self.page_table_uploads += disp["uploaded"]
             tr.event("DECODE_DISPATCH", batch=len(running),
                      k=self.decode_steps, uploaded=disp["uploaded"])
-            with tr.span("decode_sync"):
-                toks = np.asarray(disp["toks_dev"])  # ONE (B,K) host sync
+            with tr.span("decode_sync"), _device_only(self.transfer_guard):
+                # the ONE sanctioned (B, K) host sync of the step
+                toks = jax.device_get(disp["toks_dev"])
             self.token_host_bytes += toks.nbytes
             tr.event("DECODE_SYNC", token_bytes=toks.nbytes)
             n = _apply_decode_tokens(disp, toks, sched.retire)

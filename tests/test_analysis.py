@@ -1,0 +1,443 @@
+"""Tests for the static-analysis framework (``tools/analysis``).
+
+Per rule: a fixture that FIRES on the bad pattern, a twin that stays
+QUIET on the good one, and a ``# repro: allow(<rule>)`` suppression
+check.  Plus the meta-invariants: the registry carries >= 5 active
+rules, the full-repo run is clean (the pass ships with zero
+grandfathered findings), and the runtime half -- the compile-count
+sentinel and the transfer guard -- behaves on a live engine."""
+
+import os
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+
+from tools.analysis import (FileContext, RepoContext, all_rules,  # noqa: E402
+                            run_paths, run_source)
+from tools.analysis.rules import kernel_oracle, obs_counters  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.serve.engine import (ContinuousEngine, _device_only,  # noqa: E402
+                                _trace_counted)
+
+SERVE_PATH = "src/repro/serve/engine.py"
+
+
+def _src(code: str) -> str:
+    return textwrap.dedent(code).lstrip("\n")
+
+
+def _rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# framework
+# ---------------------------------------------------------------------------
+
+def test_registry_has_at_least_five_rules():
+    rules = all_rules()
+    assert len(rules) >= 5
+    names = {r.name for r in rules}
+    assert {"host-sync", "donation-safety", "jit-in-step",
+            "kernel-oracle", "determinism",
+            "obs-counter-discipline"} <= names
+    for r in rules:
+        assert r.check_file or r.check_repo
+
+
+def test_full_repo_run_is_clean():
+    assert run_paths() == []
+
+
+def test_allow_comment_on_same_line_and_line_above():
+    bad = _src("""
+        import time
+        def f():
+            t = time.time()
+    """)
+    assert _rules_of(run_source(bad, path="src/repro/x.py")) \
+        == {"determinism"}
+    same_line = bad.replace("time.time()",
+                            "time.time()  # repro: allow(determinism)")
+    assert run_source(same_line, path="src/repro/x.py") == []
+    above = bad.replace("    t = time.time()",
+                        "    # repro: allow(determinism)\n"
+                        "    t = time.time()")
+    assert run_source(above, path="src/repro/x.py") == []
+    wildcard = bad.replace("time.time()",
+                           "time.time()  # repro: allow(*)")
+    assert run_source(wildcard, path="src/repro/x.py") == []
+    wrong_rule = bad.replace("time.time()",
+                             "time.time()  # repro: allow(host-sync)")
+    assert _rules_of(run_source(wrong_rule, path="src/repro/x.py")) \
+        == {"determinism"}
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+def test_host_sync_fires_on_step_path_syncs():
+    bad = _src("""
+        import numpy as np
+        import jax.numpy as jnp
+        class Engine:
+            def step(self):
+                toks = np.asarray(self._disp)
+                n = self._count.item()
+                lg = jnp.argmax(self._logits)
+                k = int(lg)
+                print(toks)
+                return k + n
+    """)
+    findings = run_source(bad, path=SERVE_PATH, rules=["host-sync"])
+    assert len(findings) == 4            # np.asarray, .item, int(), print
+    assert _rules_of(findings) == {"host-sync"}
+
+
+def test_host_sync_quiet_on_sanctioned_device_get_and_cold_paths():
+    good = _src("""
+        import numpy as np
+        import jax
+        class Engine:
+            def step(self):
+                toks = jax.device_get(self._disp)
+                return int(toks[0, 0])
+            def generate(self, out):
+                return np.asarray(out)     # not a step-path function
+    """)
+    assert run_source(good, path=SERVE_PATH, rules=["host-sync"]) == []
+
+
+def test_host_sync_step_check_scoped_to_serve():
+    bad = _src("""
+        import numpy as np
+        class Engine:
+            def step(self):
+                return np.asarray(self._disp)
+    """)
+    assert run_source(bad, path="src/repro/train/loop.py",
+                      rules=["host-sync"]) == []
+
+
+def test_host_sync_fires_on_cast_in_loop_anywhere():
+    bad = _src("""
+        import jax.numpy as jnp
+        def bench(mats):
+            acc = 0.0
+            for m in mats:
+                acc += float(jnp.sum(m))
+            return acc
+    """)
+    findings = run_source(bad, path="benchmarks/bench_x.py",
+                          rules=["host-sync"])
+    assert len(findings) == 1
+    good = bad.replace("acc += float(jnp.sum(m))",
+                       "acc = acc + jnp.sum(m)")
+    assert run_source(good, path="benchmarks/bench_x.py",
+                      rules=["host-sync"]) == []
+
+
+# ---------------------------------------------------------------------------
+# donation-safety
+# ---------------------------------------------------------------------------
+
+def test_donation_fires_on_read_after_donating_call():
+    bad = _src("""
+        import jax
+        class Engine:
+            def __init__(self, fn):
+                self._loop = jax.jit(fn, donate_argnums=(3,))
+            def run(self, params, toks, pos, state):
+                out = self._loop(params, toks, pos, state)
+                return out, state.shape      # state's buffer is gone
+    """)
+    findings = run_source(bad, path=SERVE_PATH,
+                          rules=["donation-safety"])
+    assert len(findings) == 1
+    assert "state" in findings[0].message
+
+
+def test_donation_quiet_on_rebind_and_other_keys():
+    good = _src("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def write(buf, chunk):
+            return buf.at[0].set(chunk)
+        class Engine:
+            def __init__(self, fn):
+                self._loop = jax.jit(fn, donate_argnums=(3,))
+            def run(self, params, toks, pos, state):
+                state = self._loop(params, toks, pos, state)
+                return state                 # rebound: the NEW buffer
+            def chunk(self, ctx, kv):
+                ctx = {"k": write(ctx["k"], kv["k"]),
+                       "v": write(ctx["v"], kv["v"])}
+                return ctx
+    """)
+    assert run_source(good, path=SERVE_PATH,
+                      rules=["donation-safety"]) == []
+
+
+def test_donation_fires_on_subscript_key_reuse():
+    bad = _src("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def write(buf, chunk):
+            return buf.at[0].set(chunk)
+        def f(ctx, kv):
+            new_k = write(ctx["k"], kv)
+            stale = ctx["k"]                 # donated buffer
+            return new_k, stale
+    """)
+    findings = run_source(bad, path=SERVE_PATH,
+                          rules=["donation-safety"])
+    assert len(findings) == 1
+    assert "ctx['k']" in findings[0].message
+
+
+def test_donation_respects_allow():
+    bad = _src("""
+        import jax
+        class Engine:
+            def __init__(self, fn):
+                self._loop = jax.jit(fn, donate_argnums=(0,))
+            def run(self, state):
+                out = self._loop(state)
+                return out, state  # repro: allow(donation-safety)
+    """)
+    assert run_source(bad, path=SERVE_PATH,
+                      rules=["donation-safety"]) == []
+
+
+# ---------------------------------------------------------------------------
+# jit-in-step
+# ---------------------------------------------------------------------------
+
+def test_jit_in_step_fires_in_loop_and_step_body():
+    bad = _src("""
+        import jax
+        import jax.experimental.pallas as pl
+        def run(fns, xs):
+            for fn in fns:
+                step = jax.jit(fn)        # fresh trace cache per iter
+                xs = step(xs)
+            return xs
+        class Engine:
+            def step(self, x):
+                return pl.pallas_call(self._kernel)(x)
+    """)
+    findings = run_source(bad, path=SERVE_PATH, rules=["jit-in-step"])
+    assert len(findings) == 2
+
+
+def test_jit_in_step_quiet_on_init_construction():
+    good = _src("""
+        import jax
+        class Engine:
+            def __post_init__(self):
+                self._step = jax.jit(self._fn)
+            def step(self, x):
+                return self._step(x)
+    """)
+    assert run_source(good, path=SERVE_PATH, rules=["jit-in-step"]) == []
+    # loop-construction outside src/repro (e.g. a bench sweeping
+    # configs) is out of scope
+    loop = _src("""
+        import jax
+        def sweep(fns, x):
+            for fn in fns:
+                x = jax.jit(fn)(x)
+            return x
+    """)
+    assert run_source(loop, path="benchmarks/bench_x.py",
+                      rules=["jit-in-step"]) == []
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_determinism_fires_in_scheduler_decision_paths():
+    bad = _src("""
+        import random
+        import time
+        class Scheduler:
+            def admit(self, queue):
+                random.shuffle(queue)
+                self._stamp = time.time()
+                return queue
+    """)
+    findings = run_source(bad, path="src/repro/serve/scheduler.py",
+                          rules=["determinism"])
+    # random.shuffle + time.time (decision path) + time.time (the
+    # everywhere wall-clock check)
+    assert len(findings) == 3
+
+
+def test_determinism_set_iteration_in_serve():
+    bad = _src("""
+        def batch(rids):
+            return [r for r in set(rids)]
+    """)
+    findings = run_source(bad, path="src/repro/serve/scheduler.py",
+                          rules=["determinism"])
+    assert len(findings) == 1
+    good = bad.replace("set(rids)", "sorted(set(rids))")
+    assert run_source(good, path="src/repro/serve/scheduler.py",
+                      rules=["determinism"]) == []
+
+
+def test_determinism_perf_counter_is_legal_everywhere():
+    good = _src("""
+        import time
+        class Scheduler:
+            def admit(self, queue):
+                self._t0 = time.perf_counter()   # telemetry stamp
+                return queue
+    """)
+    assert run_source(good, path="src/repro/serve/scheduler.py",
+                      rules=["determinism"]) == []
+
+
+# ---------------------------------------------------------------------------
+# kernel-oracle (repo-level: exercised through an injected table)
+# ---------------------------------------------------------------------------
+
+def test_kernel_oracle_clean_on_real_table():
+    assert kernel_oracle.check_table(RepoContext(),
+                                     kernel_oracle.KERNEL_TABLE) == []
+
+
+def test_kernel_oracle_fires_on_missing_entry_oracle_and_stale():
+    repo = RepoContext()
+    # drop one kernel's entry -> "no KERNEL_TABLE entry"
+    table = dict(kernel_oracle.KERNEL_TABLE)
+    del table["flash_decode_pallas"]
+    msgs = [f.message for f in kernel_oracle.check_table(repo, table)]
+    assert any("flash_decode_pallas" in m and "no KERNEL_TABLE entry" in m
+               for m in msgs)
+    # point one entry at a nonexistent oracle and fallback
+    table = dict(kernel_oracle.KERNEL_TABLE)
+    table["flash_decode_pallas"] = (
+        "no_such_ref", "src/repro/models/attention.py", "no_such_fn")
+    msgs = [f.message for f in kernel_oracle.check_table(repo, table)]
+    assert any("no_such_ref" in m for m in msgs)
+    assert any("no_such_fn" in m for m in msgs)
+    # stale entry for a kernel that does not exist
+    table = dict(kernel_oracle.KERNEL_TABLE)
+    table["ghost_pallas"] = ("flash_decode_ref",
+                             "src/repro/models/attention.py",
+                             "decode_quantized_blocks")
+    msgs = [f.message for f in kernel_oracle.check_table(repo, table)]
+    assert any("stale" in m and "ghost_pallas" in m for m in msgs)
+
+
+def test_kernel_oracle_discovers_every_public_kernel():
+    kernels = kernel_oracle.discover_kernels(RepoContext())
+    assert set(kernels) == set(kernel_oracle.KERNEL_TABLE)
+    assert len(kernels) >= 6
+
+
+# ---------------------------------------------------------------------------
+# obs-counter-discipline (parity with the old standalone checker)
+# ---------------------------------------------------------------------------
+
+def _obs_findings(code: str):
+    ctx = FileContext("src/repro/serve/fixture.py", _src(code))
+    return obs_counters.check_sources({ctx.path: ctx})
+
+
+def test_obs_counters_fires_on_bare_counter_and_missing_bind():
+    findings = _obs_findings("""
+        class Engine:
+            _COUNTERS = ("steps_run",)
+            def __init__(self):
+                self.steps_run = 0
+            def step(self):
+                self.steps_run += 1
+                self.stray += 1
+    """)
+    msgs = [f.message for f in findings]
+    assert any("never calls bind_counters" in m for m in msgs)
+    assert any("stray" in m for m in msgs)
+    assert len(findings) == 2
+
+
+def test_obs_counters_quiet_on_bound_registry_counters():
+    assert _obs_findings("""
+        class Engine:
+            _COUNTERS = ("steps_run",)
+            def __init__(self, registry):
+                bind_counters(self, registry, "engine")
+            def step(self):
+                self.steps_run += 1
+                self._private += 1
+                self.epoch += 1          # allowlisted versioning token
+    """) == []
+
+
+def test_obs_counters_live_repo_is_clean():
+    assert run_paths(paths=[], rules=["obs-counter-discipline"]) == []
+
+
+# ---------------------------------------------------------------------------
+# runtime guards (the dynamic half of the pass)
+# ---------------------------------------------------------------------------
+
+def test_trace_counted_counts_traces_not_calls():
+    counts = {}
+    fn = jax.jit(_trace_counted(lambda x: x * 2, counts, "f"))
+    assert counts["f"] == 0
+    x = jnp.arange(4)
+    fn(x)
+    fn(x)
+    fn(x)
+    assert counts["f"] == 1              # one trace, three calls
+    fn(jnp.arange(8))                    # new shape bucket -> retrace
+    assert counts["f"] == 2
+
+
+def test_device_only_guard_blocks_implicit_transfers():
+    f = jax.jit(lambda x: x + 1)
+    f(jnp.arange(4))                     # compile outside the guard
+    with _device_only(True):
+        f(jnp.asarray(np.arange(4)))     # explicit staging: legal
+        jax.device_get(jnp.arange(4))    # sanctioned sync: legal
+        with pytest.raises(Exception):
+            f(np.arange(4))              # implicit h2d upload
+    with _device_only(False):
+        f(np.arange(4))                  # guard off: a no-op context
+
+
+def test_continuous_engine_sentinel_flat_under_guard():
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = T.lm_init(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousEngine(cfg, params, n_pages=16, page_size=16,
+                           max_batch=2, max_len=32, decode_steps=2)
+    assert set(eng.trace_counts) == {"prefill_chunk",
+                                     "prefill_chunk_paged", "decode_loop"}
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, (4,)).astype(np.int32)
+    rid = eng.submit(prompt, 5)
+    eng.run()
+    assert eng.trace_counts["decode_loop"] >= 1
+    warm = dict(eng.trace_counts)
+    # steady state under the transfer guard: same shapes, zero
+    # retraces, identical temp-0 output
+    eng.transfer_guard = True
+    rid2 = eng.submit(prompt, 5)
+    eng.run()
+    assert eng.trace_counts == warm
+    fin = eng.scheduler.finished
+    assert list(fin[rid].generated) == list(fin[rid2].generated)

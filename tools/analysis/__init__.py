@@ -1,0 +1,13 @@
+"""repro static-analysis framework: registered AST rules enforcing the
+serving plane's performance/determinism disciplines.
+
+CLI: ``python -m tools.analysis [paths...] [--json] [--baseline F]``
+(run from the repo root).  See ``docs/analysis.md`` for the rule
+catalog and ``tools/analysis/core.py`` for the framework contract.
+"""
+
+from .core import (DEFAULT_PATHS, FileContext, Finding, RepoContext, Rule,
+                   all_rules, register, run_paths, run_source)
+
+__all__ = ["DEFAULT_PATHS", "FileContext", "Finding", "RepoContext",
+           "Rule", "all_rules", "register", "run_paths", "run_source"]

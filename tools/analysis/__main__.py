@@ -1,0 +1,75 @@
+"""CLI: ``python -m tools.analysis [paths...]``.
+
+Exit 0 when every rule is clean (after baseline subtraction), 1
+otherwise.  Paths are repo-relative; with none given the default scan
+set is ``src benchmarks examples`` (repo-level rules -- kernel-oracle
+coverage, obs-counter discipline -- always run over their fixed
+scopes).
+
+  --list-rules        print the registered rules and exit
+  --rules a,b         run only the named rules
+  --json              machine-readable report on stdout
+  --baseline F        subtract the findings recorded in F (matching on
+                      rule+path+message); new findings still fail
+  --write-baseline F  dump current findings to F and exit 0
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .core import DEFAULT_PATHS, all_rules, run_paths
+from .reporters import json_report, load_baseline, text_report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="repro static-analysis pass (docs/analysis.md)")
+    ap.add_argument("paths", nargs="*",
+                    help=f"repo-relative files/dirs to scan "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--baseline", default=None, metavar="F")
+    ap.add_argument("--write-baseline", default=None, metavar="F")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            kind = "/".join(k for k, c in (
+                ("file", rule.check_file), ("repo", rule.check_repo)) if c)
+            print(f"{rule.name}  [{kind}]  {rule.summary}")
+        return 0
+
+    rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
+             if args.rules else None)
+    findings = run_paths(paths=args.paths or None, rules=rules)
+
+    if args.write_baseline:
+        with open(args.write_baseline, "w", encoding="utf-8") as f:
+            json.dump({"findings": [x.to_dict() for x in findings]},
+                      f, indent=2)
+        print(f"analysis: wrote baseline ({len(findings)} findings) to "
+              f"{args.write_baseline}")
+        return 0
+
+    if args.baseline:
+        known = set(load_baseline(args.baseline))
+        findings = [f for f in findings if f.key() not in known]
+
+    n_rules = len(all_rules() if rules is None else rules)
+    if args.as_json:
+        json_report(findings, sys.stdout, n_rules)
+    else:
+        text_report(findings, sys.stderr if findings else sys.stdout,
+                    n_rules)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,258 @@
+"""Core of the repro static-analysis framework (``tools/analysis``).
+
+The serving plane's headline properties -- temp-0 parity, a decode
+critical path with zero host syncs, ``(gen-1)/K`` dispatches with zero
+steady-state recompiles -- are pinned dynamically by tests and bench
+asserts.  The *disciplines* that make them hold (no implicit
+device->host transfer in ``step()``, never read a donated buffer after
+the jitted call, every Pallas kernel ships a ref oracle + XLA
+fallback, scheduler decisions never consult wall clocks or unsorted
+sets) used to be unwritten conventions.  This package turns each one
+into a registered AST rule so a violating diff fails in CI instead of
+shifting a bench percentile nobody attributes.
+
+Layout:
+
+  * ``Finding``      -- one (rule, path, line, message) violation
+  * ``FileContext``  -- parsed source + ``# repro: allow(rule)`` map
+  * ``RepoContext``  -- lazy cross-file access for repo-level rules
+  * ``Rule``         -- a named check: per-file, repo-level, or both
+  * ``register``     -- the rule registry (populated by
+                        ``tools.analysis.rules`` on first use)
+  * ``run_paths`` / ``run_source`` -- the two entry points (CLI /
+                        tests)
+
+Suppression: a ``# repro: allow(<rule>[, <rule>...])`` comment on the
+finding's line, or on the line directly above it, silences that rule
+there.  ``allow(*)`` silences every rule.  Suppressions are expected
+to carry a justification in the surrounding comment (docs/analysis.md).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
+
+REPO_ROOT = os.path.normpath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                 os.pardir, os.pardir))
+
+#: scanned when the CLI is given no paths; tests/ and tools/ stay out
+#: (rule fixtures and the checkers themselves would trip the rules)
+DEFAULT_PATHS = ("src", "benchmarks", "examples")
+
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow\(([^)]*)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str      # repo-relative, forward slashes
+    line: int
+    message: str
+
+    def key(self):
+        """Baseline identity: line numbers drift under unrelated edits,
+        so a baseline matches on (rule, path, message) only."""
+        return (self.rule, self.path, self.message)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class FileContext:
+    """One parsed source file: AST, raw lines and the allow-comment map."""
+
+    def __init__(self, relpath: str, source: str):
+        self.path = relpath.replace(os.sep, "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=self.path)
+        self.allow: Dict[int, Set[str]] = {}
+        for lineno, text in enumerate(self.lines, start=1):
+            m = _ALLOW_RE.search(text)
+            if m:
+                self.allow[lineno] = {
+                    r.strip() for r in m.group(1).split(",") if r.strip()}
+
+    def allowed(self, rule: str, line: int) -> bool:
+        """True when ``# repro: allow(<rule>)`` sits on the finding's
+        line or the line directly above it."""
+        for ln in (line, line - 1):
+            rules = self.allow.get(ln)
+            if rules and (rule in rules or "*" in rules):
+                return True
+        return False
+
+
+class RepoContext:
+    """Lazy, cached access to files across the repo -- what repo-level
+    rules (kernel-oracle coverage, obs-counter discipline) use to read
+    modules outside the scanned path set."""
+
+    def __init__(self, root: str = REPO_ROOT):
+        self.root = root
+        self._cache: Dict[str, Optional[FileContext]] = {}
+
+    def get(self, relpath: str) -> Optional[FileContext]:
+        key = relpath.replace(os.sep, "/")
+        if key not in self._cache:
+            full = os.path.join(self.root, *key.split("/"))
+            if not os.path.isfile(full):
+                self._cache[key] = None
+            else:
+                with open(full, encoding="utf-8") as f:
+                    self._cache[key] = FileContext(key, f.read())
+        return self._cache[key]
+
+    def listdir(self, relpath: str) -> List[str]:
+        full = os.path.join(self.root, *relpath.split("/"))
+        if not os.path.isdir(full):
+            return []
+        return sorted(os.listdir(full))
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """A registered check.  ``check_file`` runs once per scanned file;
+    ``check_repo`` runs once per invocation against the whole repo
+    (cross-file invariants).  A rule may define either or both."""
+
+    name: str
+    summary: str
+    check_file: Optional[Callable[[FileContext], Iterable[Finding]]] = None
+    check_repo: Optional[Callable[[RepoContext], Iterable[Finding]]] = None
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(rule: Rule) -> Rule:
+    if rule.name in _REGISTRY:
+        raise ValueError(f"duplicate rule name: {rule.name}")
+    _REGISTRY[rule.name] = rule
+    return rule
+
+
+def all_rules() -> List[Rule]:
+    """Every registered rule, name-sorted.  Importing the rules package
+    is what populates the registry (each rule module self-registers)."""
+    from . import rules  # noqa: F401  (import for side effect)
+    return [_REGISTRY[name] for name in sorted(_REGISTRY)]
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers (used by several rules)
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def root_name(node: ast.AST) -> Optional[str]:
+    """Leftmost Name id of a Name/Attribute chain, else None."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def walk_functions(tree: ast.AST):
+    """Yield every (sync or async) function definition in ``tree``."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+# ---------------------------------------------------------------------------
+# runners
+# ---------------------------------------------------------------------------
+
+def iter_py_files(root: str, paths: Sequence[str]) -> Iterable[str]:
+    """Repo-relative ``*.py`` paths under each entry, sorted, skipping
+    __pycache__ and VCS internals."""
+    for p in paths:
+        full = os.path.join(root, p)
+        if os.path.isfile(full) and p.endswith(".py"):
+            yield p.replace(os.sep, "/")
+        elif os.path.isdir(full):
+            for dirpath, dirnames, filenames in os.walk(full):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if d not in {"__pycache__", ".git", ".pytest_cache"})
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        rel = os.path.relpath(os.path.join(dirpath, fn), root)
+                        yield rel.replace(os.sep, "/")
+
+
+def _sorted(findings: Iterable[Finding]) -> List[Finding]:
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule, f.message))
+
+
+def run_paths(paths: Optional[Sequence[str]] = None,
+              rules: Optional[Sequence[str]] = None,
+              root: str = REPO_ROOT) -> List[Finding]:
+    """Run the selected rules over the repo.
+
+    Per-file rules see every ``*.py`` under ``paths`` (default
+    ``DEFAULT_PATHS``); repo-level rules run once regardless of
+    ``paths`` (their scope is fixed by the invariant they check).
+    ``# repro: allow(...)`` suppressions are applied here."""
+    repo = RepoContext(root)
+    selected = [r for r in all_rules() if rules is None or r.name in rules]
+    if rules is not None:
+        unknown = set(rules) - {r.name for r in selected}
+        if unknown:
+            raise ValueError(f"unknown rule(s): {sorted(unknown)}")
+    out: List[Finding] = []
+    file_rules = [r for r in selected if r.check_file is not None]
+    for rel in iter_py_files(root, paths if paths is not None
+                             else DEFAULT_PATHS):
+        ctx = repo.get(rel)
+        if ctx is None:
+            continue
+        for rule in file_rules:
+            for f in rule.check_file(ctx):
+                if not ctx.allowed(rule.name, f.line):
+                    out.append(f)
+    for rule in selected:
+        if rule.check_repo is None:
+            continue
+        for f in rule.check_repo(repo):
+            ctx = repo.get(f.path)
+            if ctx is None or not ctx.allowed(rule.name, f.line):
+                out.append(f)
+    # a location two checks of one rule both hit reports once
+    return _sorted(set(out))
+
+
+def run_source(source: str, path: str,
+               rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run per-file rules over an in-memory source string (test fixture
+    entry point).  ``path`` is the pretended repo-relative location --
+    rules scope themselves by it (e.g. host-sync only fires under
+    ``src/repro/serve/``)."""
+    ctx = FileContext(path, source)
+    out: List[Finding] = []
+    for rule in all_rules():
+        if rules is not None and rule.name not in rules:
+            continue
+        if rule.check_file is None:
+            continue
+        for f in rule.check_file(ctx):
+            if not ctx.allowed(rule.name, f.line):
+                out.append(f)
+    return _sorted(set(out))

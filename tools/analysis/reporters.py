@@ -1,0 +1,39 @@
+"""Text and JSON reporters for analysis findings."""
+
+from __future__ import annotations
+
+import json
+from typing import IO, List, Sequence
+
+from .core import Finding
+
+
+def text_report(findings: Sequence[Finding], stream: IO[str],
+                n_rules: int) -> None:
+    for f in findings:
+        stream.write(f"{f.path}:{f.line}: [{f.rule}] {f.message}\n")
+    if findings:
+        stream.write(f"analysis: {len(findings)} finding(s) across "
+                     f"{len({f.rule for f in findings})} rule(s)\n")
+    else:
+        stream.write(f"analysis: OK ({n_rules} rules, 0 findings)\n")
+
+
+def json_report(findings: Sequence[Finding], stream: IO[str],
+                n_rules: int) -> None:
+    json.dump({"rules": n_rules,
+               "count": len(findings),
+               "findings": [f.to_dict() for f in findings]},
+              stream, indent=2)
+    stream.write("\n")
+
+
+def load_baseline(path: str) -> List[tuple]:
+    """Baseline file: the ``findings`` list of a previous ``--json``
+    run (or a ``--write-baseline`` dump).  Matching is on
+    (rule, path, message) -- line numbers drift under unrelated
+    edits."""
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    entries = data["findings"] if isinstance(data, dict) else data
+    return [(e["rule"], e["path"], e["message"]) for e in entries]

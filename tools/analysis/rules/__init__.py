@@ -1,0 +1,10 @@
+"""Rule modules self-register on import; importing this package is
+what populates ``tools.analysis.core``'s registry (``all_rules``
+imports it lazily, so rule modules can import core freely)."""
+
+from . import determinism   # noqa: F401
+from . import donation      # noqa: F401
+from . import host_sync     # noqa: F401
+from . import kernel_oracle  # noqa: F401
+from . import obs_counters  # noqa: F401
+from . import retrace       # noqa: F401

@@ -1,0 +1,115 @@
+"""Rule ``determinism``: scheduler decisions are a pure function of the
+request stream, and interval timing uses a monotonic clock.
+
+The parity ladders (interleaved vs. disaggregated, K-invariance,
+prefix-cache on/off) only hold because admission order, victim choice
+and batch composition depend on nothing but the submitted requests.
+A wall clock or RNG in a decision path silently breaks replay; an
+unsorted set iteration feeding admission/batch order breaks it across
+Python hash seeds.
+
+Checks:
+
+  1. in ``src/repro/serve/scheduler.py`` (the decision paths --
+     admission, capacity, preemption, prefix index, decode runner):
+     flag ``time.time``/``time.monotonic``, ``random.*``,
+     ``np.random.*`` and ``os.urandom`` calls.  ``time.perf_counter``
+     stays legal: the telemetry plane stamps spans with it, and
+     tracing never feeds decisions;
+  2. in every serving module (``src/repro/serve/``): flag for-loops
+     iterating a set display / ``set(...)`` / ``frozenset(...)`` /
+     set comprehension directly -- iteration order is hash-seed
+     dependent; wrap in ``sorted(...)``;
+  3. anywhere in the scanned tree: flag ``time.time()`` -- it is
+     wall-clock (NTP steps move it backwards); intervals must use
+     ``time.perf_counter``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from ..core import Finding, FileContext, Rule, dotted_name, register
+
+NAME = "determinism"
+
+_SCHED_BANNED = ("time.time", "time.monotonic", "os.urandom")
+_SCHED_BANNED_PREFIX = ("random.", "np.random.", "numpy.random.",
+                        "secrets.")
+
+
+def _scheduler_calls(ctx: FileContext) -> Iterable[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dn = dotted_name(node.func)
+        if dn is None:
+            continue
+        if dn in _SCHED_BANNED or any(dn.startswith(p)
+                                      for p in _SCHED_BANNED_PREFIX):
+            yield Finding(
+                NAME, ctx.path, node.lineno,
+                f"`{dn}(...)` in a scheduler decision path: admission/"
+                f"preemption/batch order must be a pure function of the "
+                f"request stream (the parity ladders replay it); derive "
+                f"randomness from a seeded per-request stream and timing "
+                f"from the obs plane")
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return dotted_name(node.func) in ("set", "frozenset")
+    return False
+
+
+def _set_iteration(ctx: FileContext) -> Iterable[Finding]:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.For, ast.AsyncFor)) \
+                and _is_set_expr(node.iter):
+            yield Finding(
+                NAME, ctx.path, node.iter.lineno,
+                "iterating a set in the serving layer: order is "
+                "hash-seed dependent, so anything it feeds (admission, "
+                "batch rows, page assignment) diverges across runs; "
+                "wrap in sorted(...) or keep a list/deque")
+        elif isinstance(node, (ast.ListComp, ast.SetComp,
+                               ast.GeneratorExp, ast.DictComp)):
+            for gen in node.generators:
+                if _is_set_expr(gen.iter):
+                    yield Finding(
+                        NAME, ctx.path, gen.iter.lineno,
+                        "comprehension over a set in the serving layer: "
+                        "order is hash-seed dependent; wrap in "
+                        "sorted(...)")
+
+
+def _wall_clock(ctx: FileContext) -> Iterable[Finding]:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) \
+                and dotted_name(node.func) == "time.time":
+            yield Finding(
+                NAME, ctx.path, node.lineno,
+                "`time.time()` is wall-clock (non-monotonic under NTP "
+                "steps); use time.perf_counter for intervals")
+
+
+def check_file(ctx: FileContext) -> List[Finding]:
+    out: List[Finding] = []
+    if ctx.path == "src/repro/serve/scheduler.py":
+        out.extend(_scheduler_calls(ctx))
+    if ctx.path.startswith("src/repro/serve/"):
+        out.extend(_set_iteration(ctx))
+    out.extend(_wall_clock(ctx))
+    return out
+
+
+register(Rule(
+    name=NAME,
+    summary=("no wall-clock/RNG in scheduler decision paths, no "
+             "unsorted set iteration in the serving layer, "
+             "time.perf_counter over time.time everywhere"),
+    check_file=check_file,
+))

@@ -1,0 +1,234 @@
+"""Rule ``donation-safety``: never read a donated buffer after the
+jitted call that consumed it.
+
+``donate_argnums`` hands a buffer's storage to XLA: after the call the
+Python reference still exists but the array is DELETED -- touching it
+raises (best case) or, with buffer aliasing on some backends, reads
+bytes the kernel already overwrote.  The serving plane donates the
+pool cache into every decode dispatch and the prefill carry into every
+``_ctx_write``; the invariant that nothing reads those operands
+afterwards is what this rule pins.
+
+Per file (scanned under ``serve/``, ``train/``, ``launch/`` and
+``benchmarks/``):
+
+  1. collect donating callables: ``X = jax.jit(fn, donate_argnums=...)``
+     assignments (incl. ``self._x`` targets) and functions decorated
+     ``@functools.partial(jax.jit, donate_argnums=...)``;
+  2. at each call site of a collected callable, take the donated
+     positional args that are plain names (``state``) or constant-key
+     subscripts (``ctx["k"]``);
+  3. flag any LOAD of such an operand in the statements after the call
+     (same statement list) before it is reassigned.  The canonical
+     rebind idiom ``state = loop(..., state)`` stops tracking -- the
+     name now holds the NEW buffer.
+
+The tracker is deliberately statement-local and alias-free: it will
+miss a donated read smuggled through an alias, but it never flags the
+legitimate rebind patterns the engines use.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from ..core import Finding, FileContext, Rule, dotted_name, register
+
+NAME = "donation-safety"
+
+_SCOPES = ("src/repro/serve/", "src/repro/train/", "src/repro/launch/",
+           "benchmarks/")
+
+# a tracked operand: ("name", None) for a bare name, ("name", key) for
+# name[key] with a constant key
+Operand = Tuple[str, Optional[object]]
+
+
+def _donated_positions(call: ast.Call) -> Optional[List[int]]:
+    """donate_argnums positions of a ``jax.jit(...)`` call, or None if
+    the call is not a donating jit."""
+    if dotted_name(call.func) not in ("jax.jit", "jit"):
+        return None
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return [v.value]
+        if isinstance(v, (ast.Tuple, ast.List)):
+            out = [e.value for e in v.elts
+                   if isinstance(e, ast.Constant)
+                   and isinstance(e.value, int)]
+            return out or None
+    return None
+
+
+def _partial_jit_positions(deco: ast.AST) -> Optional[List[int]]:
+    """donate_argnums of a ``functools.partial(jax.jit, ...)``
+    decorator, else None."""
+    if not isinstance(deco, ast.Call):
+        return None
+    if dotted_name(deco.func) not in ("functools.partial", "partial"):
+        return None
+    if not deco.args or dotted_name(deco.args[0]) not in ("jax.jit", "jit"):
+        return None
+    for kw in deco.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return [v.value]
+        if isinstance(v, (ast.Tuple, ast.List)):
+            return [e.value for e in v.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, int)] or None
+    return None
+
+
+def _collect_donors(tree: ast.AST) -> Dict[str, List[int]]:
+    """{callable short name -> donated positions} for this file."""
+    donors: Dict[str, List[int]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            positions = (_donated_positions(node.value)
+                         if isinstance(node.value, ast.Call) else None)
+            if positions:
+                for tgt in node.targets:
+                    name = tgt.id if isinstance(tgt, ast.Name) else (
+                        tgt.attr if isinstance(tgt, ast.Attribute) else None)
+                    if name:
+                        donors[name] = positions
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for deco in node.decorator_list:
+                positions = _partial_jit_positions(deco)
+                if positions:
+                    donors[node.name] = positions
+    return donors
+
+
+def _operand(arg: ast.AST) -> Optional[Operand]:
+    if isinstance(arg, ast.Name):
+        return (arg.id, None)
+    if isinstance(arg, ast.Subscript) and isinstance(arg.value, ast.Name) \
+            and isinstance(arg.slice, ast.Constant):
+        return (arg.value.id, arg.slice.value)
+    return None
+
+
+def _donating_calls(stmt: ast.stmt, donors: Dict[str, List[int]]):
+    """Yield (call, donated operands) for donor calls inside ``stmt``."""
+    for node in ast.walk(stmt):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        name = func.id if isinstance(func, ast.Name) else (
+            func.attr if isinstance(func, ast.Attribute) else None)
+        if name not in donors:
+            continue
+        ops = []
+        for pos in donors[name]:
+            if pos < len(node.args):
+                op = _operand(node.args[pos])
+                if op is not None:
+                    ops.append(op)
+        if ops:
+            yield node, name, ops
+
+
+def _stores_of(stmt: ast.stmt) -> Set[Operand]:
+    """Operands ``stmt`` (re)binds: bare names and const-key subscripts
+    in Store context."""
+    stores: Set[Operand] = set()
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            stores.add((node.id, None))
+        elif isinstance(node, ast.Subscript) \
+                and isinstance(node.ctx, ast.Store) \
+                and isinstance(node.value, ast.Name) \
+                and isinstance(node.slice, ast.Constant):
+            stores.add((node.value.id, node.slice.value))
+    return stores
+
+
+def _loads_of(stmt: ast.stmt, tracked: Set[Operand]):
+    """Yield (operand, lineno) for loads of tracked operands in
+    ``stmt``.  A bare-name track hits any load of the name; a
+    subscript track hits only the same constant key."""
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.Subscript) \
+                and isinstance(node.ctx, ast.Load) \
+                and isinstance(node.value, ast.Name) \
+                and isinstance(node.slice, ast.Constant):
+            op = (node.value.id, node.slice.value)
+            if op in tracked:
+                yield op, node.lineno
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            # skip the base name of a const-key subscript handled above
+            op = (node.id, None)
+            if op in tracked:
+                yield op, node.lineno
+
+
+def _apply_stores(tracked: Set[Operand], stores: Set[Operand]) -> None:
+    """Drop tracked operands a statement rebinds.  A store of the bare
+    base name also kills subscript tracks rooted at it (the dict/list
+    binding changed wholesale)."""
+    for base, key in list(tracked):
+        if (base, None) in stores or (base, key) in stores:
+            tracked.discard((base, key))
+
+
+def _check_body(ctx: FileContext, body: List[ast.stmt],
+                donors: Dict[str, List[int]]) -> Iterable[Finding]:
+    for i, stmt in enumerate(body):
+        tracked: Set[Operand] = set()
+        donor_name = None
+        for call, name, ops in _donating_calls(stmt, donors):
+            donor_name = name
+            tracked.update(ops)
+        if tracked:
+            # the canonical rebind: `state = loop(..., state)` -- the
+            # donated operand's binding now holds the returned buffer
+            _apply_stores(tracked, _stores_of(stmt))
+        for later in body[i + 1:]:
+            if not tracked:
+                break
+            for op, lineno in _loads_of(later, tracked):
+                base, key = op
+                shown = base if key is None else f"{base}[{key!r}]"
+                yield Finding(
+                    NAME, ctx.path, lineno,
+                    f"`{shown}` was donated to `{donor_name}` (line "
+                    f"{stmt.lineno}) -- its buffer no longer exists after "
+                    f"the call; use the returned value, or drop "
+                    f"donate_argnums if the operand must stay readable")
+                tracked.discard(op)
+            _apply_stores(tracked, _stores_of(later))
+
+
+def check_file(ctx: FileContext) -> List[Finding]:
+    if not any(ctx.path.startswith(s) for s in _SCOPES):
+        return []
+    donors = _collect_donors(ctx.tree)
+    if not donors:
+        return []
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        body = getattr(node, "body", None)
+        if isinstance(body, list) and body \
+                and isinstance(body[0], ast.stmt):
+            out.extend(_check_body(ctx, body, donors))
+            orelse = getattr(node, "orelse", None)
+            if isinstance(orelse, list) and orelse:
+                out.extend(_check_body(ctx, orelse, donors))
+    return out
+
+
+register(Rule(
+    name=NAME,
+    summary=("no read of a donate_argnums-donated operand after the "
+             "jitted call that consumed it (serve/, train/, launch/, "
+             "benchmarks/)"),
+    check_file=check_file,
+))

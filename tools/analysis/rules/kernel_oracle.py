@@ -1,0 +1,140 @@
+"""Rule ``kernel-oracle``: every public Pallas kernel ships a ref
+oracle and an XLA fallback, and the dispatch actually wires them.
+
+The kernel contract (ROADMAP): each ``*_pallas`` entry point is
+cross-checked against a pure-jnp oracle in ``kernels/ref.py`` (the
+numerics ground truth tests diff against) and has an XLA-only fallback
+the serving plane can lower when Pallas is unavailable (the dry-run /
+``use_ref`` / ``decode_impl="blocked"`` paths).  A kernel landed
+without its oracle+fallback pair silently narrows every downstream
+parity test to "Pallas agrees with itself".
+
+``KERNEL_TABLE`` is the explicit registry of those triples.  The rule
+checks, against the live tree:
+
+  1. every public ``*_pallas`` def under ``src/repro/kernels/`` has a
+     table entry (discovery: top-level non-underscore defs, ref.py and
+     __init__.py excluded);
+  2. the oracle exists as a def in ``kernels/ref.py``;
+  3. the fallback exists as a def in its module;
+  4. the fallback module references the kernel by name -- i.e. the
+     dispatch choosing kernel-vs-fallback lives where the table says;
+  5. stale table entries (kernel deleted/renamed) are flagged too, so
+     the table cannot rot into documentation.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Tuple
+
+from ..core import Finding, RepoContext, Rule, register
+
+NAME = "kernel-oracle"
+
+KERNELS_DIR = "src/repro/kernels"
+REF_PATH = "src/repro/kernels/ref.py"
+
+#: kernel -> (oracle def in kernels/ref.py, fallback module, fallback def)
+#: The oracle name is NOT derived from the kernel name on purpose:
+#: ``paged_flash_prefill_pallas``'s oracle is ``paged_prefill_ref``,
+#: and an explicit table is what lets the rule flag a rename on either
+#: side instead of silently un-pairing them.
+KERNEL_TABLE: Dict[str, Tuple[str, str, str]] = {
+    "rmmec_matmul_pallas": (
+        "rmmec_matmul_ref", "src/repro/kernels/ops.py", "packed_matmul"),
+    "quire_dot_pallas": (
+        "quire_dot_ref", "src/repro/kernels/ops.py", "quire_dot"),
+    "dequant_pallas": (
+        "dequant_ref", "src/repro/kernels/ops.py", "to_dense"),
+    "flash_decode_pallas": (
+        "flash_decode_ref", "src/repro/models/attention.py",
+        "decode_quantized_blocks"),
+    "paged_flash_decode_pallas": (
+        "paged_flash_decode_ref", "src/repro/models/attention.py",
+        "paged_decode_blocked"),
+    "paged_flash_prefill_pallas": (
+        "paged_prefill_ref", "src/repro/models/attention.py",
+        "paged_prefill_blocked"),
+}
+
+
+def _top_level_defs(tree: ast.Module) -> Dict[str, int]:
+    return {node.name: node.lineno for node in tree.body
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def discover_kernels(repo: RepoContext) -> Dict[str, Tuple[str, int]]:
+    """{kernel name -> (module path, def line)} for every public
+    ``*_pallas`` top-level def under ``src/repro/kernels/``."""
+    out: Dict[str, Tuple[str, int]] = {}
+    for fn in repo.listdir(KERNELS_DIR):
+        if not fn.endswith(".py") or fn in ("__init__.py", "ref.py"):
+            continue
+        ctx = repo.get(f"{KERNELS_DIR}/{fn}")
+        if ctx is None:
+            continue
+        for name, lineno in _top_level_defs(ctx.tree).items():
+            if name.endswith("_pallas") and not name.startswith("_"):
+                out[name] = (ctx.path, lineno)
+    return out
+
+
+def check_table(repo: RepoContext,
+                table: Dict[str, Tuple[str, str, str]]) -> List[Finding]:
+    """Validate ``table`` against the live tree (exposed separately so
+    tests can inject a broken table)."""
+    out: List[Finding] = []
+    kernels = discover_kernels(repo)
+    ref_ctx = repo.get(REF_PATH)
+    ref_defs = _top_level_defs(ref_ctx.tree) if ref_ctx else {}
+    for name, (path, lineno) in sorted(kernels.items()):
+        if name not in table:
+            out.append(Finding(
+                NAME, path, lineno,
+                f"public kernel `{name}` has no KERNEL_TABLE entry "
+                f"(tools/analysis/rules/kernel_oracle.py): every "
+                f"*_pallas entry point must register its ref.py oracle "
+                f"and XLA fallback"))
+    for name, (oracle, fb_path, fb_name) in sorted(table.items()):
+        if name not in kernels:
+            out.append(Finding(
+                NAME, f"{KERNELS_DIR}/__init__.py", 1,
+                f"stale KERNEL_TABLE entry `{name}`: no such public "
+                f"kernel under {KERNELS_DIR}/ -- update the table with "
+                f"the rename/removal"))
+            continue
+        k_path, k_line = kernels[name]
+        if oracle not in ref_defs:
+            out.append(Finding(
+                NAME, k_path, k_line,
+                f"kernel `{name}` declares oracle `{oracle}` but "
+                f"{REF_PATH} defines no such function"))
+        fb_ctx = repo.get(fb_path)
+        fb_defs = _top_level_defs(fb_ctx.tree) if fb_ctx else {}
+        if fb_name not in fb_defs:
+            out.append(Finding(
+                NAME, k_path, k_line,
+                f"kernel `{name}` declares XLA fallback "
+                f"`{fb_path}:{fb_name}` but that module defines no such "
+                f"function"))
+        elif fb_ctx is not None and name not in fb_ctx.source:
+            out.append(Finding(
+                NAME, fb_path, fb_defs[fb_name],
+                f"fallback module {fb_path} never references kernel "
+                f"`{name}`: the kernel-vs-fallback dispatch the table "
+                f"claims does not exist there"))
+    return out
+
+
+def check_repo(repo: RepoContext) -> Iterable[Finding]:
+    return check_table(repo, KERNEL_TABLE)
+
+
+register(Rule(
+    name=NAME,
+    summary=("every public *_pallas kernel has a kernels/ref.py oracle "
+             "and an XLA fallback, cross-checked against the dispatch "
+             "site"),
+    check_repo=check_repo,
+))

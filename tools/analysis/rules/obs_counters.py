@@ -1,0 +1,122 @@
+"""Rule ``obs-counter-discipline``: serving-layer counters stay
+registry-backed.
+
+Migrated from the PR 8 one-off ``tools/check_obs_discipline.py`` (that
+script is now a thin shim over this rule).  The serving-plane counters
+(``ContinuousEngine.decode_dispatches``, ``PageHandoffChannel.handoffs``
+...) read like plain attributes but are registry-backed:
+``repro.obs.metrics.bind_counters`` installs data descriptors for every
+name in a class's ``_COUNTERS`` tuple, so ``self.x += 1`` routes
+through a ``MetricRegistry`` Counter.  That contract only holds for
+DECLARED names -- an increment of an undeclared attribute silently
+re-creates the pre-PR-8 world of bare counters the registry never
+sees.
+
+Fails when, across ``src/repro/serve/*.py``:
+
+  1. a class declares ``_COUNTERS`` but never calls ``bind_counters``
+     (its "counters" would be plain ints, invisible to the registry);
+  2. an augmented assignment on ``self.<name>`` (or a chain rooted at
+     ``self``) targets a name that is in no ``_COUNTERS`` tuple
+     anywhere in the serving layer.
+
+Allowlisted: ``epoch`` (the scheduler's page-table cache-invalidation
+token -- versioning state, not a metric) and ``_``-prefixed private
+state.  The declared-name set is the UNION over all serve modules (a
+counter may be declared on the engine and bumped through a helper), so
+this is a repo-level rule.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List
+
+from ..core import Finding, FileContext, RepoContext, Rule, register
+
+NAME = "obs-counter-discipline"
+
+SERVE_DIR = "src/repro/serve"
+ALLOW = frozenset({"epoch"})
+
+
+def _counter_decls(tree: ast.Module):
+    """Yield (class name, lineno, declared names, binds?) per class."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        names: List[str] = []
+        binds = False
+        for stmt in node.body:
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name) and t.id == "_COUNTERS" \
+                            and isinstance(stmt.value, ast.Tuple):
+                        names = [e.value for e in stmt.value.elts
+                                 if isinstance(e, ast.Constant)]
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                fn = sub.func
+                callee = fn.id if isinstance(fn, ast.Name) else \
+                    fn.attr if isinstance(fn, ast.Attribute) else None
+                if callee == "bind_counters":
+                    binds = True
+        yield node.name, node.lineno, names, binds
+
+
+def _rooted_at_self(node: ast.expr) -> bool:
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return isinstance(node, ast.Name) and node.id == "self"
+
+
+def check_sources(contexts: Dict[str, FileContext]) -> List[Finding]:
+    """The two checks over a {path -> FileContext} map (exposed so
+    tests can run fixture modules through the real logic)."""
+    out: List[Finding] = []
+    declared: set = set()
+    for path, ctx in contexts.items():
+        for cls, lineno, names, binds in _counter_decls(ctx.tree):
+            declared.update(names)
+            if names and not binds:
+                out.append(Finding(
+                    NAME, path, lineno,
+                    f"class {cls} declares _COUNTERS but never calls "
+                    f"bind_counters -- its counters are bare ints the "
+                    f"MetricRegistry cannot see"))
+    for path, ctx in contexts.items():
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.AugAssign)
+                    and isinstance(node.target, ast.Attribute)):
+                continue
+            attr = node.target.attr
+            if attr.startswith("_") or attr in ALLOW or attr in declared:
+                continue
+            if not _rooted_at_self(node.target.value):
+                continue        # request/local object state, not a counter
+            out.append(Finding(
+                NAME, path, node.lineno,
+                f"'self...{attr} (op)=' mutates a bare attribute "
+                f"declared in no _COUNTERS tuple; declare it "
+                f"(registry-backed via bind_counters) or rename it "
+                f"_{attr} if it is private state"))
+    return out
+
+
+def check_repo(repo: RepoContext) -> Iterable[Finding]:
+    contexts: Dict[str, FileContext] = {}
+    for fn in repo.listdir(SERVE_DIR):
+        if fn.endswith(".py"):
+            ctx = repo.get(f"{SERVE_DIR}/{fn}")
+            if ctx is not None:
+                contexts[ctx.path] = ctx
+    return check_sources(contexts)
+
+
+register(Rule(
+    name=NAME,
+    summary=("serving-layer self.<counter> (op)= targets must be "
+             "declared in a _COUNTERS tuple and bound through "
+             "bind_counters (registry-backed)"),
+    check_repo=check_repo,
+))

@@ -1,0 +1,93 @@
+"""Rule ``jit-in-step``: never construct a jitted callable (or a
+``pl.pallas_call``) inside a per-step loop or a serving ``step()``
+body.
+
+``jax.jit`` returns a FRESH callable with its own trace cache: built
+inside a loop, every iteration traces, lowers and compiles from
+scratch -- the steady-state-recompile regression the compile-count
+sentinel (``ContinuousEngine.trace_counts``) exists to catch at
+runtime.  This rule catches it at the diff: jit/pallas_call
+construction belongs in ``__init__``/``__post_init__``/builders, where
+it runs once and the trace cache amortizes.
+
+Flagged (scope: ``src/repro/``):
+
+  * ``jax.jit(...)`` / ``pl.pallas_call(...)`` /
+    ``functools.partial(jax.jit, ...)`` lexically inside a for/while
+    body anywhere;
+  * the same constructions anywhere inside a serving-layer ``step``,
+    ``dispatch`` or ``sync`` method (``src/repro/serve/``) -- those run
+    once per engine step, which IS the loop.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from ..core import (Finding, FileContext, Rule, dotted_name, register,
+                    walk_functions)
+
+NAME = "jit-in-step"
+
+_STEP_FUNCTIONS = frozenset({"step", "dispatch", "sync"})
+_CONSTRUCTORS = ("jax.jit", "pl.pallas_call", "pallas_call")
+
+
+def _construction(node: ast.AST):
+    """The constructor's dotted name if ``node`` builds a jitted
+    callable, else None."""
+    if not isinstance(node, ast.Call):
+        return None
+    dn = dotted_name(node.func)
+    if dn in _CONSTRUCTORS:
+        return dn
+    if dn in ("functools.partial", "partial") and node.args \
+            and dotted_name(node.args[0]) in ("jax.jit", "jit"):
+        return "functools.partial(jax.jit, ...)"
+    return None
+
+
+def _flag_constructions(ctx: FileContext, root: ast.AST,
+                        where: str) -> Iterable[Finding]:
+    for node in ast.walk(root):
+        ctor = _construction(node)
+        if ctor is not None:
+            yield Finding(
+                NAME, ctx.path, node.lineno,
+                f"`{ctor}` constructed {where}: every execution traces "
+                f"and compiles from scratch (a guaranteed steady-state "
+                f"recompile); hoist the construction to "
+                f"__init__/__post_init__ or a module-level builder")
+
+
+def check_file(ctx: FileContext) -> List[Finding]:
+    if not ctx.path.startswith("src/repro/"):
+        return []
+    out: List[Finding] = []
+    seen = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.For, ast.While, ast.AsyncFor)):
+            for stmt in node.body + node.orelse:
+                for f in _flag_constructions(ctx, stmt,
+                                             "inside a loop body"):
+                    if f.line not in seen:
+                        seen.add(f.line)
+                        out.append(f)
+    if ctx.path.startswith("src/repro/serve/"):
+        for fn in walk_functions(ctx.tree):
+            if fn.name in _STEP_FUNCTIONS:
+                for f in _flag_constructions(
+                        ctx, fn, f"inside step-path `{fn.name}`"):
+                    if f.line not in seen:
+                        seen.add(f.line)
+                        out.append(f)
+    return out
+
+
+register(Rule(
+    name=NAME,
+    summary=("no jax.jit / pl.pallas_call construction inside per-step "
+             "loops or serving step()/dispatch()/sync() bodies"),
+    check_file=check_file,
+))

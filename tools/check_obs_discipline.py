@@ -1,113 +1,40 @@
 #!/usr/bin/env python
-"""Static observability-discipline check for the serving layer.
+"""Static observability-discipline check for the serving layer (shim).
 
-The serving-plane counters (``ContinuousEngine.decode_dispatches``,
-``PageHandoffChannel.handoffs``, ...) read like plain attributes but
-are registry-backed: ``repro.obs.metrics.bind_counters`` installs data
-descriptors for every name in a class's ``_COUNTERS`` tuple, so
-``self.x += 1`` routes through a ``MetricRegistry`` Counter.  That
-contract only holds for DECLARED names -- an increment of an
-undeclared attribute silently re-creates the pre-PR-8 world of bare
-counters the registry never sees.
-
-This check walks ``src/repro/serve/*.py`` ASTs and fails when:
-
-  1. a class declares ``_COUNTERS`` but never calls ``bind_counters``
-     (its "counters" would be plain ints, invisible to the registry);
-  2. an augmented assignment on ``self.<name>`` (or a chain rooted at
-     ``self``, e.g. ``self.prefix.misses``) targets a name that is in
-     no ``_COUNTERS`` tuple anywhere in the serving layer -- i.e. a
-     bare counter mutated outside the registry API.
-
-Allowlisted: ``epoch`` (the scheduler's page-table cache-invalidation
-token -- versioning state, not a metric) and ``_``-prefixed private
-state (``self._next_rid`` etc.).
+The check itself now lives in the analysis framework as the registered
+rule ``obs-counter-discipline`` (``tools/analysis/rules/obs_counters.py``
+-- same two failures: a ``_COUNTERS`` class that never calls
+``bind_counters``, and a ``self.<attr> (op)=`` on a name no
+``_COUNTERS`` tuple declares).  This entry point survives so the
+existing CI step and local habits keep working:
 
   python tools/check_obs_discipline.py        # exit 1 on violation
+
+which is equivalent to:
+
+  python -m tools.analysis --rules obs-counter-discipline
 """
 
 from __future__ import annotations
 
-import ast
 import os
 import sys
 
-SERVE_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
-                         "src", "repro", "serve")
-ALLOW = {"epoch"}
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir))
 
-
-def _counter_decls(tree: ast.Module):
-    """Yield (class_name, names, binds) per class: its ``_COUNTERS``
-    tuple entries (empty if undeclared) and whether any method calls
-    ``bind_counters``."""
-    for node in ast.walk(tree):
-        if not isinstance(node, ast.ClassDef):
-            continue
-        names, binds = [], False
-        for stmt in node.body:
-            if isinstance(stmt, ast.Assign):
-                for t in stmt.targets:
-                    if isinstance(t, ast.Name) and t.id == "_COUNTERS" \
-                            and isinstance(stmt.value, ast.Tuple):
-                        names = [e.value for e in stmt.value.elts
-                                 if isinstance(e, ast.Constant)]
-        for sub in ast.walk(node):
-            if isinstance(sub, ast.Call):
-                fn = sub.func
-                callee = fn.id if isinstance(fn, ast.Name) else \
-                    fn.attr if isinstance(fn, ast.Attribute) else None
-                if callee == "bind_counters":
-                    binds = True
-        yield node.name, names, binds
-
-
-def _rooted_at_self(node: ast.expr) -> bool:
-    while isinstance(node, ast.Attribute):
-        node = node.value
-    return isinstance(node, ast.Name) and node.id == "self"
+from tools.analysis import run_paths  # noqa: E402
 
 
 def check() -> int:
-    trees = {}
-    declared: set = set()
-    failures = []
-    for fn in sorted(os.listdir(SERVE_DIR)):
-        if not fn.endswith(".py"):
-            continue
-        path = os.path.normpath(os.path.join(SERVE_DIR, fn))
-        with open(path) as f:
-            trees[path] = ast.parse(f.read(), filename=path)
-    for path, tree in trees.items():
-        for cls, names, binds in _counter_decls(tree):
-            declared.update(names)
-            if names and not binds:
-                failures.append(
-                    f"{path}: class {cls} declares _COUNTERS but never "
-                    f"calls bind_counters -- its counters are bare ints "
-                    f"the MetricRegistry cannot see")
-    for path, tree in trees.items():
-        for node in ast.walk(tree):
-            if not (isinstance(node, ast.AugAssign)
-                    and isinstance(node.target, ast.Attribute)):
-                continue
-            attr = node.target.attr
-            if attr.startswith("_") or attr in ALLOW or attr in declared:
-                continue
-            if not _rooted_at_self(node.target.value):
-                continue            # request/local object state, not a counter
-            failures.append(
-                f"{path}:{node.lineno}: 'self...{attr} (op)=' mutates a "
-                f"bare attribute declared in no _COUNTERS tuple; declare "
-                f"it (registry-backed via bind_counters) or rename it "
-                f"_{attr} if it is private state")
-    for f in failures:
-        print(f"obs-discipline: {f}", file=sys.stderr)
-    if not failures:
-        n = sum(1 for _ in trees)
-        print(f"obs-discipline: OK ({n} serve modules, "
-              f"{len(declared)} registry-backed counter names)")
-    return 1 if failures else 0
+    findings = run_paths(paths=[], rules=["obs-counter-discipline"])
+    for f in findings:
+        print(f"obs-discipline: {f.path}:{f.line}: {f.message}",
+              file=sys.stderr)
+    if not findings:
+        print("obs-discipline: OK (rule obs-counter-discipline via "
+              "tools.analysis)")
+    return 1 if findings else 0
 
 
 if __name__ == "__main__":
