@@ -46,6 +46,16 @@ reports:
     ``handoff_pages * page_handoff_bytes`` (the posit8 page model;
     asserted).
 
+  * PAGED STATE (recurrent families): an RWKV cohort served off the
+    pool's state-slab plane -- zero KV pages, one posit8 slab per
+    request, rewritten in place inside the fused K-step loop.
+    Asserted: the ``engine/state_bytes_per_step_model`` gauge equals
+    the pool model and the closed form ``2 * state_slab_bytes * live``
+    every step, the footprint stays one slab per live request with
+    zero pages (constant-footprint admission), zero steady-state
+    retraces, and temperature-0 outputs are identical across
+    ``decode_steps`` K=1 and K=4.
+
 Results go to stdout as the usual ``name,us_per_call,derived`` CSV and
 to BENCH_serve.json at the repo root (CI refreshes it via ``--smoke``);
 ``scenario_wall_s`` in the JSON records each scenario's harness wall
@@ -79,7 +89,9 @@ from repro.models import zoo
 from repro.obs import TraceRecorder, validate_chrome_trace
 from repro.roofline.analysis import decode_kv_bytes
 from repro.serve import ContinuousEngine, DisaggEngine, ServeEngine
-from repro.serve.paged_kv import page_handoff_bytes, paged_kv_bytes_per_step
+from repro.serve.paged_kv import (page_handoff_bytes,
+                                  paged_kv_bytes_per_step,
+                                  state_slab_bytes)
 from .common import emit
 
 OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
@@ -430,6 +442,70 @@ def _serve_decode_loop(cfg, params, page_size, max_batch, max_len,
     )
 
 
+def _serve_recurrent(cfg, params, max_batch, max_len, gen, k_steps):
+    """A full-batch RWKV cohort decoded with ``decode_steps=k_steps``
+    over the state-slab plane: zero KV pages ever, one posit8 slab per
+    request, rewritten in place inside the fused loop.
+
+    Asserted per engine step: the pool holds exactly one slab per live
+    request and zero pages (constant-footprint admission), and the
+    ``engine/state_bytes_per_step_model`` gauge equals both the pool's
+    ``modeled_bytes_per_step`` and the closed form
+    ``2 * state_slab_bytes * live`` (one slab read + one rewrite per
+    request, independent of position -- the per-kind bytes/step
+    model)."""
+    eng = ContinuousEngine(cfg, params, n_pages=2, page_size=16,
+                           max_batch=max_batch, max_len=max_len,
+                           decode_steps=k_steps)
+    sb = state_slab_bytes(cfg)
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab, (4,)).astype(np.int32)
+               for _ in range(max_batch)]
+    warm = eng.submit(prompts[0], 2)       # warm prefill + decode jits
+    eng.run()
+    eng.scheduler.finished.pop(warm)
+    eng.reset_counters()
+    eng.transfer_guard = True
+    traces0 = dict(eng.trace_counts)
+
+    rids = [eng.submit(p, gen) for p in prompts]
+    t0 = time.perf_counter()
+    while eng.scheduler.has_work:
+        eng.step()
+        live = len(eng.scheduler.running)
+        assert eng.pool.used_slabs == live, (eng.pool.used_slabs, live)
+        assert eng.pool.used_pages == 0, eng.pool.used_pages
+        served = list(eng.last_positions)
+        gauge = eng.metrics.value("engine/state_bytes_per_step_model")
+        assert gauge == eng.pool.modeled_bytes_per_step(served), gauge
+        assert gauge == 2.0 * sb * len(served), (gauge, sb, len(served))
+    dt = time.perf_counter() - t0
+    retraces = {name: eng.trace_counts[name] - traces0[name]
+                for name in traces0}
+    assert not any(retraces.values()), \
+        f"recurrent steady-state recompiles at K={k_steps}: {retraces}"
+    # the footprint never grew past admission: one slab per request,
+    # nothing preempted to make room (admission gates on free slabs)
+    assert eng.pool.slab_alloc_peak == max_batch, eng.pool.slab_alloc_peak
+    assert eng.pool.used_slabs == 0 and eng.pool.alloc_peak == 0
+    assert eng.scheduler.preemption_count == 0
+    want = (gen - 1) // k_steps
+    assert eng.decode_dispatches == want, (k_steps, eng.decode_dispatches)
+    assert eng.logits_host_bytes == 0
+    assert eng.token_host_bytes == want * max_batch * k_steps * 4
+    toks = sum(len(eng.scheduler.finished[r].generated) for r in rids)
+    outs = [np.asarray(eng.scheduler.finished[r].generated) for r in rids]
+    return outs, dict(
+        decode_steps=k_steps,
+        tokens=toks, wall_s=dt, tokens_per_s=toks / dt,
+        decode_dispatches=eng.decode_dispatches,
+        state_bytes_per_step_model=2.0 * sb * max_batch,
+        slab_alloc_peak=eng.pool.slab_alloc_peak,
+        kv_pages_allocated=eng.pool.alloc_peak,
+        steady_state_retraces=sum(retraces.values()),
+    )
+
+
 def _serve_static(cfg, params, trace, max_len):
     """The static plan: wait for every arrival, left-pad one batch,
     decode until the longest request's budget."""
@@ -742,6 +818,32 @@ def run(smoke: bool = False) -> None:
         (gen - 1) * max_batch * cfg.vocab * 4
     results["decode_loop"] = dl_results
     lap("decode_loop")
+
+    # --- paged STATE: an RWKV cohort served off the slab plane (zero
+    # KV pages; constant per-request footprint; per-kind bytes model)
+    r_cfg = get_config("rwkv6-1.6b").reduced()
+    r_params = zoo.init_model(jax.random.PRNGKey(1), r_cfg)
+    r_batch = 4
+    rec_results = {"state_slab_bytes": state_slab_bytes(r_cfg)}
+    rec_base = None
+    for k_steps in (1, 4):
+        outs, stats = _serve_recurrent(r_cfg, r_params, r_batch, max_len,
+                                       gen, k_steps)
+        if rec_base is None:
+            rec_base = outs
+        for a, b_ in zip(rec_base, outs):
+            assert np.array_equal(a, b_), \
+                f"recurrent decode_steps={k_steps} changed temp-0 output"
+        rec_results[f"K{k_steps}"] = stats
+        emit(f"serve/recurrent_K{k_steps}",
+             1e6 / max(stats["tokens_per_s"], 1e-9),
+             f"tokens_per_s={stats['tokens_per_s']:.1f};"
+             f"dispatches={stats['decode_dispatches']};"
+             f"state_bytes_per_step="
+             f"{stats['state_bytes_per_step_model']:.0f};"
+             f"slab_peak={stats['slab_alloc_peak']};kv_pages=0")
+    results["recurrent"] = rec_results
+    lap("recurrent")
 
     # --- slot waste: reserved slots vs live tokens
     reserved = bsz * max_len

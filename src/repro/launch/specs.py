@@ -49,19 +49,26 @@ def cache_specs(cfg: ModelConfig, b: int, max_len: int,
 def paged_cache_specs(cfg: ModelConfig, b: int, max_len: int,
                       pool_frac: float = 0.25, kv_group=None,
                       page_size=None) -> Dict[str, Any]:
-    """Abstract paged decode cache: pool pages + page table + positions.
+    """Abstract paged decode cache: pool leaves + routing tables.
 
-    The pool holds ``pool_frac`` of the worst-case ``b * max_len`` token
-    capacity (continuous batching's bet: live tokens << max_len); the
-    page table still spans the full ``max_len`` per request.  Pool
-    leaves carry the leading layer-scan axis exactly as the engine
-    builds them; ``page_table (B, NP)`` / ``positions (B,)`` sit once
-    at the top level (uploaded once, broadcast inside the layer scan --
-    never tiled L x), so ``build_serve_step`` lowers unchanged -- the
-    paged dispatch is cache-structure-driven."""
+    The page kinds come from the config's layer mix
+    (``PagedKVPool.page_kinds`` -- the capability check; unknown
+    families are rejected with the supported list).  Attention-bearing
+    families get the KV pool pages plus ``page_table (B, NP)``; the
+    pool holds ``pool_frac`` of the worst-case ``b * max_len`` token
+    capacity (continuous batching's bet: live tokens << max_len) while
+    the page table still spans the full ``max_len`` per request.
+    Recurrent families get the quantized state-slab plane (``b`` slabs
+    -- the footprint is per-request constant, one slab each) plus
+    ``slab_table (B,)``; hybrids carry both.  Pool leaves ride exactly
+    as the engine builds them; the tables and ``positions (B,)`` sit
+    once at the top level (uploaded once, broadcast inside the layer
+    scan -- never tiled L x), so the KV-kind specs lower through
+    ``build_serve_step`` unchanged and the state-kind specs mirror the
+    ``ContinuousEngine`` decode-loop carry."""
     from ..kernels.flash_decode import default_kv_block
     from ..serve.paged_kv import PagedKVPool
-    PagedKVPool.validate_family(cfg)
+    kinds = PagedKVPool.page_kinds(cfg)
     psize = page_size or default_kv_block(max_len)
     if max_len % psize:
         raise ValueError(
@@ -70,8 +77,13 @@ def paged_cache_specs(cfg: ModelConfig, b: int, max_len: int,
             f"tokens")
     npp = max_len // psize
     n_pages = max(int(pool_frac * b * npp), npp)
-    specs = PagedKVPool.device_specs(cfg, n_pages, psize, kv_group)
-    specs["page_table"] = _sds((b, npp), jnp.int32)
+    specs = PagedKVPool.device_specs(
+        cfg, n_pages, psize, kv_group,
+        n_slabs=b if "state" in kinds else 0)
+    if "kv" in kinds:
+        specs["page_table"] = _sds((b, npp), jnp.int32)
+    if "state" in kinds:
+        specs["slab_table"] = _sds((b,), jnp.int32)
     specs["positions"] = _sds((b,), jnp.int32)
     return specs
 
@@ -99,18 +111,21 @@ def handoff_specs(cfg: ModelConfig, n_pages: int,
     """Abstract page-handoff payload of disaggregated serving
     (``serve.disagg.PageHandoffChannel``): the ``n_pages`` exported
     pages of ONE completed prefill, in pool wire format -- posit8 codes
-    ``(L, n, page, Kh, Dh)`` uint8 + po2 group scales
-    ``(L, n, page, Kh, Gs)`` bf16 (``PagedKVPool.export_pages``).  The
+    ``(La, n, page, Kh, Dh)`` uint8 + po2 group scales
+    ``(La, n, page, Kh, Gs)`` bf16 (``PagedKVPool.export_pages``),
+    where ``La`` counts only the ATTENTION layers (hybrids page KV for
+    those alone; recurrent layers ride the state slab, not pages).  The
     summed ``.nbytes`` of these specs is exactly
     ``n_pages * paged_kv.page_handoff_bytes(cfg, page_size, kv_group)``
-    for attention-only families -- what the disagg bench asserts its
-    measured channel traffic against."""
+    -- what the disagg bench asserts its measured channel traffic
+    against.  Stateful families add ``state_slab_bytes`` per handoff on
+    top (the nested payload's ``"state"`` part, not modeled here)."""
     from ..models.attention import kv_scale_cols
     from ..serve.paged_kv import PagedKVPool
     PagedKVPool.validate_family(cfg)
     hd = cfg.resolved_head_dim
     gs = kv_scale_cols(hd, kv_group)
-    code = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, hd)
+    code = (cfg.n_attn_layers, n_pages, page_size, cfg.n_kv_heads, hd)
     scale = code[:-1] + (gs,)
     return {"k_codes": _sds(code, jnp.uint8),
             "v_codes": _sds(code, jnp.uint8),

@@ -28,6 +28,7 @@ __all__ = [
     "mamba_init", "mamba_apply", "mamba_decode", "mamba_state_init",
     "rwkv_init", "rwkv_time_mix", "rwkv_channel_mix", "rwkv_state_init",
     "rwkv_decode",
+    "quantize_state", "dequantize_state", "requantize_state",
 ]
 
 
@@ -301,3 +302,88 @@ def rwkv_channel_mix(p, x, cfg, state):
 def rwkv_decode(p, x, cfg, state):
     """Single-token step for both mixes chained by the block in zoo."""
     return rwkv_time_mix(p, x, cfg, state)
+
+
+# ---------------------------------------------------------------------------
+# Quantized state (paged serving): posit8 codes + group scales per leaf
+# ---------------------------------------------------------------------------
+# The serving plane keeps recurrent state resident as posit8 codes plus
+# bf16 group scales -- the same packing the paged KV pool uses -- so a
+# request's state slab costs ~1 byte/element instead of 4.  Each f32
+# leaf ``x`` becomes the pair ``x_codes`` / ``x_scale`` at the same
+# dict level, quantized along the leaf's LAST dim (the contraction dim
+# for both the Mamba h-state and the RWKV wkv matrix state).
+
+def _state_items(node):
+    """Stable iteration order so quantize/dequantize round-trip pytrees
+    with identical structure regardless of insertion order."""
+    return sorted(node.items())
+
+
+def quantize_state(state, group=None):
+    """Posit8-quantize every array leaf of a recurrent-state pytree.
+
+    ``group`` follows :func:`attention.quantize_kv` semantics per leaf:
+    leaves whose last dim the group does not divide degrade to one
+    scale per row (never an error), so one pool-level knob applies
+    uniformly across heterogeneous leaves."""
+    from . import attention as A
+
+    def rec(node):
+        out = {}
+        for key, val in _state_items(node):
+            if isinstance(val, dict):
+                out[key] = rec(val)
+            else:
+                codes, scale = A.quantize_kv(val, group)
+                out[key + "_codes"] = codes
+                out[key + "_scale"] = scale
+        return out
+    return rec(state)
+
+
+def dequantize_state(state_q, dtype=jnp.float32):
+    """Inverse of :func:`quantize_state` (decode to f32 by default --
+    the recurrences accumulate in f32)."""
+    from . import attention as A
+
+    def rec(node):
+        out = {}
+        for key, val in _state_items(node):
+            if isinstance(val, dict):
+                out[key] = rec(val)
+            elif key.endswith("_codes"):
+                out[key[:-len("_codes")]] = A.dequantize_kv(
+                    val, node[key[:-len("_codes")] + "_scale"], dtype)
+        return out
+    return rec(state_q)
+
+
+def _leaf_group(codes, scale):
+    """Recover the quantization group one leaf was packed with."""
+    gs = int(scale.shape[-1])
+    return None if gs == 1 else int(codes.shape[-1]) // gs
+
+
+def requantize_state(state, state_q):
+    """Quantize ``state`` back into the exact layout of ``state_q``.
+
+    Group sizes are recovered PER LEAF from the old scales: a pool-level
+    group that divides one leaf's last dim but not another's must
+    degrade the same way on every round-trip, or decode-step state
+    writes would change shape under ``lax.scan``."""
+    from . import attention as A
+
+    def rec(node, node_q):
+        out = {}
+        for key, val in _state_items(node):
+            if isinstance(val, dict):
+                out[key] = rec(val, node_q[key])
+            else:
+                grp = _leaf_group(node_q[key + "_codes"],
+                                  node_q[key + "_scale"])
+                codes, scale = A.quantize_kv(val, grp)
+                out[key + "_codes"] = codes
+                out[key + "_scale"] = scale
+        return out
+    return rec(state, state_q)

@@ -28,7 +28,8 @@ from . import layers as L
 from . import moe as M
 from . import ssm as S
 
-__all__ = ["lm_init", "lm_apply", "lm_decode", "init_cache", "lm_loss"]
+__all__ = ["lm_init", "lm_apply", "lm_decode", "init_cache",
+           "init_state_cache", "lm_loss"]
 
 
 # ---------------------------------------------------------------------------
@@ -81,11 +82,24 @@ def _block_apply(p, x, cfg, mixer: str, use_moe: bool, positions,
                 cache = {"k": kv[0].astype(jnp.bfloat16),
                          "v": kv[1].astype(jnp.bfloat16)}
     elif mixer == "mamba":
+        # paged-state serving keeps the state as posit8 codes + scales:
+        # round-trip through f32 for the step (the pool layout must
+        # survive bitwise, so requantize against the incoming cache)
+        state_q = cache if (cache is not None and "h_codes" in cache) \
+            else None
+        if state_q is not None:
+            cache = S.dequantize_state(state_q)
         if mode == "decode":
             h, cache = S.mamba_decode(p["mamba"], h, cfg, cache)
         else:
             h, cache = S.mamba_apply(p["mamba"], h, cfg, cache)
+        if state_q is not None:
+            cache = S.requantize_state(cache, state_q)
     elif mixer == "rwkv":
+        state_q = cache if (cache is not None and "tm_state_codes" in cache) \
+            else None
+        if state_q is not None:
+            cache = S.dequantize_state(state_q)
         h, cache = (S.rwkv_time_mix(p["rwkv"], h, cfg, cache)
                     if cache is not None else
                     S.rwkv_time_mix(p["rwkv"], h, cfg,
@@ -94,6 +108,8 @@ def _block_apply(p, x, cfg, mixer: str, use_moe: bool, positions,
     h2 = L.rmsnorm(p["ln2"], x)
     if mixer == "rwkv":
         h2, cache = S.rwkv_channel_mix(p["rwkv"], h2, cfg, cache)
+        if state_q is not None:
+            cache = S.requantize_state(cache, state_q)
     elif use_moe:
         h2, aux = M.moe_apply(p["moe"], h2, cfg)
     else:
@@ -126,7 +142,7 @@ def _group_init(key, cfg):
 
 
 def _group_apply(p, x, cfg, positions, cache=None, pos=None, mode="train",
-                 pad=None, kv_mask=None):
+                 pad=None, kv_mask=None, paged_meta=None):
     layout = _group_layout(cfg)
     aux = jnp.zeros((), jnp.float32)
     # prefill materializes the group cache even from cache=None (it used
@@ -134,8 +150,15 @@ def _group_apply(p, x, cfg, positions, cache=None, pos=None, mode="train",
     new_cache = {} if (cache is not None or mode == "prefill") else None
     for i, (mixer, use_moe) in enumerate(layout):
         sub = cache.get(f"b{i}") if cache is not None else None
+        # hybrid paged serving: the top-level page_table/positions meta
+        # addresses only the ATTENTION sub-layer's pool leaves; the
+        # mamba sub-layers carry fixed-size state slabs instead
+        if paged_meta is not None and mixer == "attn" and sub is not None:
+            sub = dict(sub, **paged_meta)
         x, c, a = _block_apply(p[f"b{i}"], x, cfg, mixer, use_moe,
                                positions, sub, pos, mode, pad, kv_mask)
+        if paged_meta is not None and mixer == "attn" and c is not None:
+            c = {k: v for k, v in c.items() if k not in paged_meta}
         if new_cache is not None:
             new_cache[f"b{i}"] = c
         aux = aux + a
@@ -284,7 +307,7 @@ def lm_apply(p, batch, cfg, mode: str = "train", cache=None, policy=None):
             gp, gc = xs
             gp = quantize_tree(gp, policy, "groups")
             x, c, a = _group_apply(gp, x, cfg, positions, gc, mode=mode,
-                                   kv_mask=kv_mask)
+                                   kv_mask=kv_mask, paged_meta=paged_meta)
             return (x, aux + a), c
         body = _maybe_remat(body, cfg)
         (x, aux_total), new_cache = _scan_or_unroll(
@@ -346,7 +369,8 @@ def lm_decode(p, tokens, cfg, cache, pos, pad=None):
         def body(x, xs):
             gp, gc = xs
             x, c, _ = _group_apply(gp, x, cfg, None, gc, pos,
-                                   mode="decode", pad=pad)
+                                   mode="decode", pad=pad,
+                                   paged_meta=paged_meta)
             return x, c
         x, new_cache = _scan_or_unroll(body, x, (p["groups"], cache), cfg)
     else:
@@ -407,6 +431,29 @@ def init_cache(cfg, batch: int, max_len: int, quantized_kv: bool = False,
     def one(_):
         return _one_kv(cfg, batch, max_len, quantized_kv, kv_group)
     return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+
+def init_state_cache(cfg, batch: int):
+    """Recurrent-state-only slice of :func:`init_cache`.
+
+    The fixed-size per-request leaves a serving pool turns into state
+    SLABS: the rwkv per-layer state stack, or the mamba sub-block
+    states of a hybrid group (the attention sub-block pages through the
+    KV pool instead).  Returns ``None`` for pure-attention families --
+    they have no resident state."""
+    mixer = _family_mixer(cfg)
+    if mixer == "rwkv":
+        return jax.vmap(lambda _: S.rwkv_state_init(cfg, batch))(
+            jnp.arange(cfg.n_layers))
+    if mixer == "group":
+        layout = _group_layout(cfg)
+        n_groups = cfg.n_layers // cfg.attn_every
+
+        def one(_):
+            return {f"b{i}": S.mamba_state_init(cfg, batch)
+                    for i, (m, _u) in enumerate(layout) if m != "attn"}
+        return jax.vmap(one)(jnp.arange(n_groups))
+    return None
 
 
 def _one_kv(cfg, batch, max_len, quantized, kv_group=None):

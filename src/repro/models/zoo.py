@@ -25,13 +25,14 @@ from . import attention as A
 from . import transformer as T
 
 __all__ = ["init_model", "apply_model", "decode_model", "init_cache",
-           "loss_fn", "quantize_params_fake", "pack_params", "packed_bytes",
-           "quantize_cache"]
+           "init_state_cache", "loss_fn", "quantize_params_fake",
+           "pack_params", "packed_bytes", "quantize_cache"]
 
 init_model = T.lm_init
 apply_model = T.lm_apply
 decode_model = T.lm_decode
 init_cache = T.init_cache
+init_state_cache = T.init_state_cache
 loss_fn = T.lm_loss
 
 
@@ -90,17 +91,22 @@ def pack_params(params, policy: PrecisionPolicy):
     return rec(params)
 
 
-def quantize_cache(cache, kv_group: Optional[int] = None):
-    """One-shot posit8 quantization of a prefill KV cache.
+def quantize_cache(cache, kv_group: Optional[int] = None,
+                   quantize_state: bool = False):
+    """One-shot posit8 quantization of a prefill cache.
 
     Walks the cache pytree and replaces every attention {k, v} pair
     (dense / moe: stacked (L, B, S, Kh, Dh); hybrid: per-group sub-dicts)
     with {k_codes, v_codes, k_scale, v_scale} in the unified
     ``quant.group_scales`` Dh-grouped layout.  SSM / RWKV / mamba states
-    (no ``k``/``v`` keys) pass through untouched, so the engine can apply
-    this uniformly across families.  Decode then continues writing the
-    quantized layout incrementally (``attention._cache_write``).
+    (no ``k``/``v`` keys) pass through untouched by default, so the
+    engine can apply this uniformly across families; with
+    ``quantize_state`` they quantize too (``ssm.quantize_state`` --
+    the paged-STATE serving layout, where decode round-trips the state
+    through posit8 every step).  Decode then continues writing the
+    quantized KV layout incrementally (``attention._cache_write``).
     """
+    from . import ssm as S
 
     def rec(node):
         if isinstance(node, dict):
@@ -109,6 +115,8 @@ def quantize_cache(cache, kv_group: Optional[int] = None):
                 vc, vs = A.quantize_kv(node["v"], kv_group)
                 return {"k_codes": kc, "k_scale": ks,
                         "v_codes": vc, "v_scale": vs}
+            if quantize_state and ("h" in node or "tm_state" in node):
+                return S.quantize_state(node, kv_group)
             return {k: rec(v) for k, v in node.items()}
         return node
 

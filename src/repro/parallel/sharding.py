@@ -320,14 +320,17 @@ def paged_cache_pspec(mesh: Mesh, path: str, shape: Sequence[int]) -> P:
     gather may touch any physical page, so splitting the page dim turns
     every block read into an all-gather (XLA's 'involuntary full
     rematerialization').  'model' rides the innermost head/feature dim
-    that divides, like the contiguous cache.  ``page_table``/``positions``
-    shard their request (batch) dim on the data axes -- requests, not
-    pages, are the data-parallel unit of continuous batching."""
+    that divides, like the contiguous cache.  State-slab leaves follow
+    the same rule: the slab dim (a page dim in all but name -- any
+    request's slab gather may touch any slab) replicates.
+    ``page_table``/``slab_table``/``positions`` shard their request
+    (batch) dim on the data axes -- requests, not pages, are the
+    data-parallel unit of continuous batching."""
     key = path.rsplit("/", 1)[-1]
     axes = _mesh_axes(mesh)
     nd = len(shape)
     specs: list = [None] * nd
-    if key in ("page_table", "positions"):
+    if key in ("page_table", "slab_table", "positions"):
         # (B, NP) / (B,): one top-level copy, batch leads (the layer
         # scan broadcasts it; there is no layer axis to skip anymore)
         got = _fit_axes(shape, axes, 0,
@@ -347,7 +350,8 @@ def cache_sharding_tree(mesh: Mesh, cache, batch: int):
     from ..core.policy import flatten_with_paths
 
     flat = flatten_with_paths(cache)
-    paged = any(p.rsplit("/", 1)[-1] == "page_table" for p, _ in flat)
+    paged = any(p.rsplit("/", 1)[-1] in ("page_table", "slab_table")
+                for p, _ in flat)
     if paged:
         specs = {p: NamedSharding(mesh, paged_cache_pspec(mesh, p, v.shape))
                  for p, v in flat}

@@ -28,6 +28,25 @@ XLA: via a ``fori_loop`` gather) and reads only the live prefix
 ceil((pos+1)/page), so per-step KV bytes track LIVE pages, not
 ``max_len``.
 
+Paged STATE (recurrent families)
+--------------------------------
+Attention layers are the only layers whose cache GROWS; SSM/RWKV
+layers carry a fixed-size recurrent state.  The pool therefore serves
+two page KINDS (``PagedKVPool.page_kinds``): growable attention-KV
+pages as above, and fixed-size per-request STATE SLABS -- the model's
+recurrent-state pytree, posit8 codes + po2 group scales per leaf,
+stacked ``n_slabs + 1`` wide on the batch axis with slab 0 as the
+parking slab.  ``ssm`` requests hold one slab and zero pages; hybrids
+hold one slab plus pages for their attention layers; dense/moe pools
+carry no slab plane at all.  A request's state footprint is CONSTANT:
+admission gates on one free slab, and ``ensure_capacity`` never grows
+it -- decode rewrites the slab in place (gather by ``slab_table``,
+dequantize, step, requantize, scatter) inside the same fused loop.
+Preemption of a RUNNING stateful request snapshots its slab
+(``export_state``) instead of discarding work: resume imports it
+bitwise and continues exactly, no re-prefill.  See ``docs/serving.md``
+("Paged state") for the kind taxonomy and the parity ladder.
+
 Scheduler contract
 ------------------
 ``Scheduler`` (serve/scheduler.py) owns request state + page accounting:
@@ -106,6 +125,6 @@ from .engine import (ServeEngine, ContinuousEngine,  # noqa: F401
                      build_prefill_step, build_prefill_chunk_step,
                      build_serve_step)
 from .paged_kv import (PagedKVPool, page_handoff_bytes,  # noqa: F401
-                       paged_kv_bytes_per_step)
+                       paged_kv_bytes_per_step, state_slab_bytes)
 from .scheduler import (DecodeRunner, PrefixIndex,  # noqa: F401
                         Request, Scheduler)

@@ -23,7 +23,11 @@ This module splits the engine along that roofline boundary:
                       payload is the gathered page leaves -- ~4x
                       smaller than a bf16 KV handoff
                       (``paged_kv.page_handoff_bytes`` is the exact
-                      per-page model) -- optionally ``device_put`` to
+                      per-page model) -- plus, for recurrent families,
+                      the request's quantized state slab
+                      (``export_state``), which crosses bitwise and
+                      makes the handoff exact for SSM/RWKV/hybrid
+                      requests too -- optionally ``device_put`` to
                       the decode worker's device slice so the copy
                       overlaps whatever both workers are computing.
   ``DecodeWorker``    owns its own pool + the K-step device-resident
@@ -85,7 +89,7 @@ from .engine import (_build_decode_loop, _ChunkPrefillMixin,
                      _apply_decode_tokens, _decode_horizon,
                      _device_only, _dispatch_decode_loop, _PageTableCache,
                      _trace_counted, build_prefill_chunk_step)
-from .paged_kv import _POOL_KEYS, PagedKVPool
+from .paged_kv import PagedKVPool
 from .scheduler import RUNNING, DecodeRunner, Request, Scheduler
 
 __all__ = ["PageHandoffChannel", "PrefillWorker", "DecodeWorker",
@@ -101,7 +105,12 @@ class PageHandoffChannel:
     Each entry is ``(request, payload)`` where the payload is the
     request's gathered pool leaves (posit8 codes + bf16 po2 scales,
     ``PagedKVPool.export_pages``) -- the handoff moves the COMPRESSED
-    cache, never a bf16 one.  ``depth`` bounds the prefills in flight
+    cache, never a bf16 one.  Attention-only families push the flat
+    page-leaf dict; stateful families push the nested
+    ``{"state": export_state(slab)[, "kv": export_pages(pages)]}``
+    form, so a recurrent request's whole footprint -- its one slab,
+    plus KV pages for hybrids -- crosses in one entry and imports
+    bitwise.  ``depth`` bounds the prefills in flight
     (default 2: the decode side imports one buffer while the prefill
     side fills the next); a full channel parks further completions on
     the prefill side, holding their pages and batch slots -- the
@@ -142,10 +151,11 @@ class PageHandoffChannel:
         rid = getattr(req, "rid", None)
         with self._trace.span("channel_push", rid=rid):
             if self.device is not None:
-                payload = {key: jax.device_put(val, self.device)
-                           for key, val in payload.items()}
-        pages = int(payload["k_codes"].shape[1])
-        nbytes = sum(int(val.nbytes) for val in payload.values())
+                payload = jax.tree.map(
+                    lambda val: jax.device_put(val, self.device), payload)
+        kv = payload.get("kv") if "state" in payload else payload
+        pages = int(kv["k_codes"].shape[1]) if kv is not None else 0
+        nbytes = sum(int(leaf.nbytes) for leaf in jax.tree.leaves(payload))
         self.handoffs += 1
         self.handoff_pages += pages
         self.handoff_bytes += nbytes
@@ -192,11 +202,14 @@ class PrefillWorker(_ChunkPrefillMixin):
         self.prefill_context = prefill_context
         self.metrics = registry if registry is not None else MetricRegistry()
         self._trace = trace if trace is not None else NULL_RECORDER
-        pool = PagedKVPool(cfg, n_pages, page_size, kv_group)
+        n_slabs = max_batch \
+            if "state" in PagedKVPool.page_kinds(cfg) else 0
+        pool = PagedKVPool(cfg, n_pages, page_size, kv_group,
+                           n_slabs=n_slabs)
         if device is not None:
-            pool.set_device_state(
-                {key: jax.device_put(getattr(pool, key), device)
-                 for key in _POOL_KEYS})
+            pool.set_device_state(jax.tree.map(
+                lambda leaf: jax.device_put(leaf, device),
+                pool.device_state()))
         pool.register_gauges(self.metrics, "prefill/pool")
         self.scheduler = Scheduler(pool, max_batch,
                                    max_pages_per_req=max_pages_per_req,
@@ -207,10 +220,16 @@ class PrefillWorker(_ChunkPrefillMixin):
         self._chunk_step = jax.jit(_trace_counted(
             build_prefill_chunk_step(cfg, kv_group),
             self.trace_counts, "prefill_chunk"))
-        self._chunk_step_paged = jax.jit(_trace_counted(
-            build_prefill_chunk_step(cfg, kv_group, paged=True),
-            self.trace_counts, "prefill_chunk_paged"),
-            donate_argnums=(2,))
+        # the paged context re-reads the prefix through the page table,
+        # which stateful families cannot do (their context is the
+        # recurrent state) -- DisaggEngine rejects that combination, so
+        # only build the paged step when it will actually be called
+        self._chunk_step_paged = None
+        if prefill_context == "pages":
+            self._chunk_step_paged = jax.jit(_trace_counted(
+                build_prefill_chunk_step(cfg, kv_group, paged=True),
+                self.trace_counts, "prefill_chunk_paged"),
+                donate_argnums=(2,))
         self._prefill_ctx: Dict[int, Any] = {}
         self._ready: List[Request] = []       # completed, awaiting channel
         bind_counters(self, self.metrics, "prefill")
@@ -227,10 +246,13 @@ class PrefillWorker(_ChunkPrefillMixin):
 
     def _drain_ready(self, channel: PageHandoffChannel) -> int:
         """Export parked completions into the channel, oldest first,
-        until it fills.  Export before release: ``export_pages`` is a
-        pure functional gather, so the payload stays valid after the
-        source pages return to the free list (prefix-shared pages just
-        decref back to the index)."""
+        until it fills.  Export before release: ``export_pages`` /
+        ``export_state`` are pure functional gathers, so the payload
+        stays valid after the source pages (and slab) return to the
+        free lists (prefix-shared pages just decref back to the
+        index).  Stateful families export the nested form the channel
+        and decode worker understand: the request's slab, plus its KV
+        pages for hybrids."""
         sent = 0
         while self._ready:
             req = self._ready[0]
@@ -241,7 +263,12 @@ class PrefillWorker(_ChunkPrefillMixin):
                 continue
             if channel.full:
                 break
-            payload = self.pool.export_pages(req.pages)
+            if self.pool.has_state:
+                payload: Dict = {"state": self.pool.export_state(req.slab)}
+                if req.pages:
+                    payload["kv"] = self.pool.export_pages(req.pages)
+            else:
+                payload = self.pool.export_pages(req.pages)
             self.scheduler.release(req)
             channel.push(req, payload)
             self._ready.pop(0)
@@ -254,7 +281,12 @@ class PrefillWorker(_ChunkPrefillMixin):
         budget, park/retire this step's completions, drain again.
         Returns handoffs pushed."""
         sent = self._drain_ready(channel)
-        self.scheduler.admit()
+        for req in self.scheduler.admit():
+            if req.status == RUNNING:
+                # a resumed preemption/bounce snapshot: its state (+ KV)
+                # just imported bitwise, nothing to prefill -- park it
+                # for re-handoff straight away
+                self._ready.append(req)
         for req in self._prefill_phase():
             if req.done:
                 # budget of 1 / instant EOS: never needs a decode side
@@ -294,11 +326,14 @@ class DecodeWorker:
         self.metrics = registry if registry is not None else MetricRegistry()
         self._trace = trace if trace is not None else NULL_RECORDER
         self._annotation = annotation
-        pool = PagedKVPool(cfg, n_pages, page_size, kv_group)
+        n_slabs = max_batch \
+            if "state" in PagedKVPool.page_kinds(cfg) else 0
+        pool = PagedKVPool(cfg, n_pages, page_size, kv_group,
+                           n_slabs=n_slabs)
         if device is not None:
-            pool.set_device_state(
-                {key: jax.device_put(getattr(pool, key), device)
-                 for key in _POOL_KEYS})
+            pool.set_device_state(jax.tree.map(
+                lambda leaf: jax.device_put(leaf, device),
+                pool.device_state()))
         pool.register_gauges(self.metrics, "decode/pool")
         self.runner = DecodeRunner(pool, max_batch,
                                    registry=self.metrics, trace=self._trace,
@@ -335,12 +370,25 @@ class DecodeWorker:
         took = 0
         while len(channel) and self.runner.has_slot:
             req, payload = channel.peek()
-            pages = self.pool.alloc(int(payload["k_codes"].shape[1]))
+            nested = "state" in payload
+            kv = payload.get("kv") if nested else payload
+            n = int(kv["k_codes"].shape[1]) if kv is not None else 0
+            pages = self.pool.alloc(n) if n else []
             if pages is None:
                 break                     # decode pool dry: retry next step
+            slab = None
+            if nested:
+                slab = self.pool.alloc_slab()
+                if slab is None:          # state plane dry: roll back
+                    if pages:
+                        self.pool.free(pages)
+                    break
             with self._trace.span("channel_pull", rid=req.rid):
-                self.pool.import_pages(payload, pages)
-            self.runner.accept(req, pages)
+                if kv is not None:
+                    self.pool.import_pages(kv, pages)
+                if nested:
+                    self.pool.import_state(payload["state"], slab)
+            self.runner.accept(req, pages, slab)
             channel.pop()
             took += 1
         return took
@@ -453,6 +501,15 @@ class DisaggEngine:
             self.prefill_context = "pages" if self.prefix_cache else "carry"
         if self.prefill_context not in ("carry", "pages"):
             raise ValueError(self.prefill_context)
+        if "state" in PagedKVPool.page_kinds(self.cfg) \
+                and self.prefill_context == "pages":
+            raise ValueError(
+                f"family {self.cfg.family!r} carries recurrent state, "
+                f"which never lands in pages and cannot be re-read "
+                f"through a page table: serve it with "
+                f"prefill_context='carry' (which also rules out "
+                f"prefix_cache -- a cached prefix cannot reproduce the "
+                f"state of tokens this request never forwarded)")
         if self.prefix_cache and self.prefill_context == "carry":
             raise ValueError(
                 "prefix_cache needs prefill_context='pages' (shared "

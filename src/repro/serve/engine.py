@@ -29,6 +29,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.policy import PrecisionPolicy
+from ..models import ssm
 from ..models import zoo
 from ..obs import MetricRegistry, NULL_RECORDER, bind_counters
 from .scheduler import PREFILLING, RUNNING
@@ -39,7 +40,8 @@ __all__ = ["build_prefill_step", "build_prefill_chunk_step",
 
 def build_prefill_step(cfg: ModelConfig, last_logit_only: bool = False,
                        quantized_kv: bool = False,
-                       kv_group: Optional[int] = None):
+                       kv_group: Optional[int] = None,
+                       quantized_state: bool = False):
     """(params, batch) -> (logits, cache): full-sequence forward that also
     materializes the KV cache / SSM state.
 
@@ -51,7 +53,10 @@ def build_prefill_step(cfg: ModelConfig, last_logit_only: bool = False,
     ``quantized_kv``: quantize the returned KV cache to posit8 codes +
     ``kv_group``-grouped scales inside the same jit (XLA fuses the
     quantize into the cache write, so the bf16 cache is a transient,
-    not an output)."""
+    not an output).  ``quantized_state`` extends the same one-shot
+    quantization to recurrent-state leaves (``ssm.quantize_state``);
+    decode then round-trips the state through posit8 every step --
+    the contiguous twin of the paged pool's state slabs."""
 
     def prefill(params, batch):
         logits, cache, _ = zoo.apply_model(params, batch, cfg, mode="prefill",
@@ -59,7 +64,8 @@ def build_prefill_step(cfg: ModelConfig, last_logit_only: bool = False,
         if last_logit_only:
             logits = logits[:, -1:]
         if quantized_kv:
-            cache = zoo.quantize_cache(cache, kv_group)
+            cache = zoo.quantize_cache(cache, kv_group,
+                                       quantize_state=quantized_state)
         return logits, cache
 
     return prefill
@@ -86,11 +92,18 @@ def build_prefill_chunk_step(cfg: ModelConfig,
     the chunk is quantized and scattered in-jit, attention reads prefix
     + chunk back through the page table, and (logits, updated_ctx) is
     returned -- zero extra residency, posit8-accurate context.
+    Attention-only: recurrent state never lands in pages, so it cannot
+    be re-read through a page table -- stateful families chunk on the
+    carry path, where ``ctx`` is the family's ``zoo.init_cache`` pytree
+    (rwkv state stack / hybrid group caches) and the f32 state rides
+    the carry chunk to chunk (sequential recurrences make the chunked
+    state BITWISE the monolithic one).
     """
-    if cfg.family not in ("dense", "moe"):
+    if paged and cfg.family not in ("dense", "moe"):
         raise ValueError(
-            f"chunked prefill needs a pure-attention cache; family "
-            f"{cfg.family!r} carries SSM state")
+            f"prefill_context='pages' re-reads the prefix through the "
+            f"page table, but family {cfg.family!r} carries recurrent "
+            f"state that never lands in pages: chunk on the carry path")
     if cfg.rope_kind != "default":
         raise ValueError("chunked prefill serves 1-D token streams "
                          f"(rope_kind={cfg.rope_kind!r})")
@@ -166,6 +179,10 @@ class ServeEngine:
     # reads only the live prefix of them per step.  The scale grouping
     # follows ``policy.group_size`` (the weight plane's grid).
     quantized_kv: bool = False
+    # posit8 recurrent state too (ssm/hybrid): prefill quantizes the
+    # final state once, decode round-trips it through posit8 every step
+    # -- the static oracle of the paged pool's state slabs
+    quantized_state: bool = False
     policy: Optional[PrecisionPolicy] = None
 
     def __post_init__(self):
@@ -174,7 +191,8 @@ class ServeEngine:
         kv_group = self.policy.group_size if self.policy else None
         self._prefill = jax.jit(build_prefill_step(
             self.cfg, last_logit_only=True,
-            quantized_kv=self.quantized_kv, kv_group=kv_group))
+            quantized_kv=self.quantized_kv, kv_group=kv_group,
+            quantized_state=self.quantized_state))
         self._step = jax.jit(build_serve_step(self.cfg))
         self._step_ragged = jax.jit(build_serve_step(self.cfg, ragged=True))
         # generate() runs on the fused-sampling variants: tokens come
@@ -323,8 +341,9 @@ def _build_decode_loop(cfg: ModelConfig, temperature: float, k_steps: int):
     continuous engine.
 
     (params, tokens (B,1), positions (B,), cache {pool leaves},
-     page_table (B,NP), done (B,) bool, budget (B,), eos (B,),
-     rids (B,), gen_idx (B,), key) -> (sampled (B, K) int32, new cache)
+     page_table (B,NP), slab_table (B,), done (B,) bool, budget (B,),
+     eos (B,), rids (B,), gen_idx (B,), key)
+      -> (sampled (B, K) int32, new cache)
 
     One jitted call runs ``k_steps`` decode+sample iterations in a
     ``lax.scan``: fused sampling (greedy argmax / per-request seeded
@@ -338,25 +357,68 @@ def _build_decode_loop(cfg: ModelConfig, temperature: float, k_steps: int):
     (B, K) token buffer per dispatch; the (B, vocab) logits never leave
     the device.
 
+    Page kinds (``serve/paged_kv.py``): attention layers read/write the
+    paged KV plane through ``page_table``; recurrent layers (ssm /
+    hybrid) gather their quantized state slab by ``slab_table`` row into
+    the step's per-layer cache, run the dequantize -> recur ->
+    requantize round-trip inside the model, and scatter the slab back
+    -- the scan carry holds the WHOLE slab plane, so state stays
+    device-resident across all K iterations.  Done rows re-map to the
+    parking slab (slab 0), the state twin of the parking page: their
+    writes race only each other over a buffer nobody reads.
+
     Categorical sampling draws row r's token i from the per-request
     stream ``fold_in(fold_in(key, rids[r]), gen_idx[r] + i)`` -- a
     function of (seed, request, token index) only, so the sampled
     sequence is invariant to K, batching and scheduling.
     """
-    from .paged_kv import PARKING_PAGE
+    from .paged_kv import PARKING_PAGE, PARKING_SLAB, _POOL_KEYS
+    has_state = cfg.family in ("ssm", "hybrid")
+    has_kv = cfg.family != "ssm"
+    attn_key = f"b{cfg.attn_every // 2}" if cfg.family == "hybrid" else None
 
-    def loop(params, tokens, positions, cache, page_table, done, budget,
-             eos, rids, gen_idx, key):
+    def loop(params, tokens, positions, cache, page_table, slab_table,
+             done, budget, eos, rids, gen_idx, key):
         def body(carry, _):
             tokens, positions, done, budget, gen_idx, cache = carry
-            step_cache = dict(cache)
-            step_cache["page_table"] = jnp.where(
-                done[:, None], PARKING_PAGE, page_table)
-            step_cache["positions"] = jnp.where(done, 0, positions)
+            slab_idx = None
+            state = None
+            if has_state:
+                slab_idx = jnp.where(done, PARKING_SLAB, slab_table)
+                state = jax.tree.map(lambda leaf: leaf[:, slab_idx],
+                                     cache["state"])
+            if not has_kv:
+                step_cache = state
+            else:
+                kv_leaves = {k: cache[k] for k in _POOL_KEYS}
+                if has_state:
+                    # hybrid: the attention sub-block reads the pool
+                    # leaves; every other sub-block its gathered state
+                    step_cache = dict(state)
+                    step_cache[attn_key] = kv_leaves
+                else:
+                    step_cache = kv_leaves
+                step_cache["page_table"] = jnp.where(
+                    done[:, None], PARKING_PAGE, page_table)
+                step_cache["positions"] = jnp.where(done, 0, positions)
             logits, new_cache = zoo.decode_model(
                 params, tokens, cfg, step_cache, jnp.int32(0))
-            new_cache.pop("page_table")
-            new_cache.pop("positions")
+            if has_kv:
+                new_cache.pop("page_table")
+                new_cache.pop("positions")
+            if not has_kv:
+                cache = {"state": jax.tree.map(
+                    lambda buf, new: buf.at[:, slab_idx].set(new),
+                    cache["state"], new_cache)}
+            elif has_state:
+                kv = new_cache.pop(attn_key)
+                new_state = jax.tree.map(
+                    lambda buf, new: buf.at[:, slab_idx].set(new),
+                    cache["state"], new_cache)
+                cache = {k: kv[k] for k in _POOL_KEYS}
+                cache["state"] = new_state
+            else:
+                cache = new_cache
             lg = logits[:, 0].astype(jnp.float32)            # (B, V)
             if temperature > 0:
                 sub = jax.vmap(lambda r, i: jax.random.fold_in(
@@ -371,7 +433,7 @@ def _build_decode_loop(cfg: ModelConfig, temperature: float, k_steps: int):
             positions = jnp.where(done, positions, positions + 1)
             gen_idx = jnp.where(done, gen_idx, gen_idx + 1)
             return ((nxt[:, None], positions, new_done, budget, gen_idx,
-                     new_cache), nxt)
+                     cache), nxt)
         carry0 = (tokens, positions, done, budget, gen_idx, cache)
         (_, _, _, _, _, cache), toks = jax.lax.scan(
             body, carry0, None, length=k_steps)
@@ -395,25 +457,33 @@ class _PageTableCache:
     changed -- an unchanged (epoch, rows) pair means every row is
     bit-identical to the resident copy, so the cached device array is
     reused across dispatches (and across page handoffs on the decode
-    worker, which keys on its runner's epoch the same way)."""
+    worker, which keys on its runner's epoch the same way).  The (B,)
+    slab table rides the same cache entry: a row's state-slab id can
+    only change on the same transitions that bump the epoch."""
 
     def __init__(self):
         self.dev = None
+        self.slab_dev = None
         self.epoch = -1
         self.rows: List[int] = []
 
     def get(self, running, epoch: int, b: int, n_pages_per_req: int):
-        """-> (device table, uploaded?) for the rid-ordered batch."""
+        """-> (page table, slab table, uploaded?) for the rid-ordered
+        batch."""
         rows = [req.rid for req in running]
         if self.dev is None or epoch != self.epoch or rows != self.rows:
             page_table = np.zeros((b, n_pages_per_req), np.int32)
+            slab_table = np.zeros((b,), np.int32)
             for row, req in enumerate(running):
                 page_table[row, :len(req.pages)] = req.pages
+                if req.slab is not None:
+                    slab_table[row] = req.slab
             self.dev = jnp.asarray(page_table)
+            self.slab_dev = jnp.asarray(slab_table)
             self.epoch = epoch
             self.rows = rows
-            return self.dev, True
-        return self.dev, False
+            return self.dev, self.slab_dev, True
+        return self.dev, self.slab_dev, False
 
 
 def _dispatch_decode_loop(loop, params, pool, running, b: int,
@@ -445,10 +515,11 @@ def _dispatch_decode_loop(loop, params, pool, running, b: int,
             eos[row] = req.eos_id
         rids[row] = req.rid
         gen_idx[row] = len(req.generated)
-    dev_table, uploaded = pt_cache.get(running, epoch, b, n_pages_per_req)
+    dev_table, slab_table, uploaded = pt_cache.get(
+        running, epoch, b, n_pages_per_req)
     toks_dev, new_cache = loop(
         params, jnp.asarray(tokens), jnp.asarray(positions),
-        pool.device_state(), dev_table, jnp.asarray(done),
+        pool.device_state(), dev_table, slab_table, jnp.asarray(done),
         jnp.asarray(budget), jnp.asarray(eos), jnp.asarray(rids),
         jnp.asarray(gen_idx), base_key)
     pool.set_device_state(new_cache)
@@ -487,12 +558,47 @@ class _ChunkPrefillMixin:
     both prefill paths run the exact same chunk code."""
 
     def _empty_ctx(self, width: int = 0):
-        hd = self.cfg.resolved_head_dim
-        shape = (self.cfg.n_layers, 1, width, self.cfg.n_kv_heads, hd)
-        # distinct buffers: k and v are donated independently to
-        # _ctx_write, so they must not alias
-        return {"k": jnp.zeros(shape, jnp.bfloat16),
-                "v": jnp.zeros(shape, jnp.bfloat16)}
+        # the family's own zero cache: dense/moe {"k","v"} stacks (with
+        # distinct buffers -- k and v are donated independently to
+        # _ctx_write, so they must not alias), rwkv the zero state
+        # stack, hybrid the per-group mix of both
+        return zoo.init_cache(self.cfg, 1, width)
+
+    @property
+    def _attn_key(self) -> str:
+        """Sub-block key of the attention layer inside a hybrid group
+        (``models.transformer._group_layout`` puts it mid-group)."""
+        return f"b{self.cfg.attn_every // 2}"
+
+    def _grow_ctx(self, ctx, kv, start: int, ln: int):
+        """Fold one non-final chunk's cache into the prefill carry.
+        KV planes GROW (dynamic-update-slice into a carry preallocated
+        once at the prompt's page-rounded width); recurrent state is
+        REPLACED wholesale (the chunk's final state is the whole
+        context the next chunk needs)."""
+        if not self.pool.has_kv:
+            return kv                    # rwkv: state stack replaces
+        if not self.pool.has_state:      # dense/moe: pure KV growth
+            if ctx["k"].shape[2] == 0:
+                # preallocate ONCE at the prompt's page-rounded
+                # length; later chunks dynamic-update-slice into the
+                # donated buffer.  (The first chunk always runs on
+                # the width-0 ctx, so single-chunk prefills never
+                # touch -- or trace -- the preallocated shape.)
+                ctx = self._empty_ctx(
+                    self.pool.pages_for(ln) * self.page_size)
+            return {"k": _ctx_write(ctx["k"], kv["k"], jnp.int32(start)),
+                    "v": _ctx_write(ctx["v"], kv["v"], jnp.int32(start))}
+        # hybrid: the attention sub grows, the mamba subs replace
+        ak = self._attn_key
+        sub = ctx[ak]
+        if sub["k"].shape[2] == 0:
+            sub = self._empty_ctx(
+                self.pool.pages_for(ln) * self.page_size)[ak]
+        out = {k: v for k, v in kv.items() if k != ak}
+        out[ak] = {"k": _ctx_write(sub["k"], kv[ak]["k"], jnp.int32(start)),
+                   "v": _ctx_write(sub["v"], kv[ak]["v"], jnp.int32(start))}
+        return out
 
     def _sample(self, lg: np.ndarray, req) -> int:
         """One token from one (V,) logit row -- the HOST twin of the
@@ -525,7 +631,15 @@ class _ChunkPrefillMixin:
         # cache hit (page-aligned by construction), so a hit computes
         # only its un-cached remainder
         start = req.prefilled
-        if self.prefill_chunk_tokens is None:
+        stateful = self.pool.has_state
+        if stateful:
+            # stateful chunks are UNPADDED: every forwarded token runs
+            # through the recurrent state, so pad tokens would corrupt
+            # it (the KV scatter pads the trailing partial page block
+            # inside write_chunk instead)
+            c = ln - start if self.prefill_chunk_tokens is None \
+                else min(self.prefill_chunk_tokens, ln - start)
+        elif self.prefill_chunk_tokens is None:
             # monolithic: one chunk covering every remaining page slot
             c = self.pool.pages_for(ln) * self.page_size - start
         else:
@@ -553,19 +667,22 @@ class _ChunkPrefillMixin:
                 ctx = self._empty_ctx()
             logits, kv, chunk_q = self._chunk_step(
                 self.params, jnp.asarray(toks), ctx, start_arr)
-            self.pool.write_chunk(chunk_q, req.pages, start)
+            if self.pool.has_kv:
+                self.pool.write_chunk(
+                    chunk_q[self._attn_key] if stateful else chunk_q,
+                    req.pages, start)
             if start + real < ln:        # full chunk: extend the carry
-                if ctx["k"].shape[2] == 0:
-                    # preallocate ONCE at the prompt's page-rounded
-                    # length; later chunks dynamic-update-slice into the
-                    # donated buffer.  (The first chunk always runs on
-                    # the width-0 ctx, so single-chunk prefills never
-                    # touch -- or trace -- the preallocated shape.)
-                    width = self.pool.pages_for(ln) * self.page_size
-                    ctx = self._empty_ctx(width)
-                self._prefill_ctx[req.rid] = {
-                    "k": _ctx_write(ctx["k"], kv["k"], jnp.int32(start)),
-                    "v": _ctx_write(ctx["v"], kv["v"], jnp.int32(start))}
+                self._prefill_ctx[req.rid] = self._grow_ctx(
+                    ctx, kv, start, ln)
+            elif stateful:
+                # prefill completion writes the carried state into the
+                # request's slab ONCE, quantized exactly like the
+                # static oracle's post-prefill quantize_cache
+                state_part = kv if not self.pool.has_kv else \
+                    {k: v for k, v in kv.items() if k != self._attn_key}
+                self.pool.write_state(
+                    ssm.quantize_state(state_part, self.pool.kv_group),
+                    req.slab)
         req.prefilled = start + real
         self.prefill_tokens_computed += real
         self._trace.event("PREFILL_CHUNK", rid=req.rid, start=start,
@@ -689,6 +806,11 @@ class ContinuousEngine(_ChunkPrefillMixin):
     # K; K only trades host round trips against (at most K-1) wasted
     # tail iterations per dispatch.
     decode_steps: int = 1
+    # state slabs of the pool (recurrent/hybrid families): every
+    # admitted request holds exactly ONE for its whole lifetime, so the
+    # default -- one per batch slot -- means slab capacity never gates
+    # admission below max_batch.  Ignored for pure-attention families.
+    n_state_slabs: Optional[int] = None
     # observability (docs/observability.md): an ``obs.TraceRecorder``
     # capturing lifecycle events + step spans, or None for the shared
     # no-op recorder -- telemetry is host-side bookkeeping only, so
@@ -754,10 +876,19 @@ class ContinuousEngine(_ChunkPrefillMixin):
                     f"multiple of page_size={self.page_size} that "
                     f"divides max_len={self.max_len} (the chunk/page "
                     f"contract of serve/paged_kv.py)")
+        kinds = PagedKVPool.page_kinds(self.cfg)  # rejects unknown families
         if self.prefill_context is None:
             self.prefill_context = "pages" if self.prefix_cache else "carry"
         if self.prefill_context not in ("carry", "pages"):
             raise ValueError(self.prefill_context)
+        if "state" in kinds and self.prefill_context == "pages":
+            raise ValueError(
+                f"family {self.cfg.family!r} carries recurrent state, "
+                f"which never lands in pages and cannot be re-read "
+                f"through a page table: serve it with "
+                f"prefill_context='carry' (which also rules out "
+                f"prefix_cache -- a cached prefix cannot reproduce the "
+                f"state of tokens this request never forwarded)")
         if self.prefix_cache and self.prefill_context == "carry":
             raise ValueError(
                 "prefix_cache shares posit8 pages a hit request never "
@@ -779,18 +910,31 @@ class ContinuousEngine(_ChunkPrefillMixin):
         if self.profile_annotations:
             from jax.profiler import TraceAnnotation
             self._annotation = TraceAnnotation
-        pool = PagedKVPool(self.cfg, self.n_pages, self.page_size, kv_group)
+        n_slabs = 0
+        if "state" in kinds:
+            n_slabs = self.n_state_slabs \
+                if self.n_state_slabs is not None else self.max_batch
+        pool = PagedKVPool(self.cfg, self.n_pages, self.page_size, kv_group,
+                           n_slabs=n_slabs)
         pool.register_gauges(self.metrics, "pool")
         self.scheduler = Scheduler(pool, self.max_batch,
                                    max_pages_per_req=self.max_pages_per_req,
                                    prefix_cache=self.prefix_cache,
                                    registry=self.metrics, trace=self._trace)
-        # closed-form KV traffic of the LAST decode dispatch (the same
-        # model bench_serve ties against measured bytes)
+        # closed-form cache traffic of the LAST decode dispatch, per
+        # page kind (the same models bench_serve ties against measured
+        # bytes): KV pages + state slabs combined, and the state term
+        # alone -- 2x slab bytes (read + rewrite) per live request,
+        # independent of position
         self.metrics.gauge(
             "engine/kv_bytes_per_step_model",
             fn=lambda: self.pool.modeled_bytes_per_step(self.last_positions)
             if self.last_positions else 0.0)
+        from .paged_kv import state_slab_bytes
+        self.metrics.gauge(
+            "engine/state_bytes_per_step_model",
+            fn=lambda: 2.0 * state_slab_bytes(self.cfg, kv_group)
+            * len(self.last_positions) if self.pool.has_state else 0.0)
         # compile-count sentinel: every jitted entry point is wrapped
         # with a tracing counter BEFORE jax.jit, so
         # ``trace_counts[name]`` counts (re)traces -- bench_serve
@@ -802,10 +946,14 @@ class ContinuousEngine(_ChunkPrefillMixin):
         self._chunk_step = jax.jit(_trace_counted(
             build_prefill_chunk_step(self.cfg, kv_group),
             self.trace_counts, "prefill_chunk"))
-        self._chunk_step_paged = jax.jit(_trace_counted(
-            build_prefill_chunk_step(self.cfg, kv_group, paged=True),
-            self.trace_counts, "prefill_chunk_paged"),
-            donate_argnums=(2,))
+        # the paged-context variant is attention-only (the builder
+        # rejects stateful families), so it exists only when selected
+        self._chunk_step_paged = None
+        if self.prefill_context == "pages":
+            self._chunk_step_paged = jax.jit(_trace_counted(
+                build_prefill_chunk_step(self.cfg, kv_group, paged=True),
+                self.trace_counts, "prefill_chunk_paged"),
+                donate_argnums=(2,))
         # per-request bf16 KV carries of requests mid-prefill (rid ->
         # {"k","v"} stacked (L,1,T,Kh,Dh)); dropped on completion or
         # preemption.  Bounded by the prefix of the few PREFILLING

@@ -66,6 +66,32 @@ ever lands in its private pages), and the decode scatter of
 -- past every shared slot.  No write path can reach a shared page, so
 sharing needs no copy and the pages reproduce the cold path's KV
 bitwise (same tokens, same params, same chunk computation).
+
+Page KINDS: growable KV pages vs fixed-size state SLABS
+-------------------------------------------------------
+The pool stores up to two kinds of physical cache, decided by the
+config's layer kinds (``page_kinds``):
+
+  "kv"    -- attention layers.  Growable: a request's footprint is
+             ceil(live_tokens / page) pages and climbs as it decodes.
+  "state" -- recurrent (mamba / rwkv) layers.  FIXED: one slab per
+             request holds the whole quantized state pytree (posit8
+             codes + bf16 group scales per leaf -- conv boundary,
+             scan state, token-shift carries), and a decode step
+             rewrites it in place.  No growth, no lazy allocation:
+             admission budgets exactly one slab for the request's
+             entire lifetime.
+
+Slab buffers are the ``models.transformer.init_state_cache`` pytree
+with the per-request batch axis widened to ``n_slabs + 1`` (axis 1 of
+every leaf, exactly where the KV leaves keep their page axis).  Slab 0
+is the PARKING slab, the state twin of the parking page: decode rows
+whose request finished mid-scan read and write it instead of a live
+slab.  Hybrid families (jamba) hold both kinds at once -- attention
+sub-layers page through the KV plane while mamba sub-layers ride one
+slab -- and pure-recurrent families (rwkv) hold zero-size KV leaves
+and page nothing.  Slabs refcount/alloc/free exactly like pages and
+hand off bitwise through ``export_state``/``import_state``.
 """
 
 from __future__ import annotations
@@ -78,10 +104,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..models import ssm as _ssm
+from ..models import transformer as _transformer
 from ..models.attention import kv_scale_cols
 
-__all__ = ["PARKING_PAGE", "PagedKVPool", "paged_kv_bytes_per_step",
-           "page_handoff_bytes"]
+__all__ = ["PARKING_PAGE", "PARKING_SLAB", "PagedKVPool",
+           "paged_kv_bytes_per_step", "page_handoff_bytes",
+           "state_slab_bytes"]
 
 _POOL_KEYS = ("k_codes", "v_codes", "k_scale", "v_scale")
 
@@ -93,6 +122,10 @@ _POOL_KEYS = ("k_codes", "v_codes", "k_scale", "v_scale")
 # even a masked read through it dequantizes to finite values.
 PARKING_PAGE = 0
 
+# Slab 0 plays the same role on the state plane: decode rows of
+# finished requests gather/scatter their (discarded) state here.
+PARKING_SLAB = 0
+
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter_pages(dst: jax.Array, src: jax.Array,
@@ -103,34 +136,76 @@ def _scatter_pages(dst: jax.Array, src: jax.Array,
     return dst.at[:, idx].set(src)
 
 
-class PagedKVPool:
-    """Fixed-size paged posit8 KV pool with host-side page accounting.
+def _init_state_buffers(cfg: ModelConfig, n_slabs: int,
+                        kv_group: Optional[int]):
+    """Slab buffers: the quantized-state pytree with the batch axis
+    widened to ``n_slabs + 1``.  Built from shape specs only (no
+    quantization runs): codes start at 0, scales at the neutral 1.0,
+    so a masked read through the parking slab dequantizes to zeros."""
+    specs = jax.eval_shape(
+        lambda: _ssm.quantize_state(
+            _transformer.init_state_cache(cfg, n_slabs + 1), kv_group))
 
-    ``n_pages`` counts allocatable pages; one extra parking page (id 0)
-    is added on top, so device arrays hold ``n_pages + 1`` pages.
+    def init(path, sds):
+        if path[-1].key.endswith("_scale"):
+            return jnp.ones(sds.shape, sds.dtype)
+        return jnp.zeros(sds.shape, sds.dtype)
+
+    return jax.tree_util.tree_map_with_path(init, specs)
+
+
+class PagedKVPool:
+    """Fixed-size paged posit8 cache pool with host-side accounting.
+
+    Two page kinds (see the module contract): growable attention-KV
+    pages and fixed-size recurrent-state slabs.  ``n_pages`` counts
+    allocatable KV pages and ``n_slabs`` allocatable state slabs; one
+    extra parking page / slab (id 0) is added on top of each, so the
+    device arrays hold ``n_pages + 1`` pages and ``n_slabs + 1`` slabs.
     """
+
+    # layer kinds per family: which cache planes the pool must hold
+    _FAMILY_KINDS = {"dense": ("kv",), "moe": ("kv",),
+                     "ssm": ("state",), "hybrid": ("kv", "state")}
+
+    @classmethod
+    def page_kinds(cls, cfg: ModelConfig) -> tuple:
+        """Cache kinds the config's layer mix needs: ``"kv"`` if any
+        layer is attention, ``"state"`` if any layer is recurrent.
+        Raises (naming the supported families) for anything else --
+        the single copy of the capability check, shared with
+        ``launch.specs.paged_cache_specs`` so lowering and runtime
+        reject the same configs with the same error."""
+        kinds = cls._FAMILY_KINDS.get(cfg.family)
+        if kinds is None:
+            raise ValueError(
+                f"no page-kind mapping for family {cfg.family!r}: the "
+                f"paged serving plane supports "
+                f"{sorted(cls._FAMILY_KINDS)} (attention layers page "
+                f"KV; recurrent layers ride fixed-size state slabs)")
+        return kinds
 
     @classmethod
     def validate_family(cls, cfg: ModelConfig) -> None:
-        """Single copy of the family invariant, shared with
-        ``launch.specs.paged_cache_specs`` so lowering and runtime
-        reject the same configs with the same error."""
-        if cfg.family not in ("dense", "moe"):
-            raise ValueError(
-                f"paged KV needs a pure-attention cache; family "
-                f"{cfg.family!r} carries SSM state")
+        cls.page_kinds(cfg)
 
     def __init__(self, cfg: ModelConfig, n_pages: int, page_size: int,
-                 kv_group: Optional[int] = None):
-        self.validate_family(cfg)
+                 kv_group: Optional[int] = None, n_slabs: int = 0):
+        kinds = self.page_kinds(cfg)
+        self.has_kv = "kv" in kinds
+        self.has_state = "state" in kinds
         self.cfg = cfg
         self.n_pages = int(n_pages)
         self.page_size = int(page_size)
         self.kv_group = kv_group
         hd = cfg.resolved_head_dim
         self.gs = kv_scale_cols(hd, kv_group)
-        L, P = cfg.n_layers, self.n_pages + 1
-        code_shape = (L, P, self.page_size, cfg.n_kv_heads, hd)
+        # KV leaves span the ATTENTION layers only (= all layers for
+        # dense/moe, one per group for hybrid, none for pure-recurrent
+        # -- the leaves stay present at L=0 so the key set is uniform)
+        self.kv_layers = cfg.n_attn_layers if self.has_kv else 0
+        P = self.n_pages + 1
+        code_shape = (self.kv_layers, P, self.page_size, cfg.n_kv_heads, hd)
         scale_shape = code_shape[:-1] + (self.gs,)
         self.k_codes = jnp.zeros(code_shape, jnp.uint8)
         self.v_codes = jnp.zeros(code_shape, jnp.uint8)
@@ -146,6 +221,15 @@ class PagedKVPool:
         self._ref: Dict[int, int] = {}
         self._allocated: set = set()
         self.alloc_peak = 0
+        # state-slab plane: same accounting discipline, own id space
+        self.n_slabs = int(n_slabs) if self.has_state else 0
+        self.state: Dict[str, Any] = {}
+        if self.has_state:
+            self.state = _init_state_buffers(cfg, self.n_slabs, kv_group)
+        self._slab_free: List[int] = list(range(self.n_slabs, 0, -1))
+        self._slab_ref: Dict[int, int] = {}
+        self._slab_allocated: set = set()
+        self.slab_alloc_peak = 0
 
     # -- accounting ---------------------------------------------------------
 
@@ -162,8 +246,19 @@ class PagedKVPool:
         return self.used_pages / max(self.n_pages, 1)
 
     def pages_for(self, tokens: int) -> int:
-        """Pages needed to hold ``tokens`` cache slots."""
+        """KV pages needed to hold ``tokens`` cache slots (0 for
+        pure-recurrent families: their whole footprint is one slab)."""
+        if not self.has_kv:
+            return 0
         return -(-tokens // self.page_size)
+
+    @property
+    def free_slabs(self) -> int:
+        return len(self._slab_free)
+
+    @property
+    def used_slabs(self) -> int:
+        return self.n_slabs - len(self._slab_free)
 
     def register_gauges(self, registry, namespace: str = "pool") -> None:
         """Expose the pool's occupancy accounting as callback gauges on
@@ -181,6 +276,17 @@ class PagedKVPool:
             f"{namespace}/page_bytes",
             fn=lambda: page_handoff_bytes(self.cfg, self.page_size,
                                           self.kv_group))
+        if self.has_state:
+            registry.gauge(f"{namespace}/n_slabs", fn=lambda: self.n_slabs)
+            registry.gauge(f"{namespace}/used_slabs",
+                           fn=lambda: self.used_slabs)
+            registry.gauge(f"{namespace}/free_slabs",
+                           fn=lambda: self.free_slabs)
+            registry.gauge(f"{namespace}/slab_alloc_peak",
+                           fn=lambda: self.slab_alloc_peak)
+            registry.gauge(
+                f"{namespace}/slab_bytes",
+                fn=lambda: state_slab_bytes(self.cfg, self.kv_group))
 
     # -- alloc / free -------------------------------------------------------
 
@@ -222,29 +328,88 @@ class PagedKVPool:
         """Current holder count of a page (0 = free)."""
         return self._ref.get(pg, 0)
 
+    # -- slab alloc / free (state plane: same discipline, own id space) -----
+
+    def alloc_slab(self) -> Optional[int]:
+        """Pop ONE slab at refcount 1; None (and no change) if the
+        state plane is exhausted.  A request needs exactly one slab for
+        its whole lifetime -- there is no multi-slab allocation."""
+        assert self.has_state, "slab alloc on a pool without state"
+        if not self._slab_free:
+            return None
+        sl = self._slab_free.pop()
+        assert sl not in self._slab_allocated, f"slab {sl} double-allocated"
+        self._slab_allocated.add(sl)
+        self._slab_ref[sl] = 1
+        self.slab_alloc_peak = max(self.slab_alloc_peak, self.used_slabs)
+        return sl
+
+    def incref_slab(self, sl: int) -> None:
+        assert sl in self._slab_allocated, f"incref of unallocated slab {sl}"
+        self._slab_ref[sl] += 1
+
+    def free_slab(self, sl: int) -> None:
+        """Decref; the slab returns to the free list when the last
+        holder lets go (mirrors :meth:`free`)."""
+        assert 0 < sl <= self.n_slabs, sl
+        assert sl in self._slab_allocated, f"double free of slab {sl}"
+        self._slab_ref[sl] -= 1
+        if self._slab_ref[sl] == 0:
+            del self._slab_ref[sl]
+            self._slab_allocated.remove(sl)
+            self._slab_free.append(sl)
+
+    def slab_refcount(self, sl: int) -> int:
+        return self._slab_ref.get(sl, 0)
+
     # -- device state -------------------------------------------------------
 
-    def device_state(self) -> Dict[str, jax.Array]:
-        """The pool leaves a paged decode step reads AND writes."""
-        return {k: getattr(self, k) for k in _POOL_KEYS}
+    def device_state(self) -> Dict[str, Any]:
+        """The pool leaves a paged decode step reads AND writes.  KV
+        leaves appear only for attention-bearing families and the
+        ``"state"`` subtree only for recurrent ones, so each family's
+        decode-loop carry is exactly its resident cache -- no zero-size
+        ballast rides through jit donation."""
+        out: Dict[str, Any] = {}
+        if self.has_kv:
+            out.update({k: getattr(self, k) for k in _POOL_KEYS})
+        if self.has_state:
+            out["state"] = self.state
+        return out
 
-    def set_device_state(self, state: Dict[str, jax.Array]) -> None:
-        for k in _POOL_KEYS:
-            setattr(self, k, state[k])
+    def set_device_state(self, state: Dict[str, Any]) -> None:
+        if self.has_kv:
+            for k in _POOL_KEYS:
+                setattr(self, k, state[k])
+        if self.has_state:
+            self.state = state["state"]
 
     @staticmethod
     def device_specs(cfg: ModelConfig, n_pages: int, page_size: int,
-                     kv_group: Optional[int] = None) -> Dict[str, Any]:
+                     kv_group: Optional[int] = None,
+                     n_slabs: int = 0) -> Dict[str, Any]:
         """ShapeDtypeStructs of the pool leaves (dry-run lowering)."""
-        hd = cfg.resolved_head_dim
-        gs = kv_scale_cols(hd, kv_group)
-        cs = (cfg.n_layers, n_pages + 1, page_size, cfg.n_kv_heads, hd)
-        return {
-            "k_codes": jax.ShapeDtypeStruct(cs, jnp.uint8),
-            "v_codes": jax.ShapeDtypeStruct(cs, jnp.uint8),
-            "k_scale": jax.ShapeDtypeStruct(cs[:-1] + (gs,), jnp.bfloat16),
-            "v_scale": jax.ShapeDtypeStruct(cs[:-1] + (gs,), jnp.bfloat16),
-        }
+        kinds = PagedKVPool.page_kinds(cfg)
+        out: Dict[str, Any] = {}
+        if "kv" in kinds:
+            hd = cfg.resolved_head_dim
+            gs = kv_scale_cols(hd, kv_group)
+            cs = (cfg.n_attn_layers, n_pages + 1, page_size,
+                  cfg.n_kv_heads, hd)
+            out.update({
+                "k_codes": jax.ShapeDtypeStruct(cs, jnp.uint8),
+                "v_codes": jax.ShapeDtypeStruct(cs, jnp.uint8),
+                "k_scale": jax.ShapeDtypeStruct(cs[:-1] + (gs,),
+                                                jnp.bfloat16),
+                "v_scale": jax.ShapeDtypeStruct(cs[:-1] + (gs,),
+                                                jnp.bfloat16),
+            })
+        if "state" in kinds:
+            out["state"] = jax.eval_shape(
+                lambda: _ssm.quantize_state(
+                    _transformer.init_state_cache(cfg, n_slabs + 1),
+                    kv_group))
+        return out
 
     # -- data movement ------------------------------------------------------
 
@@ -273,7 +438,22 @@ class PagedKVPool:
         leaf = cache_q["k_codes"]
         L, b, c = leaf.shape[:3]
         assert b == 1, "prefill writes are per-request (B=1)"
-        assert c % self.page_size == 0, (c, self.page_size)
+        if c % self.page_size:
+            # recurrent-family prefill chunks are UNPADDED (pad tokens
+            # would corrupt the carried state), so a hybrid prefix's
+            # final chunk may end mid-page: pad the trailing block here
+            # instead.  The pad slots hold zero codes / neutral scales
+            # and are either overwritten by decode or never read (the
+            # live mask is positional), exactly like monolithic pad.
+            pad = self.page_size - c % self.page_size
+            cache_q = {
+                key: jnp.pad(
+                    cache_q[key],
+                    [(0, pad) if ax == 2 else (0, 0)
+                     for ax in range(cache_q[key].ndim)],
+                    constant_values=1.0 if key.endswith("_scale") else 0)
+                for key in _POOL_KEYS}
+            c += pad
         assert start % self.page_size == 0, (start, self.page_size)
         first = start // self.page_size
         nblk = min(c // self.page_size, len(pages) - first)
@@ -312,7 +492,7 @@ class PagedKVPool:
         decode over imported pages reproduces the source pool's reads
         exactly."""
         leaf = payload["k_codes"]
-        assert leaf.shape[0] == self.cfg.n_layers, leaf.shape
+        assert leaf.shape[0] == self.kv_layers, leaf.shape
         assert leaf.shape[2] == self.page_size, \
             (leaf.shape, self.page_size)
         assert leaf.shape[1] == len(pages), (leaf.shape, len(pages))
@@ -331,14 +511,48 @@ class PagedKVPool:
             out[key] = x.reshape(x.shape[0], 1, -1, *x.shape[3:])
         return out
 
+    # -- state slab movement ------------------------------------------------
+
+    def write_state(self, state_q, slab: int) -> None:
+        """Scatter one request's quantized state into its slab -- the
+        state twin of :meth:`write_prefill` (prefill completion writes
+        the final carried state here ONCE; decode then rewrites the
+        slab in place inside the jitted loop).  ``state_q`` leaves have
+        batch width 1 on axis 1."""
+        idx = jnp.asarray([slab], jnp.int32)
+        self.state = jax.tree.map(
+            lambda dst, src: _scatter_pages(dst, src, idx),
+            self.state, state_q)
+
+    def export_state(self, slab: int) -> Dict[str, Any]:
+        """Gather one slab as a detachable payload (batch width 1) --
+        the state side of the disagg handoff AND the scheduler's
+        preemption snapshot.  A pure functional read, like
+        :meth:`export_pages`: valid after the slab is freed."""
+        idx = jnp.asarray([slab], jnp.int32)
+        return jax.tree.map(lambda leaf: leaf[:, idx], self.state)
+
+    def import_state(self, payload, slab: int) -> None:
+        """Scatter an exported state payload into this pool's ``slab``
+        (decode side of the handoff / preemption resume).  Codes and
+        scales land bitwise, so the restored request's decode continues
+        exactly where the source left off."""
+        self.write_state(payload, slab)
+
     # -- roofline -----------------------------------------------------------
 
     def modeled_bytes_per_step(self, positions) -> float:
-        """Modeled KV HBM bytes one batched decode step moves: each live
-        request reads its ceil((pos+1)/page) live pages across all
-        layers -- a function of LIVE pages, never of any ``max_len``."""
-        return paged_kv_bytes_per_step(self.cfg, positions, self.page_size,
-                                       self.kv_group)
+        """Modeled cache HBM bytes one batched decode step moves, per
+        page kind: each live request reads its ceil((pos+1)/page) live
+        KV pages across the attention layers, and reads + rewrites its
+        whole state slab -- a function of LIVE pages/slabs, never of
+        any ``max_len``."""
+        total = paged_kv_bytes_per_step(self.cfg, positions,
+                                        self.page_size, self.kv_group)
+        if self.has_state:
+            n_live = int(np.atleast_1d(np.asarray(positions)).size)
+            total += 2.0 * state_slab_bytes(self.cfg, self.kv_group) * n_live
+        return total
 
 
 def paged_kv_bytes_per_step(cfg: ModelConfig, positions, page_size: int,
@@ -364,3 +578,19 @@ def page_handoff_bytes(cfg: ModelConfig, page_size: int,
     gs = kv_scale_cols(hd, kv_group)
     return int(2 * cfg.n_attn_layers * page_size * cfg.n_kv_heads
                * (hd * 1 + gs * 2))
+
+
+def state_slab_bytes(cfg: ModelConfig, kv_group: Optional[int] = None) -> int:
+    """Bytes ONE request's quantized recurrent state occupies -- the
+    exact ``.nbytes`` sum of an ``export_state`` payload (posit8 codes
+    + bf16 group scales over every recurrent leaf), i.e. the per-kind
+    closed form for the "state" plane: a slab costs this much resident,
+    a handoff moves this much, and a decode step streams 2x (read +
+    rewrite).  0 for pure-attention families."""
+    if "state" not in PagedKVPool.page_kinds(cfg):
+        return 0
+    specs = jax.eval_shape(
+        lambda: _ssm.quantize_state(
+            _transformer.init_state_cache(cfg, 1), kv_group))
+    return int(sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(specs)))

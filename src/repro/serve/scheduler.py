@@ -92,6 +92,11 @@ class Request:
     preemptions: int = 0
     prefilled: int = 0                  # chunk cursor: prefix tokens paged in
     cached_tokens: int = 0              # leading tokens served by shared pages
+    slab: Optional[int] = None          # state-slab id (recurrent families)
+    # preemption snapshot of a stateful request: the exported quantized
+    # state (+ KV pages for hybrids).  Resume imports it and continues
+    # decoding EXACTLY -- no re-prefill, nothing recomputed.
+    resume: Optional[Dict] = None
 
     @property
     def prefix(self) -> np.ndarray:
@@ -367,6 +372,14 @@ class Scheduler:
                 f"{self.max_pages_per_req * self.pool.page_size} "
                 f"({need} pages > the {self.max_pages_per_req}-page "
                 f"table row of the engine's decode step)")
+        # the fixed part of the footprint: a recurrent/hybrid request
+        # needs one state slab for its whole lifetime, so a pool with
+        # none can never serve it (pages alone don't cover the family)
+        if self.pool.has_state and self.pool.n_slabs < 1:
+            raise ValueError(
+                f"family {self.pool.cfg.family!r} keeps per-request "
+                f"recurrent state, but the pool has n_slabs=0: size the "
+                f"pool with at least one state slab")
         req = Request(self._next_rid, prompt, int(max_new_tokens), eos_id)
         self._next_rid += 1
         self.waiting.append(req)
@@ -406,6 +419,23 @@ class Scheduler:
         admitted = []
         while self.waiting and len(self.running) < self.max_batch:
             head = self.waiting[0]
+            if head.resume is not None:
+                # preemption snapshot: import the exported state (+ KV
+                # pages) and go straight back to RUNNING -- the exact
+                # form of resume, nothing to re-prefill
+                if not self._admit_resume(head):
+                    break                # strict FIFO: head blocks
+                self.waiting.popleft()
+                self.running.append(head)
+                admitted.append(head)
+                self._trace.event("RESUME", rid=head.rid,
+                                  generated=len(head.generated))
+                continue
+            # constant-footprint admission: a stateful head needs its
+            # ONE slab available now (co-admitted requests hold theirs
+            # already, so free_slabs is the whole claim accounting)
+            if self.pool.has_state and self.pool.free_slabs < 1:
+                break
             shared = self.prefix.acquire(head.prompt) \
                 if self.prefix is not None else []
             # budget AFTER the attach: the shared pages are pinned at
@@ -419,6 +449,8 @@ class Scheduler:
             self.waiting.popleft()
             head.status = PREFILLING
             head.pages = list(shared)
+            if self.pool.has_state:
+                head.slab = self.pool.alloc_slab()
             head.cached_tokens = len(shared) * self.pool.page_size
             head.prefilled = head.cached_tokens
             if shared:
@@ -433,6 +465,38 @@ class Scheduler:
         if admitted:
             self.epoch += 1
         return admitted
+
+    def _admit_resume(self, head: Request) -> bool:
+        """Import a preemption snapshot: allocate the pages + slab it
+        needs, scatter the payload back in, RUNNING.  False (no state
+        changed) if the pool cannot host it yet."""
+        snap = head.resume
+        kv = snap.get("kv")
+        n = int(kv["k_codes"].shape[1]) if kv is not None else 0
+        if n > self._admission_budget():
+            return False
+        if self.pool.has_state and self.pool.free_slabs < 1:
+            return False
+        pages: List[int] = []
+        if n:
+            if self.prefix is not None and self.pool.free_pages < n:
+                self.prefix.evict(n - self.pool.free_pages)
+            got = self.pool.alloc(n)
+            if got is None:
+                return False
+            pages = got
+        slab = None
+        if self.pool.has_state:
+            slab = self.pool.alloc_slab()
+        if kv is not None:
+            self.pool.import_pages(kv, pages)
+        if "state" in snap:
+            self.pool.import_state(snap["state"], slab)
+        head.pages = pages
+        head.slab = slab
+        head.resume = None
+        head.status = RUNNING
+        return True
 
     def prefill_complete(self, req: Request) -> None:
         """PREFILLING -> RUNNING: the whole prefix is paged in and the
@@ -479,7 +543,13 @@ class Scheduler:
         writes land in (slots ``position .. position+horizon-1``) --
         the multi-step decode dispatch pre-claims its whole window up
         front, so no page can be missing mid-scan (``horizon=1`` is the
-        single-step behavior).  False if ``req`` itself was preempted."""
+        single-step behavior).  False if ``req`` itself was preempted.
+
+        Pure-recurrent families return True unconditionally: the
+        request's footprint is its one slab, already allocated at
+        admission -- decode NEVER grows it, whatever the horizon."""
+        if not self.pool.has_kv:
+            return True
         last = req.position + max(int(horizon), 1) - 1
         return self._grow(req, last // self.pool.page_size + 1)
 
@@ -490,11 +560,18 @@ class Scheduler:
         return self._grow(req, self.pool.pages_for(upto))
 
     def preempt(self, req: Request) -> None:
-        """Free the victim's pages and put it back at the FRONT of the
-        queue.  A RUNNING victim keeps its generated tokens (resume =
-        re-prefill prefix); a PREFILLING victim restarts from chunk 0."""
+        """Free the victim's device resources and put it back at the
+        FRONT of the queue.  A RUNNING attention-only victim keeps its
+        generated tokens (resume = re-prefill prefix); a PREFILLING
+        victim restarts from chunk 0.  A RUNNING STATEFUL victim is
+        snapshotted instead: its quantized state (+ KV pages for
+        hybrids) exports to a host-held payload that resume imports
+        bitwise -- nothing is recomputed, so nothing is charged to
+        ``wasted_prefill_tokens`` (state snapshot/restore replaces
+        re-prefill-from-prefix exactly)."""
         assert req.status in (RUNNING, PREFILLING), req.status
         self._trace.event("PREEMPT", rid=req.rid, was=req.status)
+        snapshot = self.pool.has_state and req.status == RUNNING
         # tokens served off shared cached pages were never computed by
         # this request, so preemption does not waste them -- and the
         # pages themselves survive in the index (the decref below drops
@@ -503,15 +580,24 @@ class Scheduler:
             self.prefill_preemptions += 1
             self.wasted_prefill_tokens += max(
                 req.prefilled - req.cached_tokens, 0)
+        elif snapshot:
+            snap: Dict = {"state": self.pool.export_state(req.slab)}
+            if req.pages:
+                snap["kv"] = self.pool.export_pages(req.pages)
+            req.resume = snap
         else:
             self.wasted_prefill_tokens += max(
                 req.position + 1 - req.cached_tokens, 0)
         self.pool.free(req.pages)
         req.pages = []
-        req.prefilled = 0
-        req.cached_tokens = 0
+        if req.slab is not None:
+            self.pool.free_slab(req.slab)
+            req.slab = None
+        if not snapshot:
+            req.prefilled = 0
+            req.cached_tokens = 0
+            req.next_token = -1
         req.status = WAITING
-        req.next_token = -1
         req.preemptions += 1
         self.preemption_count += 1
         self.preempted_log.append(req.rid)
@@ -532,8 +618,10 @@ class Scheduler:
         # its whole prefix KV (computed on the prefill side, shipped
         # across the handoff) is gone; cached_tokens was reset by the
         # bounce, so the full prefix counts as wasted -- matching what
-        # a RUNNING-victim preempt charges
-        self.wasted_prefill_tokens += req.position + 1
+        # a RUNNING-victim preempt charges.  A stateful bounce carries
+        # a snapshot instead: resume is exact, nothing is wasted.
+        if req.resume is None:
+            self.wasted_prefill_tokens += req.position + 1
         req.preemptions += 1
         self.preemption_count += 1
         self.preempted_log.append(req.rid)
@@ -549,6 +637,9 @@ class Scheduler:
         assert req.status == RUNNING
         self.pool.free(req.pages)
         req.pages = []
+        if req.slab is not None:
+            self.pool.free_slab(req.slab)
+            req.slab = None
         req.status = FINISHED
         self.running.remove(req)
         self.finished[req.rid] = req
@@ -571,6 +662,9 @@ class Scheduler:
         assert req.status == RUNNING, req.status
         self.pool.free(req.pages)
         req.pages = []
+        if req.slab is not None:
+            self.pool.free_slab(req.slab)
+            req.slab = None
         self.running.remove(req)
         self.epoch += 1
 
@@ -622,13 +716,16 @@ class DecodeRunner:
     def has_slot(self) -> bool:
         return len(self.running) < self.max_batch
 
-    def accept(self, req: Request, pages: List[int]) -> None:
+    def accept(self, req: Request, pages: List[int],
+               slab: Optional[int] = None) -> None:
         """Take ownership of a handed-off request: its payload has been
-        imported into this pool's ``pages``, which become its page-table
-        row here.  Bumps the epoch -- a new row order means the resident
-        page table is stale."""
+        imported into this pool's ``pages`` (and state ``slab`` for
+        recurrent families), which become its page-table row here.
+        Bumps the epoch -- a new row order means the resident page
+        table is stale."""
         assert self.has_slot and req.status == RUNNING, req.status
         req.pages = list(pages)
+        req.slab = slab
         self.running.append(req)
         self.epoch += 1
 
@@ -636,7 +733,10 @@ class DecodeRunner:
         """Decode-side twin of ``Scheduler.ensure_capacity``: own every
         page the next ``horizon`` decode writes land in, bouncing the
         youngest accepted request when the pool is dry.  False if
-        ``req`` itself was bounced."""
+        ``req`` itself was bounced.  Pure-recurrent: always True --
+        the slab accepted with the handoff is the whole footprint."""
+        if not self.pool.has_kv:
+            return True
         last = req.position + max(int(horizon), 1) - 1
         need = last // self.pool.page_size + 1
         grew = False
@@ -659,15 +759,27 @@ class DecodeRunner:
         pages and reset its prefill cursor so the admitter re-prefills
         prompt+generated from chunk 0 (the generated tokens survive --
         greedy decoding resumes where it stopped, like any RUNNING
-        preemption victim).  The engine drains ``bounced`` back to the
-        prefill admitter's queue front."""
+        preemption victim).  A STATEFUL request snapshots instead (the
+        same exact-resume payload ``Scheduler.preempt`` builds): the
+        prefill side pushes it back across the channel untouched, no
+        re-prefill.  The engine drains ``bounced`` back to the prefill
+        admitter's queue front."""
         assert req.status == RUNNING, req.status
+        if self.pool.has_state:
+            snap: Dict = {"state": self.pool.export_state(req.slab)}
+            if req.pages:
+                snap["kv"] = self.pool.export_pages(req.pages)
+            req.resume = snap
+        else:
+            req.next_token = -1
+            req.prefilled = 0
+            req.cached_tokens = 0
         self.pool.free(req.pages)
         req.pages = []
+        if req.slab is not None:
+            self.pool.free_slab(req.slab)
+            req.slab = None
         req.status = WAITING
-        req.next_token = -1
-        req.prefilled = 0
-        req.cached_tokens = 0
         self.bounce_count += 1
         self.running.remove(req)
         self.bounced.append(req)
@@ -680,11 +792,14 @@ class DecodeRunner:
         return out
 
     def retire(self, req: Request) -> None:
-        """RUNNING -> FINISHED on the decode side; pages return to the
-        decode pool the same step."""
+        """RUNNING -> FINISHED on the decode side; pages and slab
+        return to the decode pool the same step."""
         assert req.status == RUNNING, req.status
         self.pool.free(req.pages)
         req.pages = []
+        if req.slab is not None:
+            self.pool.free_slab(req.slab)
+            req.slab = None
         req.status = FINISHED
         self.running.remove(req)
         self.finished[req.rid] = req

@@ -434,6 +434,14 @@ def test_continuous_rejects_oversized_and_stateful():
         eng.submit(np.zeros(30, np.int32), 10)   # 40 slots > max_len
     ssm_cfg = get_config("rwkv6-1.6b").reduced()
     ssm_params = T.lm_init(jax.random.PRNGKey(1), ssm_cfg)
-    with pytest.raises(ValueError):
+    # stateful families now serve -- but only on the carry prefill
+    # context; the paged context re-reads the prefix through the page
+    # table, which recurrent state never lands in
+    with pytest.raises(ValueError, match="recurrent state"):
         ContinuousEngine(ssm_cfg, ssm_params, n_pages=8, page_size=16,
-                         max_batch=2, max_len=32)
+                         max_batch=2, max_len=32,
+                         prefill_context="pages")
+    eng_s = ContinuousEngine(ssm_cfg, ssm_params, n_pages=8, page_size=16,
+                             max_batch=2, max_len=32)
+    assert eng_s.pool.has_state and not eng_s.pool.has_kv
+    assert eng_s.pool.n_slabs == 2               # one slab per batch slot

@@ -168,9 +168,23 @@ def test_pool_pages_for():
     assert [pool.pages_for(n) for n in (1, 16, 17, 32, 33)] == [1, 1, 2, 2, 3]
 
 
-def test_pool_rejects_stateful_family():
-    with pytest.raises(ValueError):
-        PagedKVPool(get_config("rwkv6-1.6b").reduced(), 4, 16)
+def test_pool_page_kinds_and_family_gate():
+    """Page kinds derive from the config's layer mix; an unknown family
+    is rejected with the supported families named in the error."""
+    import dataclasses
+    assert PagedKVPool.page_kinds(CFG) == ("kv",)
+    ssm_cfg = get_config("rwkv6-1.6b").reduced()
+    assert PagedKVPool.page_kinds(ssm_cfg) == ("state",)
+    assert PagedKVPool.page_kinds(
+        get_config("jamba-v0.1-52b").reduced()) == ("kv", "state")
+    with pytest.raises(ValueError, match="dense.*hybrid.*moe.*ssm"):
+        PagedKVPool(dataclasses.replace(CFG, family="mystery"), 4, 16)
+    # a stateful pool now constructs -- with the slab plane sized in
+    # and no KV page plane at all
+    pool = PagedKVPool(ssm_cfg, 0, 16, n_slabs=3)
+    assert pool.has_state and not pool.has_kv
+    assert pool.n_slabs == 3 and pool.free_slabs == 3
+    assert pool.pages_for(100) == 0              # nothing ever pages
 
 
 def test_pool_prefill_roundtrip():
@@ -273,6 +287,66 @@ def test_pool_refcount_churn_invariants():
         for _ in range(n):
             pool.free([pg])
     assert pool.used_pages == 0
+
+
+def test_pool_mixed_kind_churn_invariants():
+    """Interleaved KV-page AND state-slab alloc/incref/free churn on a
+    hybrid pool, against one shadow refcount model per kind: the two
+    planes must stay independent, each must partition its resource at
+    every step, and releasing every holder leaks nothing."""
+    cfg = get_config("jamba-v0.1-52b").reduced()
+    pool = PagedKVPool(cfg, n_pages=32, page_size=16, n_slabs=6)
+    rng = np.random.default_rng(13)
+    pref, sref = {}, {}                        # shadow refcounts per kind
+    for _ in range(500):
+        r = rng.random()
+        live_p, live_s = sorted(pref), sorted(sref)
+        if r < 0.2:
+            got = pool.alloc(int(rng.integers(1, 4)))
+            if got is not None:
+                for pg in got:
+                    pref[pg] = 1
+        elif live_p and r < 0.35:
+            pg = live_p[rng.integers(0, len(live_p))]
+            pool.incref([pg])
+            pref[pg] += 1
+        elif live_p and r < 0.55:
+            pg = live_p[rng.integers(0, len(live_p))]
+            pool.free([pg])
+            pref[pg] -= 1
+            if pref[pg] == 0:
+                del pref[pg]
+        elif r < 0.7:
+            sl = pool.alloc_slab()
+            if sl is not None:
+                sref[sl] = 1
+        elif live_s and r < 0.85:
+            sl = live_s[rng.integers(0, len(live_s))]
+            pool.incref_slab(sl)
+            sref[sl] += 1
+        elif live_s:
+            sl = live_s[rng.integers(0, len(live_s))]
+            pool.free_slab(sl)
+            sref[sl] -= 1
+            if sref[sl] == 0:
+                del sref[sl]
+        assert pool._allocated == set(pref)
+        assert all(pool.refcount(pg) == n for pg, n in pref.items())
+        assert pool.free_pages + pool.used_pages == pool.n_pages
+        assert pool._slab_allocated == set(sref)
+        assert all(pool.slab_refcount(sl) == n for sl, n in sref.items())
+        assert pool.free_slabs + pool.used_slabs == pool.n_slabs
+    for pg, n in list(pref.items()):
+        for _ in range(n):
+            pool.free([pg])
+    for sl, n in list(sref.items()):
+        for _ in range(n):
+            pool.free_slab(sl)
+    assert pool.used_pages == 0 and pool.used_slabs == 0
+    assert pool.free_pages == pool.n_pages
+    assert pool.free_slabs == pool.n_slabs
+    with pytest.raises(AssertionError):
+        pool.free_slab(1)                      # double free still fires
 
 
 def _random_cache_q(L, s, kh, dh):

@@ -1,0 +1,192 @@
+"""Paged-STATE serving: SSM/RWKV/hybrid families under the continuous
+and disaggregated engines, token-for-token against the static oracle.
+
+The pinned invariant: at temperature 0, ``ContinuousEngine`` and
+``DisaggEngine`` outputs equal per-request static ``ServeEngine.generate``
+(with ``quantized_kv=True, quantized_state=True`` -- the same one-shot
+post-prefill quantization and per-step posit8 state round-trip the slab
+plane performs) for every ``decode_steps=K``, across chunked prefill,
+preemption snapshot/resume, slab-gated admission and the disagg page +
+slab handoff."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve import (ContinuousEngine, DisaggEngine, PagedKVPool,
+                         ServeEngine, state_slab_bytes)
+from repro.serve.scheduler import RUNNING
+
+RWKV = get_config("rwkv6-1.6b").reduced()
+# the reduced hybrid needs a generous MoE capacity factor for exact
+# static parity (no dropped tokens between batch layouts)
+JAMBA = dataclasses.replace(get_config("jamba-v0.1-52b").reduced(),
+                            capacity_factor=8.0)
+RWKV_PARAMS = T.lm_init(jax.random.PRNGKey(0), RWKV)
+JAMBA_PARAMS = T.lm_init(jax.random.PRNGKey(0), JAMBA)
+
+# prompt lengths must keep the seed scan chunking exact:
+# nchunks = max(s // ssm_chunk, 1) must divide s (ssm_chunk = 8)
+PROMPTS = [np.arange(1, 13, dtype=np.int32),
+           np.arange(3, 11, dtype=np.int32),
+           np.arange(5, 11, dtype=np.int32)]
+GENS = [6, 5, 7]
+
+
+def _family(name):
+    if name == "rwkv":
+        return RWKV, RWKV_PARAMS, dict(max_len=48, page_size=16)
+    return JAMBA, JAMBA_PARAMS, dict(max_len=64, page_size=64)
+
+
+def _oracle(cfg, params, max_len):
+    st = ServeEngine(cfg, params, max_len=max_len, quantized_kv=True,
+                     quantized_state=True)
+    return lambda p, g: st.generate(np.asarray(p, np.int32)[None], g)[0]
+
+
+def _check(outs, rids, orc):
+    for rid, p, g in zip(rids, PROMPTS, GENS):
+        np.testing.assert_array_equal(outs[rid], orc(p, g))
+
+
+@pytest.mark.parametrize("k", [1, 4])
+@pytest.mark.parametrize("family", ["rwkv", "hybrid"])
+def test_continuous_matches_static_stateful(family, k):
+    cfg, params, kw = _family(family)
+    eng = ContinuousEngine(cfg, params, n_pages=8,
+                           page_size=kw["page_size"], max_batch=4,
+                           max_len=kw["max_len"], decode_steps=k)
+    assert eng.pool.has_state
+    rids = [eng.submit(p, g) for p, g in zip(PROMPTS, GENS)]
+    outs = eng.run()
+    _check(outs, rids, _oracle(cfg, params, kw["max_len"]))
+    # constant footprint: one slab per live request, never more
+    assert eng.pool.slab_alloc_peak <= len(PROMPTS)
+    assert eng.pool.used_slabs == 0              # all retired -> freed
+
+
+def test_continuous_chunked_prefill_stateful():
+    """Stateful chunked prefill (unpadded chunks, state carried across
+    chunk boundaries) matches the monolithic prefill bitwise."""
+    prompts = [np.arange(1, 33, dtype=np.int32),
+               np.arange(2, 22, dtype=np.int32)]
+    eng = ContinuousEngine(RWKV, RWKV_PARAMS, n_pages=8, page_size=16,
+                           max_batch=4, max_len=48, decode_steps=2,
+                           prefill_chunk_tokens=16)
+    orc = _oracle(RWKV, RWKV_PARAMS, 48)
+    rids = [eng.submit(p, 6) for p in prompts]
+    outs = eng.run()
+    for rid, p in zip(rids, prompts):
+        np.testing.assert_array_equal(outs[rid], orc(p, 6))
+
+
+@pytest.mark.parametrize("family", ["rwkv", "hybrid"])
+def test_continuous_preempt_resume_stateful_exact(family):
+    """Preempting a RUNNING stateful request snapshots its slab; resume
+    imports it bitwise and decoding continues exactly -- no re-prefill,
+    nothing charged to wasted_prefill_tokens."""
+    cfg, params, kw = _family(family)
+    eng = ContinuousEngine(cfg, params, n_pages=8,
+                           page_size=kw["page_size"], max_batch=4,
+                           max_len=kw["max_len"], decode_steps=1)
+    rids = [eng.submit(p, g) for p, g in zip(PROMPTS, GENS)]
+    victim = None
+    for _ in range(50):
+        eng.step()
+        victim = next(
+            (r for r in eng.scheduler.running if r.status == RUNNING
+             and len(r.generated) >= 2 and not r.done), None)
+        if victim is not None:
+            break
+    assert victim is not None
+    eng.scheduler.preempt(victim)
+    assert victim.resume is not None and "state" in victim.resume
+    assert eng.scheduler.wasted_prefill_tokens == 0
+    outs = eng.run()
+    _check(outs, rids, _oracle(cfg, params, kw["max_len"]))
+    assert eng.scheduler.preemption_count == 1
+    assert victim.preemptions == 1
+
+
+def test_continuous_slab_gated_admission():
+    """n_state_slabs=1 serializes admission to one live request at a
+    time -- the constant-footprint admission gate -- while every
+    request still finishes with exact outputs."""
+    eng = ContinuousEngine(RWKV, RWKV_PARAMS, n_pages=8, page_size=16,
+                           max_batch=4, max_len=48, decode_steps=1,
+                           n_state_slabs=1)
+    rids = [eng.submit(p, g) for p, g in zip(PROMPTS, GENS)]
+    peak_running = 0
+    while eng.scheduler.has_work:
+        eng.step()
+        peak_running = max(peak_running, len(eng.scheduler.running))
+        assert eng.pool.used_slabs <= 1
+    assert peak_running == 1
+    assert eng.pool.slab_alloc_peak == 1
+    outs = {rid: req.output for rid, req in eng.scheduler.finished.items()}
+    _check(outs, rids, _oracle(RWKV, RWKV_PARAMS, 48))
+
+
+@pytest.mark.parametrize("family", ["rwkv", "hybrid"])
+def test_disagg_matches_static_stateful(family):
+    """The nested {state [+ kv]} handoff payload crosses the channel
+    bitwise: disagg outputs equal the static oracle's."""
+    cfg, params, kw = _family(family)
+    eng = DisaggEngine(cfg, params, prefill_pages=8, decode_pages=8,
+                       page_size=kw["page_size"], max_batch=4,
+                       max_len=kw["max_len"], decode_steps=4)
+    rids = [eng.submit(p, g) for p, g in zip(PROMPTS, GENS)]
+    outs = eng.run()
+    _check(outs, rids, _oracle(cfg, params, kw["max_len"]))
+    assert eng.handoffs == len(PROMPTS)
+    # every handoff moved at least the state slab's bytes
+    assert eng.handoff_bytes >= len(PROMPTS) * state_slab_bytes(cfg)
+    assert eng.prefill.pool.used_slabs == 0      # released after export
+    assert eng.decode.pool.used_slabs == 0       # freed at retirement
+
+
+def test_disagg_bounce_resume_stateful_exact():
+    """A decode-side bounce of a stateful request snapshots its slab;
+    the admitter resumes it bitwise and re-hands it off -- outputs stay
+    exact across the round trip."""
+    eng = DisaggEngine(RWKV, RWKV_PARAMS, prefill_pages=8, decode_pages=8,
+                       page_size=16, max_batch=4, max_len=48,
+                       decode_steps=1)
+    rids = [eng.submit(p, g) for p, g in zip(PROMPTS, GENS)]
+    bounced = False
+    steps = 0
+    while eng.has_work:
+        eng.step()
+        steps += 1
+        if not bounced:
+            run = [r for r in eng.decode.runner.running
+                   if r.status == RUNNING and not r.done]
+            if run:
+                eng.decode.runner.bounce(run[-1])
+                bounced = True
+        assert steps < 500
+    assert bounced and eng.decode.runner.bounce_count == 1
+    outs = {rid: req.output for rid, req in eng.finished.items()}
+    _check(outs, rids, _oracle(RWKV, RWKV_PARAMS, 48))
+
+
+def test_state_slab_bytes_model():
+    """Closed-form per-kind bytes: a pure-attention config has no slab
+    plane; a stateful pool's modeled bytes/step charges one slab read +
+    write per live request on top of its live KV pages."""
+    dense = get_config("qwen2-0.5b").reduced()
+    assert state_slab_bytes(dense) == 0
+    sb = state_slab_bytes(RWKV)
+    assert sb > 0
+    pool = PagedKVPool(RWKV, 0, 16, n_slabs=2)
+    assert pool.modeled_bytes_per_step([5]) == pytest.approx(2.0 * sb)
+    assert pool.modeled_bytes_per_step([5, 9]) == pytest.approx(4.0 * sb)
+    hyb = PagedKVPool(JAMBA, 4, 64, n_slabs=2)
+    hsb = state_slab_bytes(JAMBA)
+    kv_only = hyb.modeled_bytes_per_step([5]) - 2.0 * hsb
+    assert hsb > 0 and kv_only > 0               # both kinds charged
